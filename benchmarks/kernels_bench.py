@@ -1,0 +1,44 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs pure-jnp oracle.
+
+CPU-interpret timings are NOT TPU performance — they validate shapes and give
+the oracle-relative sanity curve.  TPU-targeted blocking is what matters
+(see kernels/*/ for BlockSpecs); roofline projections live in §Roofline.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.kernels.decode_attention.decode_attention import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.fragscore import ops as frag_ops
+from repro.kernels.fragscore.ref import fragscore_ref
+
+
+def main():
+    print("table,kernel,shape,us_pallas_interpret,us_ref")
+    rng = np.random.default_rng(0)
+
+    for m in (1024, 16384):
+        occ = jnp.asarray((rng.random((m, 8)) < 0.4).astype(np.float32))
+        us_k = time_fn(lambda: jax.block_until_ready(frag_ops.fragmentation_scores(occ)), iters=5)
+        refj = jax.jit(fragscore_ref)
+        us_r = time_fn(lambda: jax.block_until_ready(refj(occ)), iters=5)
+        print(f"kernels,fragscore,M={m},{us_k:.0f},{us_r:.0f}")
+
+    for (b, h, kv, d, s) in [(4, 8, 2, 64, 1024), (1, 16, 8, 128, 4096)]:
+        q = jnp.asarray(rng.standard_normal((b, h, d)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, s, kv, d)), jnp.float32)
+        ln = jnp.full((b,), s, jnp.int32)
+        us_k = time_fn(lambda: jax.block_until_ready(decode_attention(q, k, v, ln)), iters=3)
+        refj = jax.jit(lambda q, k, v, ln: decode_attention_ref(q, k, v, length=ln))
+        us_r = time_fn(lambda: jax.block_until_ready(refj(q, k, v, ln)), iters=3)
+        print(f"kernels,decode_attention,b{b}h{h}kv{kv}d{d}s{s},{us_k:.0f},{us_r:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Aggregate dry-run artifacts into the §Roofline table (reads
+experiments/dryrun/*.json produced by repro.launch.dryrun)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+
+def load(out_dir="experiments/dryrun"):
+    arts = []
+    for f in sorted(Path(out_dir).glob("*.json")):
+        arts.append(json.loads(f.read_text()))
+    return arts
+
+
+def main():
+    arts = load()
+    if not arts:
+        print("# no dry-run artifacts found — run: python -m repro.launch.dryrun --all")
+        return
+    print("table,arch,shape,mesh,compute_ms,memory_ms,collective_ms,bottleneck,"
+          "useful_ratio,mem_gib_per_chip")
+    for a in arts:
+        if a.get("tag"):
+            continue  # perf-iteration artifacts reported in §Perf
+        r = a["roofline"]
+        print(
+            f"roofline,{a['arch']},{a['shape']},{a['mesh']},"
+            f"{r['compute_s']*1e3:.2f},{r['memory_s']*1e3:.2f},"
+            f"{r['collective_s']*1e3:.2f},{r['bottleneck']},"
+            f"{r['useful_flops_ratio']:.3f},"
+            f"{a['memory']['total_bytes_per_chip']/2**30:.2f}"
+        )
+
+
+if __name__ == "__main__":
+    main()

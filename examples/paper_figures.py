@@ -1,0 +1,33 @@
+"""Reproduce all three paper evaluation figures with full Monte-Carlo runs.
+
+    PYTHONPATH=src:. python examples/paper_figures.py --runs 100
+
+(The paper uses 500 runs; 30-100 gives the same ordering with tight CIs.)
+"""
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", type=int, default=50)
+    args = ap.parse_args()
+
+    from benchmarks import fig4_load_sweep, fig5_distributions, fig6_fragscore
+
+    print("=" * 70)
+    print("Fig. 4 — load sweep, uniform distribution")
+    print("=" * 70)
+    fig4_load_sweep.main(runs=args.runs)
+    print("=" * 70)
+    print("Fig. 5 — four distributions at 85% load")
+    print("=" * 70)
+    fig5_distributions.main(runs=args.runs)
+    print("=" * 70)
+    print("Fig. 6 — fragmentation severity")
+    print("=" * 70)
+    fig6_fragscore.main(runs=args.runs)
+
+
+if __name__ == "__main__":
+    main()

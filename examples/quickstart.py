@@ -1,0 +1,47 @@
+"""Quickstart: the paper's core result in 30 seconds.
+
+Simulates a 50-GPU MIG cluster under heavy multi-tenant load and compares
+the paper's MFI scheduler against all four baselines on acceptance rate,
+allocated workloads and fragmentation severity.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import mig, fragmentation
+from repro.sim import SimConfig, run_many
+
+PID = {n: i for i, n in enumerate(mig.PROFILE_NAMES)}
+
+
+def worked_example():
+    """The paper's Fig. 3a fragmentation-score example, reproduced."""
+    g2 = mig.GPUState(2)
+    g2.allocate(1, PID["2g.20gb"], 0)
+    g2.allocate(2, PID["1g.10gb"], 5)
+    g1 = mig.GPUState(1)
+    g1.allocate(3, PID["2g.20gb"], 2)
+    f2 = fragmentation.fragmentation_score(g2, "partial")
+    f1 = fragmentation.fragmentation_score(g1, "partial")
+    print(f"paper worked example: F(GPU2) = {f2:.0f} (paper: 16), "
+          f"F(GPU1) = {f1:.0f} (paper: 8)")
+
+
+def main():
+    worked_example()
+    print("\nMonte-Carlo, 50 GPUs, uniform profiles, 85% offered load, 10 runs:")
+    print(f"{'scheduler':8s} {'accept':>7s} {'alloc':>6s} {'util':>6s} "
+          f"{'gpus':>5s} {'frag':>6s}")
+    cfg = SimConfig(num_gpus=50, distribution="uniform", offered_load=0.85, seed=0)
+    for name in ("ff", "rr", "bf-bi", "wf-bi", "mfi", "mfi-defrag"):
+        r = run_many(name, cfg, runs=10)
+        print(f"{name:8s} {r['acceptance_rate']:7.3f} {r['allocated_workloads']:6.0f} "
+              f"{r['utilization']:6.3f} {r['active_gpus']:5.1f} {r['frag_severity']:6.2f}")
+    print("\nMFI should have the best (or tied-best) acceptance and the lowest "
+          "fragmentation — the paper's headline claim.  mfi-defrag is this "
+          "repo's beyond-paper extension (single-migration defragmentation).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""END-TO-END DRIVER: multi-tenant serving with MIG admission control.
+
+A small llama-family model serves batched generation requests.  Each request
+is a tenant workload demanding a MIG profile (sampled from the paper's
+distributions); the MFI scheduler places it on a simulated A100 fleet, the
+engine runs real jitted prefill+decode steps, and completion frees the MIG
+slices.  Compares MFI admission against First-Fit on the same request stream.
+
+    PYTHONPATH=src python examples/serve_cluster.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import SMOKES
+from repro.core import mig
+from repro.models import model
+from repro.serving import Request, ServingEngine
+from repro.sim import distributions
+
+
+def make_requests(cfg, n, rng):
+    profiles = distributions.sample_profiles("bimodal", n, rng)
+    return [
+        Request(
+            request_id=i,
+            prompt=rng.integers(0, cfg.vocab, 32).astype(np.int32),
+            max_new_tokens=8,
+            profile=mig.PROFILE_NAMES[profiles[i]],
+        )
+        for i in range(n)
+    ]
+
+
+def main():
+    cfg = SMOKES["llama3.2-1b"]
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    print(f"model: {cfg.name} ({cfg.param_count()/1e6:.1f}M params), "
+          f"cluster: 3 GPUs, requests: 24 (bimodal MIG profiles)")
+
+    for policy in ("mfi", "ff"):
+        rng = np.random.default_rng(7)  # same stream for both policies
+        requests = make_requests(cfg, 24, rng)
+        engine = ServingEngine(
+            cfg, params, num_slots=4, max_len=48, num_gpus=3, policy=policy
+        )
+        t0 = time.time()
+        stats = engine.run(requests)
+        served = sum(r.admitted and r.finished for r in requests)
+        rejected = sum(r.rejected for r in requests)
+        toks = sum(len(r.output or []) for r in requests)
+        print(f"[{policy:5s}] served={served:2d} rejected={rejected:2d} "
+              f"acceptance={stats['acceptance_rate']:.2f} tokens={toks} "
+              f"({time.time()-t0:.1f}s)")
+
+    print("\nMFI should accept >= FF on the same stream (fewer fragmentation "
+          "rejections of large profiles).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Train a ~100M-parameter llama-family model for a few hundred steps on the
+synthetic Markov-chain corpus; loss must fall well below the unigram entropy.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import make_batch_iterator
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+CFG_100M = ModelConfig(
+    name="llama-100m", family="dense",
+    n_layers=8, d_model=512, n_heads=8, n_kv_heads=4, head_dim=64,
+    d_ff=2048, vocab=8192, mlp="swiglu", dtype="float32",
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    args = ap.parse_args()
+
+    cfg = CFG_100M
+    print(f"[train_lm] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{args.steps} steps @ batch {args.batch} × seq {args.seq}")
+
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params, cfg.opt_dtype)
+    data = make_batch_iterator(cfg, args.batch, args.seq, seed=0)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(lambda p: model.loss_fn(p, batch, cfg))(params)
+        lr = cosine_schedule(opt["step"], peak_lr=args.lr, warmup=20, total=args.steps)
+        params, opt = adamw_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    t0, losses = time.time(), []
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, opt, loss = step(params, opt, batch)
+        losses.append(float(loss))
+        if i % 20 == 0 or i == args.steps - 1:
+            print(f"  step {i:4d}  loss {losses[-1]:.4f}  "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+
+    # the order-2 Markov corpus has ~log(branching)=1.39 nats conditional
+    # entropy vs log(vocab)=9.0 for random guessing
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    print(f"[train_lm] loss {first:.3f} -> {last:.3f} "
+          f"(unigram entropy ≈ {np.log(cfg.vocab):.2f}, "
+          f"markov floor ≈ 1.39)")
+    assert last < first - 0.5, "model failed to learn"
+    print("[train_lm] OK — model is learning the synthetic grammar")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Flat-npz checkpointing for arbitrary param/opt pytrees.
+
+Leaves are stored under '/'-joined key paths; restore validates structure
+against a template pytree, so a checkpoint from a different architecture
+or stale config fails loudly instead of silently mis-loading.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_BF16 = jnp.bfloat16
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype == _BF16:  # npz has no bf16: store upcast, restore downcast
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save_checkpoint(path, tree, step: int = 0, metadata: Dict[str, Any] | None = None):
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+    meta = {"step": step, "keys": sorted(flat), **(metadata or {})}
+    path.with_suffix(".json").write_text(json.dumps(meta))
+
+
+def load_checkpoint(path, template) -> Tuple[Any, int]:
+    """Restore into the structure of ``template``; returns (tree, step)."""
+    path = Path(path)
+    data = np.load(path if path.suffix == ".npz" else path.with_suffix(".npz"))
+    meta = json.loads(path.with_suffix(".json").read_text())
+    flat_t = _flatten(template)
+    missing = set(flat_t) - set(data.files)
+    extra = set(data.files) - set(flat_t)
+    if missing or extra:
+        raise ValueError(f"checkpoint mismatch: missing={sorted(missing)[:5]} extra={sorted(extra)[:5]}")
+    leaves_with_path = jax.tree_util.tree_flatten_with_path(template)
+    restored = []
+    for path_keys, leaf in leaves_with_path[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_keys)
+        arr = data[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"shape mismatch at {key}: {arr.shape} vs {leaf.shape}")
+        restored.append(jnp.asarray(arr).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(leaves_with_path[1], restored), meta["step"]

@@ -1,0 +1,60 @@
+"""Architecture registry: 10 assigned architectures (+ variants)."""
+
+from repro.configs import (
+    gemma3_12b,
+    granite_moe_3b_a800m,
+    grok_1_314b,
+    hymba_1_5b,
+    llama3_2_1b,
+    mamba2_2_7b,
+    paligemma_3b,
+    qwen3_14b,
+    starcoder2_15b,
+    whisper_large_v3,
+)
+
+ARCHS = {
+    "qwen3-14b": qwen3_14b.CONFIG,
+    "paligemma-3b": paligemma_3b.CONFIG,
+    "grok-1-314b": grok_1_314b.CONFIG,
+    "llama3.2-1b": llama3_2_1b.CONFIG,
+    "llama3.2-1b-sw": llama3_2_1b.CONFIG_SW,  # beyond-paper sliding-window variant
+    "whisper-large-v3": whisper_large_v3.CONFIG,
+    "mamba2-2.7b": mamba2_2_7b.CONFIG,
+    "gemma3-12b": gemma3_12b.CONFIG,
+    "starcoder2-15b": starcoder2_15b.CONFIG,
+    "hymba-1.5b": hymba_1_5b.CONFIG,
+    "granite-moe-3b-a800m": granite_moe_3b_a800m.CONFIG,
+}
+
+# the 10 officially assigned ids (excludes local variants)
+ASSIGNED = [
+    "qwen3-14b", "paligemma-3b", "grok-1-314b", "llama3.2-1b",
+    "whisper-large-v3", "mamba2-2.7b", "gemma3-12b", "starcoder2-15b",
+    "hymba-1.5b", "granite-moe-3b-a800m",
+]
+
+SMOKES = {
+    "qwen3-14b": qwen3_14b.SMOKE,
+    "paligemma-3b": paligemma_3b.SMOKE,
+    "grok-1-314b": grok_1_314b.SMOKE,
+    "llama3.2-1b": llama3_2_1b.SMOKE,
+    "llama3.2-1b-sw": llama3_2_1b.SMOKE,
+    "whisper-large-v3": whisper_large_v3.SMOKE,
+    "mamba2-2.7b": mamba2_2_7b.SMOKE,
+    "gemma3-12b": gemma3_12b.SMOKE,
+    "starcoder2-15b": starcoder2_15b.SMOKE,
+    "hymba-1.5b": hymba_1_5b.SMOKE,
+    "granite-moe-3b-a800m": granite_moe_3b_a800m.SMOKE,
+}
+
+# archs with sub-quadratic attention, eligible for the long_500k shape
+# (DESIGN.md: pure full-attention archs skip long_500k)
+LONG_CONTEXT_OK = {"mamba2-2.7b", "hymba-1.5b", "gemma3-12b", "llama3.2-1b-sw"}
+
+
+def get_config(arch: str):
+    try:
+        return ARCHS[arch]
+    except KeyError:
+        raise ValueError(f"unknown arch {arch!r}; options: {sorted(ARCHS)}")

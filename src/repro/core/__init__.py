@@ -1,0 +1,30 @@
+"""Paper core: MIG model, fragmentation metric (Alg. 1), MFI scheduler (Alg. 2)."""
+
+from repro.core.mig import (  # noqa: F401
+    NUM_MEM_SLICES,
+    NUM_PROFILES,
+    NUM_SM_SLICES,
+    PROFILE_BY_NAME,
+    PROFILE_NAMES,
+    PROFILES,
+    ClusterState,
+    GPUState,
+    MIGProfile,
+)
+from repro.core.fragmentation import (  # noqa: F401
+    cluster_fragmentation,
+    delta_f,
+    fragmentation_score,
+    fragmentation_scores,
+)
+from repro.core.schedulers import (  # noqa: F401
+    MFI,
+    SCHEDULERS,
+    BestFitBestIndex,
+    FirstFit,
+    RoundRobin,
+    Scheduler,
+    WorstFitBestIndex,
+    make_scheduler,
+    mfi_candidates,
+)

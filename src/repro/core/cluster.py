@@ -1,0 +1,136 @@
+"""Vectorized, jittable cluster scheduling in JAX.
+
+The paper's Algorithms 1/2 are per-GPU python loops.  On TPU we recast them
+as batched bitmask algebra (DESIGN.md §5): cluster occupancy ``X (M, 8)``
+against the constant placement-window matrix ``Wᵀ (8, 18)``, partial-window
+predicate and weighted reduction — one fused launch per scheduling decision.
+
+Everything here is pure ``jnp`` and jit-compatible with a *traced* profile
+id, which lets the serving engine batch scheduling decisions.  The Pallas
+kernels in :mod:`repro.kernels.fragscore` / :mod:`repro.kernels.mfi_select`
+implement the same math with explicit VMEM tiling; this module doubles as
+their oracle at cluster scale.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mig
+
+MAX_ANCHORS = max(p.num_placements for p in mig.PROFILES)  # 7
+
+
+def _np_profile_tables() -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-profile padded anchor tables.
+
+    Returns:
+      masks:   (P, A_max, 8) int32 — placement window bitmask (0 where padded)
+      anchors: (P, A_max)    int32 — anchor index (-1 where padded)
+      valid:   (P, A_max)    bool  — anchor validity
+    """
+    P = mig.NUM_PROFILES
+    masks = np.zeros((P, MAX_ANCHORS, mig.NUM_MEM_SLICES), dtype=np.int32)
+    anchors = np.full((P, MAX_ANCHORS), -1, dtype=np.int32)
+    valid = np.zeros((P, MAX_ANCHORS), dtype=bool)
+    for pid, prof in enumerate(mig.PROFILES):
+        for j, a in enumerate(prof.anchors):
+            masks[pid, j, a : a + prof.mem] = 1
+            anchors[pid, j] = a
+            valid[pid, j] = True
+    return masks, anchors, valid
+
+
+_PROFILE_MASKS_NP, _PROFILE_ANCHORS_NP, _PROFILE_VALID_NP = _np_profile_tables()
+
+# Constant tables (host numpy; closed over by jitted fns as literals).
+PLACEMENT_MASKS = jnp.asarray(mig.PLACEMENT_MASKS, dtype=jnp.float32)  # (18, 8)
+PLACEMENT_MEM = jnp.asarray(mig.PLACEMENT_MEM, dtype=jnp.float32)  # (18,)
+PROFILE_MASKS = jnp.asarray(_PROFILE_MASKS_NP)  # (P, 7, 8)
+PROFILE_ANCHORS = jnp.asarray(_PROFILE_ANCHORS_NP)  # (P, 7)
+PROFILE_VALID = jnp.asarray(_PROFILE_VALID_NP)  # (P, 7)
+PROFILE_MEM = jnp.asarray(mig.PROFILE_MEM)  # (P,)
+
+
+def frag_scores(occ: jax.Array, metric: str = "blocked") -> jax.Array:
+    """F(m) for every GPU.  occ: (M, 8) int — returns (M,) float32."""
+    occf = occ.astype(jnp.float32)
+    occ_in_window = occf @ PLACEMENT_MASKS.T  # (M, 18)
+    size = PLACEMENT_MEM[None, :]
+    if metric == "blocked":
+        counted = occ_in_window > 0
+    elif metric == "partial":
+        counted = (occ_in_window > 0) & (occ_in_window < size)
+    else:
+        raise ValueError(f"unknown metric {metric!r}")
+    free = mig.NUM_MEM_SLICES - occf.sum(axis=1, keepdims=True)  # (M, 1)
+    eligible = size <= free
+    return jnp.sum(jnp.where(counted & eligible, size, 0.0), axis=1)
+
+
+class MFIDecision(NamedTuple):
+    gpu: jax.Array      # int32, -1 when rejected
+    anchor: jax.Array   # int32, -1 when rejected
+    accepted: jax.Array  # bool
+    delta_f: jax.Array  # float32 ΔF of the chosen placement (0 when rejected)
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def mfi_select(occ: jax.Array, profile_id: jax.Array, metric: str = "blocked") -> MFIDecision:
+    """Algorithm 2's argmin over all feasible (GPU, anchor) dry-runs.
+
+    Args:
+      occ: (M, 8) int32 cluster occupancy.
+      profile_id: scalar int32 (traced — one jit serves all profiles).
+    """
+    masks = PROFILE_MASKS[profile_id]  # (A, 8) int32
+    valid = PROFILE_VALID[profile_id]  # (A,)
+    anchors = PROFILE_ANCHORS[profile_id]  # (A,)
+
+    occf = occ.astype(jnp.float32)
+    overlap = occf @ masks.T.astype(jnp.float32)  # (M, A)
+    feasible = (overlap == 0) & valid[None, :]
+
+    f_before = frag_scores(occ, metric)  # (M,)
+    hypo = jnp.minimum(occ[:, None, :] + masks[None, :, :], 1)  # (M, A, 8)
+    f_after = frag_scores(
+        hypo.reshape(-1, mig.NUM_MEM_SLICES), metric
+    ).reshape(occ.shape[0], -1)  # (M, A)
+    delta = f_after - f_before[:, None]
+
+    big = jnp.float32(1e9)
+    scored = jnp.where(feasible, delta, big)
+    flat = scored.reshape(-1)
+    k = jnp.argmin(flat)  # first occurrence == (gpu, anchor) lexicographic tie-break
+    accepted = flat[k] < big
+    gpu = jnp.where(accepted, k // scored.shape[1], -1).astype(jnp.int32)
+    aidx = k % scored.shape[1]
+    anchor = jnp.where(accepted, anchors[aidx], -1).astype(jnp.int32)
+    return MFIDecision(gpu, anchor, accepted, jnp.where(accepted, flat[k], 0.0))
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def mfi_allocate(
+    occ: jax.Array, profile_id: jax.Array, metric: str = "blocked"
+) -> Tuple[jax.Array, MFIDecision]:
+    """Select AND commit: returns (new_occ, decision).  Pure/jittable."""
+    d = mfi_select(occ, profile_id, metric)
+    masks = PROFILE_MASKS[profile_id]  # (A, 8)
+    aidx = jnp.argmax(PROFILE_ANCHORS[profile_id] == d.anchor)
+    mask = masks[aidx] * d.accepted.astype(jnp.int32)  # zero mask when rejected
+    row = jnp.where(d.accepted, d.gpu, 0)
+    new_occ = occ.at[row].set(jnp.minimum(occ[row] + mask, 1))
+    return new_occ, d
+
+
+@jax.jit
+def release(occ: jax.Array, gpu: jax.Array, profile_id: jax.Array, anchor: jax.Array) -> jax.Array:
+    """Free a previously committed placement (jittable)."""
+    aidx = jnp.argmax(PROFILE_ANCHORS[profile_id] == anchor)
+    mask = PROFILE_MASKS[profile_id][aidx]
+    return occ.at[gpu].set(jnp.maximum(occ[gpu] - mask, 0))

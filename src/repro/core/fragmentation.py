@@ -1,0 +1,110 @@
+"""Algorithm 1 — the MIG fragmentation score.
+
+Two variants are provided (see DESIGN.md §1.1):
+
+* ``"blocked"`` (default — Algorithm 1 exactly as written): a placement
+  window contributes when any of its slices is occupied
+  (``sum_{i in window} x_{m,i} > 0``).  Together with Table I's literal
+  slice counts (7g.80gb -> 7) this reproduces the paper's *relative results*
+  (MFI best on acceptance/allocated/fragmentation).
+* ``"partial"``: a window contributes only when it contains at least one
+  occupied AND at least one free slice — i.e. its free slices are wasted by
+  co-occupancy.  This is the only reading that reproduces the paper's worked
+  example arithmetic (F(GPU2)=16=2+2+8+4, F(GPU1)=8), but it empirically
+  *underperforms* the blocked variant as an MFI driver (see EXPERIMENTS.md
+  §Paper/MetricVariants).
+
+Both variants only consider profiles that could still fit by raw free-slice
+count (``mem(p) <= free_slices``) — the paper's eligibility condition
+``r_w(p) <= ΔS_m`` — and weight each counted window by the profile's
+memory-slice count ``r^mem``.
+"""
+
+from __future__ import annotations
+
+from typing import Union
+
+import numpy as np
+
+from repro.core import mig
+
+METRIC_VARIANTS = ("blocked", "partial")
+
+
+def _validate_metric(metric: str) -> None:
+    if metric not in METRIC_VARIANTS:
+        raise ValueError(f"metric must be one of {METRIC_VARIANTS}, got {metric!r}")
+
+
+def fragmentation_score(
+    occupancy: Union[np.ndarray, "mig.GPUState"],
+    metric: str = "blocked",
+) -> float:
+    """Fragmentation score F(m) of a single GPU (Algorithm 1)."""
+    if isinstance(occupancy, mig.GPUState):
+        occupancy = occupancy.occupancy
+    return float(
+        fragmentation_scores(occupancy[None, :].astype(np.int32), metric)[0]
+    )
+
+
+def fragmentation_scores(occupancy: np.ndarray, metric: str = "blocked") -> np.ndarray:
+    """Vectorized F(m) over a cluster occupancy matrix.
+
+    Args:
+      occupancy: (M, 8) 0/1 int array.
+      metric: "blocked" (Algorithm-1-literal, default) or "partial" (worked-example).
+
+    Returns:
+      (M,) float64 fragmentation scores.
+    """
+    _validate_metric(metric)
+    occ = np.asarray(occupancy, dtype=np.int32)
+    if occ.ndim != 2 or occ.shape[1] != mig.NUM_MEM_SLICES:
+        raise ValueError(f"occupancy must be (M, {mig.NUM_MEM_SLICES}), got {occ.shape}")
+
+    # occupied-slice count inside each placement window: (M, NUM_PLACEMENTS)
+    occ_in_window = occ @ mig.PLACEMENT_MASKS.T
+    window_size = mig.PLACEMENT_MEM[None, :]
+
+    if metric == "partial":
+        counted = (occ_in_window > 0) & (occ_in_window < window_size)
+    else:  # blocked
+        counted = occ_in_window > 0
+
+    # eligibility: profile must still fit by raw free-slice count
+    free = mig.NUM_MEM_SLICES - occ.sum(axis=1, keepdims=True)  # (M, 1)
+    eligible = mig.PLACEMENT_MEM[None, :] <= free  # (M, NUM_PLACEMENTS)
+
+    weights = mig.PLACEMENT_MEM[None, :].astype(np.float64)
+    return ((counted & eligible) * weights).sum(axis=1)
+
+
+def cluster_fragmentation(occupancy: np.ndarray, metric: str = "blocked") -> float:
+    """Average fragmentation score across the cluster (paper's severity metric)."""
+    return float(fragmentation_scores(occupancy, metric).mean())
+
+
+def delta_f(
+    occupancy: np.ndarray,
+    profile_id: int,
+    anchor: int,
+    metric: str = "blocked",
+) -> float:
+    """ΔF of hypothetically placing ``profile_id``@``anchor`` on one GPU.
+
+    Args:
+      occupancy: (8,) occupancy of a single GPU; the placement must be feasible.
+    """
+    occ = np.asarray(occupancy, dtype=np.int32)
+    prof = mig.PROFILES[profile_id]
+    if anchor not in prof.anchors:
+        raise ValueError(f"anchor {anchor} illegal for {prof.name}")
+    window = occ[anchor : anchor + prof.mem]
+    if window.any():
+        raise ValueError("infeasible dry-run placement")
+    before = fragmentation_score(occ, metric)
+    hypo = occ.copy()
+    hypo[anchor : anchor + prof.mem] = 1
+    after = fragmentation_score(hypo, metric)
+    return after - before

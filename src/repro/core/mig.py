@@ -1,0 +1,216 @@
+"""MIG hardware model: profiles, placement indexes, GPU and cluster state.
+
+Models an A100-80GB-style GPU as 8 memory slices (the unit of occupancy) and
+7 SM slices (tracked for the utilization metric).  Placement legality follows
+NVIDIA's placement-index table (paper Table I): a profile anchored at memory
+slice ``i`` occupies the contiguous memory-slice window ``[i, i + mem - 1]``.
+
+The module is pure-python/numpy (the reference control plane); the vectorized
+JAX cluster lives in :mod:`repro.core.cluster` and the Pallas kernels in
+:mod:`repro.kernels`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+NUM_MEM_SLICES = 8
+NUM_SM_SLICES = 7
+
+
+@dataclasses.dataclass(frozen=True)
+class MIGProfile:
+    """A MIG profile (e.g. ``2g.20gb``): compute + memory slice demand."""
+
+    name: str
+    compute: int  # SM slices (utilization accounting)
+    mem: int      # memory slices (occupancy unit)
+    anchors: Tuple[int, ...]  # legal placement start indexes (Table I)
+
+    @property
+    def num_placements(self) -> int:
+        return len(self.anchors)
+
+
+# Paper Table I (A100-80GB).  7g.80gb has slice count 7 exactly as the paper
+# prints: its window is {0..6}; memory slice 7 is unreachable by any other
+# profile once 7g is placed (no legal anchor covers it), so mem=7 is
+# behaviourally equivalent for allocation while keeping 7g *eligible* in the
+# fragmentation score of a GPU with exactly one occupied slice -- this is the
+# empty-GPU defence term (see DESIGN.md §1.2 and EXPERIMENTS.md).
+PROFILES: Tuple[MIGProfile, ...] = (
+    MIGProfile("7g.80gb", compute=7, mem=7, anchors=(0,)),
+    MIGProfile("4g.40gb", compute=4, mem=4, anchors=(0,)),
+    MIGProfile("3g.40gb", compute=3, mem=4, anchors=(0, 4)),
+    MIGProfile("2g.20gb", compute=2, mem=2, anchors=(0, 2, 4)),
+    MIGProfile("1g.20gb", compute=1, mem=2, anchors=(0, 2, 4, 6)),
+    MIGProfile("1g.10gb", compute=1, mem=1, anchors=(0, 1, 2, 3, 4, 5, 6)),
+)
+
+PROFILE_BY_NAME: Dict[str, MIGProfile] = {p.name: p for p in PROFILES}
+PROFILE_NAMES: Tuple[str, ...] = tuple(p.name for p in PROFILES)
+NUM_PROFILES = len(PROFILES)
+
+# ---------------------------------------------------------------------------
+# Flattened placement table: every legal (profile, anchor) pair is one row.
+# ---------------------------------------------------------------------------
+
+
+def _build_placements():
+    rows = []
+    for pid, prof in enumerate(PROFILES):
+        for anchor in prof.anchors:
+            mask = np.zeros(NUM_MEM_SLICES, dtype=np.int32)
+            mask[anchor : anchor + prof.mem] = 1
+            rows.append((pid, anchor, mask))
+    pids = np.array([r[0] for r in rows], dtype=np.int32)
+    anchors = np.array([r[1] for r in rows], dtype=np.int32)
+    masks = np.stack([r[2] for r in rows])  # (NUM_PLACEMENTS, 8)
+    return pids, anchors, masks
+
+
+PLACEMENT_PROFILE_ID, PLACEMENT_ANCHOR, PLACEMENT_MASKS = _build_placements()
+NUM_PLACEMENTS = PLACEMENT_MASKS.shape[0]  # 18 for the A100 table
+PLACEMENT_MEM = np.array(
+    [PROFILES[pid].mem for pid in PLACEMENT_PROFILE_ID], dtype=np.int32
+)
+PROFILE_MEM = np.array([p.mem for p in PROFILES], dtype=np.int32)
+PROFILE_COMPUTE = np.array([p.compute for p in PROFILES], dtype=np.int32)
+
+# slice-offset ranges of each profile inside the flattened placement table
+_PROFILE_PLACEMENT_SLICES: List[slice] = []
+_off = 0
+for _p in PROFILES:
+    _PROFILE_PLACEMENT_SLICES.append(slice(_off, _off + _p.num_placements))
+    _off += _p.num_placements
+
+
+def profile_placement_rows(pid: int) -> slice:
+    """Rows of the placement table belonging to profile ``pid``."""
+    return _PROFILE_PLACEMENT_SLICES[pid]
+
+
+# ---------------------------------------------------------------------------
+# GPU state
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Allocation:
+    """A committed placement of a workload on a GPU."""
+
+    workload_id: int
+    profile_id: int
+    anchor: int
+
+
+class GPUState:
+    """Occupancy state of one MIG-capable GPU."""
+
+    def __init__(self, gpu_id: int = 0):
+        self.gpu_id = gpu_id
+        self.occupancy = np.zeros(NUM_MEM_SLICES, dtype=np.int32)
+        self.allocations: Dict[int, Allocation] = {}
+
+    # -- queries ------------------------------------------------------------
+    @property
+    def free_slices(self) -> int:
+        return int(NUM_MEM_SLICES - self.occupancy.sum())
+
+    @property
+    def used_mem_slices(self) -> int:
+        return int(self.occupancy.sum())
+
+    @property
+    def used_compute_slices(self) -> int:
+        return int(
+            sum(PROFILES[a.profile_id].compute for a in self.allocations.values())
+        )
+
+    @property
+    def is_active(self) -> bool:
+        return bool(self.allocations)
+
+    def feasible_anchors(self, profile_id: int) -> List[int]:
+        """Anchors where ``profile_id`` can be placed right now."""
+        prof = PROFILES[profile_id]
+        out = []
+        for anchor in prof.anchors:
+            if not self.occupancy[anchor : anchor + prof.mem].any():
+                out.append(anchor)
+        return out
+
+    def can_fit(self, profile_id: int) -> bool:
+        return bool(self.feasible_anchors(profile_id))
+
+    # -- mutation -----------------------------------------------------------
+    def allocate(self, workload_id: int, profile_id: int, anchor: int) -> None:
+        prof = PROFILES[profile_id]
+        window = self.occupancy[anchor : anchor + prof.mem]
+        if anchor not in prof.anchors:
+            raise ValueError(
+                f"anchor {anchor} illegal for profile {prof.name} "
+                f"(legal: {prof.anchors})"
+            )
+        if window.any():
+            raise ValueError(
+                f"profile {prof.name}@{anchor} overlaps occupied slices on "
+                f"GPU {self.gpu_id}"
+            )
+        window[:] = 1
+        self.allocations[workload_id] = Allocation(workload_id, profile_id, anchor)
+
+    def release(self, workload_id: int) -> None:
+        alloc = self.allocations.pop(workload_id)
+        prof = PROFILES[alloc.profile_id]
+        self.occupancy[alloc.anchor : alloc.anchor + prof.mem] = 0
+
+
+class ClusterState:
+    """A homogeneous MIG GPU cluster."""
+
+    def __init__(self, num_gpus: int):
+        self.gpus = [GPUState(i) for i in range(num_gpus)]
+        self._placement_of: Dict[int, int] = {}  # workload_id -> gpu_id
+
+    def __len__(self) -> int:
+        return len(self.gpus)
+
+    @property
+    def num_gpus(self) -> int:
+        return len(self.gpus)
+
+    def occupancy_matrix(self) -> np.ndarray:
+        """(M, 8) int32 occupancy bitmap of the whole cluster."""
+        return np.stack([g.occupancy for g in self.gpus])
+
+    def allocate(self, workload_id: int, profile_id: int, gpu_id: int, anchor: int):
+        self.gpus[gpu_id].allocate(workload_id, profile_id, anchor)
+        self._placement_of[workload_id] = gpu_id
+
+    def release(self, workload_id: int) -> None:
+        gpu_id = self._placement_of.pop(workload_id)
+        self.gpus[gpu_id].release(workload_id)
+
+    def gpu_of(self, workload_id: int) -> Optional[int]:
+        return self._placement_of.get(workload_id)
+
+    # -- metrics ------------------------------------------------------------
+    @property
+    def active_gpus(self) -> int:
+        return sum(g.is_active for g in self.gpus)
+
+    @property
+    def used_mem_slices(self) -> int:
+        return sum(g.used_mem_slices for g in self.gpus)
+
+    @property
+    def used_compute_slices(self) -> int:
+        return sum(g.used_compute_slices for g in self.gpus)
+
+    @property
+    def total_mem_slices(self) -> int:
+        return NUM_MEM_SLICES * self.num_gpus

@@ -1,0 +1,252 @@
+"""Scheduling policies: MFI (Algorithm 2) and the paper's four baselines.
+
+All schedulers implement ``select(cluster, profile_id) -> (gpu_id, anchor)``
+or ``None`` (reject).  They never mutate the cluster; the caller commits.
+
+Anchor-selection policies (paper §VI):
+  * MIG-agnostic (FF, RR): "first available index" — ascending anchors.
+  * MIG-aware "Best Index" (BF-BI, WF-BI), after [Turkkan et al. 2024]:
+    prefer indexes that do not restrict profiles with fewer placement
+    options — e.g. 1g.10gb goes to index 6 rather than 0, reserving the
+    {0..3} window for 4g.40gb.  Implemented as descending anchor order,
+    which reproduces the paper's example preference.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import fragmentation, mig
+
+Placement = Tuple[int, int]  # (gpu_id, anchor)
+
+
+class Scheduler:
+    """Base class. Subclasses implement ``select``."""
+
+    name: str = "base"
+
+    def __init__(self, metric: str = "blocked"):
+        self.metric = metric
+
+    def select(self, cluster: mig.ClusterState, profile_id: int) -> Optional[Placement]:
+        raise NotImplementedError
+
+    def reset(self) -> None:  # for stateful schedulers (RR)
+        pass
+
+
+def _first_anchor(gpu: mig.GPUState, profile_id: int, best_index: bool) -> Optional[int]:
+    anchors = gpu.feasible_anchors(profile_id)
+    if not anchors:
+        return None
+    return max(anchors) if best_index else min(anchors)
+
+
+class FirstFit(Scheduler):
+    """MIG-agnostic: first GPU with enough resources, first available index."""
+
+    name = "ff"
+
+    def select(self, cluster, profile_id):
+        for gpu in cluster.gpus:
+            anchor = _first_anchor(gpu, profile_id, best_index=False)
+            if anchor is not None:
+                return (gpu.gpu_id, anchor)
+        return None
+
+
+class RoundRobin(Scheduler):
+    """MIG-agnostic: sequentially distribute over GPUs, first available index."""
+
+    name = "rr"
+
+    def __init__(self, metric: str = "blocked"):
+        super().__init__(metric)
+        self._next = 0
+
+    def reset(self):
+        self._next = 0
+
+    def select(self, cluster, profile_id):
+        n = cluster.num_gpus
+        for k in range(n):
+            gpu = cluster.gpus[(self._next + k) % n]
+            anchor = _first_anchor(gpu, profile_id, best_index=False)
+            if anchor is not None:
+                self._next = (gpu.gpu_id + 1) % n
+                return (gpu.gpu_id, anchor)
+        return None
+
+
+class BestFitBestIndex(Scheduler):
+    """MIG-aware bin packing: GPU minimizing post-allocation free slices."""
+
+    name = "bf-bi"
+
+    def select(self, cluster, profile_id):
+        best: Optional[Tuple[int, int, int]] = None  # (free_after, gpu_id, anchor)
+        mem = mig.PROFILES[profile_id].mem
+        for gpu in cluster.gpus:
+            anchor = _first_anchor(gpu, profile_id, best_index=True)
+            if anchor is None:
+                continue
+            key = (gpu.free_slices - mem, gpu.gpu_id)
+            if best is None or key < best[:2]:
+                best = (key[0], key[1], anchor)
+        return None if best is None else (best[1], best[2])
+
+
+class WorstFitBestIndex(Scheduler):
+    """MIG-aware load balancing: GPU maximizing post-allocation free slices."""
+
+    name = "wf-bi"
+
+    def select(self, cluster, profile_id):
+        best: Optional[Tuple[int, int, int]] = None  # (-free_after, gpu_id, anchor)
+        mem = mig.PROFILES[profile_id].mem
+        for gpu in cluster.gpus:
+            anchor = _first_anchor(gpu, profile_id, best_index=True)
+            if anchor is None:
+                continue
+            key = (-(gpu.free_slices - mem), gpu.gpu_id)
+            if best is None or key < best[:2]:
+                best = (key[0], key[1], anchor)
+        return None if best is None else (best[1], best[2])
+
+
+class MFI(Scheduler):
+    """Minimum Fragmentation Increment (paper Algorithm 2).
+
+    Greedy: dry-run the requested profile at every feasible (GPU, anchor)
+    and commit the placement with the minimum fragmentation-score increment
+    ΔF = F⁽ⁱ⁾(m) − F(m).  Ties broken by (gpu_id, anchor) for determinism.
+    """
+
+    name = "mfi"
+
+    def select(self, cluster, profile_id):
+        occ = cluster.occupancy_matrix()  # (M, 8)
+        gpu_ids, anchors, deltas = mfi_candidates(occ, profile_id, self.metric)
+        if len(gpu_ids) == 0:
+            return None
+        k = int(np.lexsort((anchors, gpu_ids, deltas))[0])
+        return (int(gpu_ids[k]), int(anchors[k]))
+
+
+def mfi_candidates(
+    occupancy: np.ndarray, profile_id: int, metric: str = "blocked"
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized MFI inner loop (numpy reference for the Pallas kernel).
+
+    Returns (gpu_ids, anchors, delta_f) arrays over all *feasible* dry-run
+    placements of ``profile_id`` across the cluster.
+    """
+    occ = np.asarray(occupancy, dtype=np.int32)
+    m = occ.shape[0]
+    prof = mig.PROFILES[profile_id]
+    rows = mig.profile_placement_rows(profile_id)
+    masks = mig.PLACEMENT_MASKS[rows]  # (A, 8)
+    anchors = mig.PLACEMENT_ANCHOR[rows]  # (A,)
+    a = masks.shape[0]
+
+    # feasibility: window fully free
+    overlap = occ @ masks.T  # (M, A)
+    feasible = overlap == 0
+
+    if not feasible.any():
+        empty = np.empty(0, dtype=np.int64)
+        return empty, empty, np.empty(0)
+
+    f_before = fragmentation.fragmentation_scores(occ, metric)  # (M,)
+    # hypothetical occupancy for every (gpu, anchor): (M, A, 8)
+    hypo = np.minimum(occ[:, None, :] + masks[None, :, :], 1)
+    f_after = fragmentation.fragmentation_scores(
+        hypo.reshape(m * a, mig.NUM_MEM_SLICES), metric
+    ).reshape(m, a)
+    delta = f_after - f_before[:, None]
+
+    gpu_idx, anchor_idx = np.nonzero(feasible)
+    return gpu_idx, anchors[anchor_idx], delta[gpu_idx, anchor_idx]
+
+
+class MFIDefrag(MFI):
+    """BEYOND-PAPER extension: MFI + opportunistic single-migration defrag.
+
+    The paper excludes rescheduling ("we are going to consider rescheduling
+    in a future work").  This variant keeps the no-disruption spirit almost
+    intact: only when a request would be REJECTED does it search for ONE
+    running workload whose migration (to an MFI-chosen new placement) makes
+    the request feasible, choosing the migration that minimises the final
+    cluster fragmentation sum.  The caller performs the migration via the
+    ``pending_migration`` attribute ((workload_id, gpu, anchor) or None).
+    """
+
+    name = "mfi-defrag"
+
+    def __init__(self, metric: str = "blocked", max_candidates: int = 64):
+        super().__init__(metric)
+        self.max_candidates = max_candidates
+        self.pending_migration = None
+        self.migrations = 0
+
+    def select(self, cluster, profile_id):
+        self.pending_migration = None
+        sel = super().select(cluster, profile_id)
+        if sel is not None:
+            return sel
+
+        # rejected: try single-workload migration
+        best = None  # (total_F, victim_id, victim_new, request_placement)
+        tried = 0
+        for gpu in cluster.gpus:
+            for wid, alloc in list(gpu.allocations.items()):
+                if tried >= self.max_candidates:
+                    break
+                tried += 1
+                prof = mig.PROFILES[alloc.profile_id]
+                # hypothetically remove the victim
+                gpu.occupancy[alloc.anchor : alloc.anchor + prof.mem] = 0
+                req_sel = super().select(cluster, profile_id)
+                if req_sel is not None:
+                    rg, ra = req_sel
+                    rp = mig.PROFILES[profile_id]
+                    cluster.gpus[rg].occupancy[ra : ra + rp.mem] = 1
+                    new_sel = super().select(cluster, alloc.profile_id)
+                    if new_sel is not None:
+                        ng, na = new_sel
+                        occ = cluster.occupancy_matrix().copy()
+                        occ[ng, na : na + prof.mem] = 1
+                        total = fragmentation.fragmentation_scores(occ, self.metric).sum()
+                        cand = (total, wid, (ng, na), req_sel)
+                        if best is None or cand[0] < best[0]:
+                            best = cand
+                    cluster.gpus[rg].occupancy[ra : ra + rp.mem] = 0
+                # restore victim
+                gpu.occupancy[alloc.anchor : alloc.anchor + prof.mem] = 1
+        if best is None:
+            return None
+        _, wid, new_place, req_sel = best
+        self.pending_migration = (wid, *new_place)
+        self.migrations += 1
+        return req_sel
+
+
+SCHEDULERS: Dict[str, type] = {
+    "ff": FirstFit,
+    "rr": RoundRobin,
+    "bf-bi": BestFitBestIndex,
+    "wf-bi": WorstFitBestIndex,
+    "mfi": MFI,
+    "mfi-defrag": MFIDefrag,
+}
+
+
+def make_scheduler(name: str, metric: str = "blocked") -> Scheduler:
+    try:
+        cls = SCHEDULERS[name]
+    except KeyError:
+        raise ValueError(f"unknown scheduler {name!r}; options: {sorted(SCHEDULERS)}")
+    return cls(metric=metric)

@@ -1,0 +1,3 @@
+"""Deterministic synthetic data pipeline."""
+
+from repro.data.synthetic import SyntheticLM, make_batch_iterator  # noqa: F401

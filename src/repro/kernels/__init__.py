@@ -1,0 +1,9 @@
+"""Pallas TPU kernels (validated on CPU with interpret=True).
+
+* ``fragscore``       -- batched fragmentation scoring (paper Algorithm 1)
+* ``fragscore.mfi_delta`` -- fused MFI dry-run delta-F table (paper Algorithm 2)
+* ``decode_attention`` -- GQA flash-decode over a KV cache (serving hot path)
+
+Each kernel ships ``ops.py`` (jit'd public wrapper) and ``ref.py``
+(pure-jnp oracle); tests sweep shapes/dtypes against the oracle.
+"""

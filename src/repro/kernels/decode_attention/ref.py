@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for GQA flash-decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jax.Array,  # (B, H, D)
+    k: jax.Array,  # (B, S, K, D)
+    v: jax.Array,  # (B, S, K, D)
+    *,
+    scale: float | None = None,
+    length: jax.Array | None = None,  # (B,) valid KV length per batch row
+) -> jax.Array:
+    """Single-token decode attention with a GQA KV cache.
+
+    Returns (B, H, D) in the dtype of q.
+    """
+    b, h, d = q.shape
+    s, kheads = k.shape[1], k.shape[2]
+    assert h % kheads == 0
+    g = h // kheads
+    if scale is None:
+        scale = d ** -0.5
+
+    qf = q.astype(jnp.float32).reshape(b, kheads, g, d)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    # logits: (B, K, G, S)
+    logits = jnp.einsum("bkgd,bskd->bkgs", qf, kf) * scale
+    if length is not None:
+        mask = jnp.arange(s)[None, :] < length[:, None]  # (B, S)
+        logits = jnp.where(mask[:, None, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, vf)
+    return out.reshape(b, h, d).astype(q.dtype)

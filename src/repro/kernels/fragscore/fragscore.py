@@ -1,0 +1,147 @@
+"""Pallas TPU kernel for batched MIG fragmentation scoring (paper Alg. 1).
+
+TPU adaptation (DESIGN.md §5): the per-GPU python loop becomes bitmask
+algebra — an (BLK_M, 8) occupancy slab in VMEM against the constant
+placement-window matrix Wᵀ (8, 18), one small matmul per block plus VPU
+predicates.  Cloud-scale schedulers score 10⁴–10⁶ GPUs per decision batch;
+the M axis is tiled in BLK_M-row slabs.
+
+Weights/constants are passed as operands (broadcast BlockSpec) so the same
+compiled kernel serves any placement table (e.g. other GPU models).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NUM_SLICES = 8
+BLK_M = 512  # GPUs per VMEM slab (512×8 f32 = 16 KiB)
+
+
+def _score_block(occ, w, v, metric: str):
+    """Score a (blk, 8) occupancy slab.  occ f32, w (18,8) f32, v (18,) f32."""
+    inwin = jnp.dot(occ, w.T, preferred_element_type=jnp.float32)  # (blk, 18)
+    if metric == "blocked":
+        counted = inwin > 0
+    else:  # partial
+        counted = (inwin > 0) & (inwin < v[None, :])
+    free = NUM_SLICES - jnp.sum(occ, axis=-1, keepdims=True)  # (blk, 1)
+    eligible = v[None, :] <= free
+    return jnp.sum(jnp.where(counted & eligible, v[None, :], 0.0), axis=-1)
+
+
+def _fragscore_kernel(occ_ref, w_ref, v_ref, out_ref, *, metric: str):
+    occ = occ_ref[...].astype(jnp.float32)  # (BLK_M, 8)
+    out_ref[...] = _score_block(occ, w_ref[...], v_ref[...], metric)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def fragscore(
+    occ: jax.Array,
+    w: jax.Array,
+    v: jax.Array,
+    *,
+    metric: str = "blocked",
+    interpret: bool = True,
+) -> jax.Array:
+    """F(m) for every GPU.
+
+    Args:
+      occ: (M, 8) occupancy bitmap (any int/float dtype).
+      w: (18, 8) placement-window masks.
+      v: (18,) memory-slice weights.
+      metric: "blocked" | "partial".
+      interpret: run in interpret mode (CPU validation); False on real TPU.
+
+    Returns:
+      (M,) float32.
+    """
+    m = occ.shape[0]
+    m_pad = -(-m // BLK_M) * BLK_M
+    occ_p = jnp.zeros((m_pad, NUM_SLICES), occ.dtype).at[:m].set(occ)
+
+    out = pl.pallas_call(
+        functools.partial(_fragscore_kernel, metric=metric),
+        grid=(m_pad // BLK_M,),
+        in_specs=[
+            pl.BlockSpec((BLK_M, NUM_SLICES), lambda i: (i, 0)),
+            pl.BlockSpec((w.shape[0], NUM_SLICES), lambda i: (0, 0)),
+            pl.BlockSpec((v.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLK_M, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, 1), jnp.float32),
+        interpret=interpret,
+    )(occ_p.astype(jnp.float32), w.astype(jnp.float32), v.astype(jnp.float32))
+    return out[:m, 0]
+
+
+def _mfi_delta_kernel(occ_ref, w_ref, v_ref, pm_ref, pv_ref, out_ref, *, metric: str, max_anchors: int):
+    """ΔF of placing the requested profile at each anchor, +inf if infeasible."""
+    occ = occ_ref[...].astype(jnp.float32)  # (BLK_M, 8)
+    w = w_ref[...]
+    v = v_ref[...]
+    f_before = _score_block(occ, w, v, metric)  # (BLK_M,)
+    big = jnp.float32(1e30)
+    for a in range(max_anchors):  # unrolled: A <= 7
+        mask = pm_ref[a, :]  # (8,)
+        valid = pv_ref[a]  # scalar 0/1
+        overlap = jnp.sum(occ * mask[None, :], axis=-1)  # (BLK_M,)
+        feasible = (overlap == 0) & (valid > 0)
+        hypo = jnp.minimum(occ + mask[None, :], 1.0)
+        delta = _score_block(hypo, w, v, metric) - f_before
+        out_ref[:, a] = jnp.where(feasible, delta, big)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def mfi_delta(
+    occ: jax.Array,
+    w: jax.Array,
+    v: jax.Array,
+    profile_masks: jax.Array,
+    profile_valid: jax.Array,
+    *,
+    metric: str = "blocked",
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused Algorithm-2 inner loop: ΔF over all (GPU, anchor) dry-runs.
+
+    Args:
+      occ: (M, 8) occupancy.
+      w, v: placement table as in :func:`fragscore`.
+      profile_masks: (A, 8) window masks of the *requested* profile's anchors
+        (padded rows are zero).
+      profile_valid: (A,) 1.0 for real anchors, 0.0 for padding.
+
+    Returns:
+      (M, A) float32 ΔF, +1e30 where the placement is infeasible.
+    """
+    m = occ.shape[0]
+    a = profile_masks.shape[0]
+    m_pad = -(-m // BLK_M) * BLK_M
+    occ_p = jnp.zeros((m_pad, NUM_SLICES), occ.dtype).at[:m].set(occ)
+
+    out = pl.pallas_call(
+        functools.partial(_mfi_delta_kernel, metric=metric, max_anchors=a),
+        grid=(m_pad // BLK_M,),
+        in_specs=[
+            pl.BlockSpec((BLK_M, NUM_SLICES), lambda i: (i, 0)),
+            pl.BlockSpec((w.shape[0], NUM_SLICES), lambda i: (0, 0)),
+            pl.BlockSpec((v.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((a, NUM_SLICES), lambda i: (0, 0)),
+            pl.BlockSpec((a,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLK_M, a), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, a), jnp.float32),
+        interpret=interpret,
+    )(
+        occ_p.astype(jnp.float32),
+        w.astype(jnp.float32),
+        v.astype(jnp.float32),
+        profile_masks.astype(jnp.float32),
+        profile_valid.astype(jnp.float32),
+    )
+    return out[:m]

@@ -1,0 +1,57 @@
+"""Public jit'd wrappers for the fragscore / mfi_delta Pallas kernels."""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cluster as jcluster
+from repro.core import mig
+from repro.kernels.fragscore import fragscore as _k
+
+_W = np.asarray(mig.PLACEMENT_MASKS, dtype=np.float32)
+_V = np.asarray(mig.PLACEMENT_MEM, dtype=np.float32)
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def fragmentation_scores(occ: jax.Array, metric: str = "blocked") -> jax.Array:
+    """Kernel-backed F(m) over the cluster: (M, 8) -> (M,) float32."""
+    return _k.fragscore(
+        occ, jnp.asarray(_W), jnp.asarray(_V), metric=metric, interpret=_use_interpret()
+    )
+
+
+def mfi_delta_f(occ: jax.Array, profile_id, metric: str = "blocked") -> jax.Array:
+    """Kernel-backed ΔF table for Algorithm 2: (M, 8) × profile -> (M, A)."""
+    masks = jcluster.PROFILE_MASKS[profile_id]  # (A, 8)
+    valid = jcluster.PROFILE_VALID[profile_id].astype(jnp.float32)  # (A,)
+    return _k.mfi_delta(
+        occ,
+        jnp.asarray(_W),
+        jnp.asarray(_V),
+        masks,
+        valid,
+        metric=metric,
+        interpret=_use_interpret(),
+    )
+
+
+def mfi_select(occ: jax.Array, profile_id, metric: str = "blocked") -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Kernel-backed Algorithm 2: returns (gpu, anchor, accepted)."""
+    delta = mfi_delta_f(occ, profile_id, metric)  # (M, A)
+    flat = delta.reshape(-1)
+    k = jnp.argmin(flat)
+    accepted = flat[k] < 1e29
+    a = delta.shape[1]
+    gpu = jnp.where(accepted, k // a, -1).astype(jnp.int32)
+    anchor = jnp.where(
+        accepted, jcluster.PROFILE_ANCHORS[profile_id][k % a], -1
+    ).astype(jnp.int32)
+    return gpu, anchor, accepted

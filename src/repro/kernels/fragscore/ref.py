@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the fragscore kernel.
+
+Computes F(m) (paper Algorithm 1) for a batch of GPU occupancy bitmaps.
+Mirrors :func:`repro.core.cluster.frag_scores` but is kept dependency-light
+so the kernel test compares kernel vs. this file alone.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mig
+
+# Constant tables (host-side numpy, baked into the jaxpr as literals).
+W = np.asarray(mig.PLACEMENT_MASKS, dtype=np.float32)        # (18, 8)
+V = np.asarray(mig.PLACEMENT_MEM, dtype=np.float32)          # (18,)
+NUM_SLICES = mig.NUM_MEM_SLICES
+
+
+def fragscore_ref(occ: jax.Array, metric: str = "blocked") -> jax.Array:
+    """F(m) for every GPU.
+
+    Args:
+      occ: (M, 8) int/float occupancy bitmap.
+      metric: "blocked" | "partial".
+
+    Returns:
+      (M,) float32 fragmentation scores.
+    """
+    occf = occ.astype(jnp.float32)
+    inwin = occf @ W.T  # (M, 18) occupied count per window
+    if metric == "blocked":
+        counted = inwin > 0
+    elif metric == "partial":
+        counted = (inwin > 0) & (inwin < V[None, :])
+    else:
+        raise ValueError(metric)
+    free = NUM_SLICES - occf.sum(axis=-1, keepdims=True)
+    eligible = V[None, :] <= free
+    return jnp.sum(jnp.where(counted & eligible, V[None, :], 0.0), axis=-1)

@@ -1,0 +1,192 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# Only the dry-run sees 512 placeholder devices; tests/benches see 1.
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import jax
+
+from repro.configs import ARCHS, ASSIGNED, LONG_CONTEXT_OK
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES
+from repro.launch.steps import build_step
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12   # bf16
+HBM_BW = 819e9        # bytes/s
+ICI_BW = 50e9         # bytes/s per link
+
+
+def runnable(arch: str, shape_name: str) -> bool:
+    if shape_name == "long_500k" and arch not in LONG_CONTEXT_OK:
+        return False
+    return True
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, out_dir: Path, overrides=None, tag: str = ""):
+    cfg = ARCHS[arch]
+    shape = SHAPES[shape_name]
+    chips = 512 if multi_pod else 256
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    fn, args, in_shard, out_shard = build_step(
+        cfg, shape, multi_pod=multi_pod, rule_overrides=overrides
+    )
+    donate = {"train": (0, 1), "prefill": (), "decode": (1,)}[shape.kind]
+
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(
+            fn, in_shardings=in_shard, out_shardings=out_shard, donate_argnums=donate
+        ).lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = hlo_analysis.analyze(compiled.as_text())
+
+    # roofline terms — all quantities are per-chip
+    compute_t = hlo.flops / PEAK_FLOPS
+    memory_bytes = hlo.dot_bytes + hlo.argument_bytes
+    memory_t = memory_bytes / HBM_BW
+    collective_t = hlo.collective_bytes / ICI_BW
+    terms = {"compute": compute_t, "memory": memory_t, "collective": collective_t}
+    bottleneck = max(terms, key=terms.get)
+
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    n_active = cfg.active_param_count()
+    model_flops = (6 if shape.kind == "train" else 2) * n_active * tokens
+    hlo_flops_global = hlo.flops * chips
+    useful_ratio = model_flops / hlo_flops_global if hlo_flops_global else 0.0
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": shape.kind,
+        "tag": tag,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "args_bytes_per_chip": ma.argument_size_in_bytes,
+            "temp_bytes_per_chip": ma.temp_size_in_bytes,
+            "output_bytes_per_chip": ma.output_size_in_bytes,
+            "total_bytes_per_chip": ma.argument_size_in_bytes + ma.temp_size_in_bytes,
+        },
+        "xla_cost_analysis": {
+            "flops_unscanned": ca.get("flops"),
+            "bytes_unscanned": ca.get("bytes accessed"),
+        },
+        "hlo_analysis": {
+            "flops_per_chip": hlo.flops,
+            "collective_bytes_per_chip": hlo.collective_bytes,
+            "collective_breakdown": hlo.collective_breakdown,
+            "collective_op_count": hlo.collective_count,
+            "dot_bytes_per_chip": hlo.dot_bytes,
+            "argument_bytes_per_chip": hlo.argument_bytes,
+        },
+        "roofline": {
+            "compute_s": compute_t,
+            "memory_s": memory_t,
+            "collective_s": collective_t,
+            "bottleneck": bottleneck,
+            "model_flops_global": model_flops,
+            "hlo_flops_global": hlo_flops_global,
+            "useful_flops_ratio": useful_ratio,
+            "params": cfg.param_count(),
+            "active_params": n_active,
+        },
+    }
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = out_dir / f"{arch}__{shape_name}__{result['mesh']}{suffix}.json"
+    path.write_text(json.dumps(result, indent=2))
+
+    print(f"[dryrun] {arch} × {shape_name} × {result['mesh']}{suffix}: "
+          f"compile={t_compile:.0f}s "
+          f"mem/chip={(result['memory']['total_bytes_per_chip'])/2**30:.2f}GiB "
+          f"compute={compute_t*1e3:.2f}ms memory={memory_t*1e3:.2f}ms "
+          f"collective={collective_t*1e3:.2f}ms -> {bottleneck} "
+          f"useful={useful_ratio:.2f}")
+    print(f"  memory_analysis: args={ma.argument_size_in_bytes/2**30:.2f}GiB "
+          f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB out={ma.output_size_in_bytes/2**30:.2f}GiB")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description="Multi-pod dry-run: lower+compile every (arch × shape × mesh)")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="run all combos in subprocesses")
+    ap.add_argument("--force", action="store_true", help="re-run existing artifacts")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="", help="artifact tag (perf experiments)")
+    ap.add_argument("--opt", default=None,
+                    help="comma list of perf options: attn_tp,kvseq,ep (see §Perf)")
+    args = ap.parse_args()
+    out_dir = Path(args.out)
+
+    if args.all:
+        failures = []
+        for arch in ASSIGNED:
+            for shape_name in SHAPES:
+                if not runnable(arch, shape_name):
+                    print(f"[dryrun] SKIP {arch} × {shape_name} (full attention; see DESIGN.md)")
+                    continue
+                for mp in (False, True):
+                    mesh_name = "2x16x16" if mp else "16x16"
+                    art = out_dir / f"{arch}__{shape_name}__{mesh_name}.json"
+                    if art.exists() and not args.force:
+                        print(f"[dryrun] cached {art.name}")
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape_name, "--out", str(out_dir)]
+                    if mp:
+                        cmd.append("--multi-pod")
+                    r = subprocess.run(cmd, env={**os.environ})
+                    if r.returncode != 0:
+                        failures.append((arch, shape_name, mesh_name))
+        if failures:
+            print("FAILURES:", failures)
+            sys.exit(1)
+        print("[dryrun] all combinations lowered + compiled successfully")
+        return
+
+    assert args.arch and args.shape, "--arch and --shape required (or --all)"
+    if not runnable(args.arch, args.shape):
+        print(f"[dryrun] {args.arch} × {args.shape} skipped by design (DESIGN.md §3)")
+        return
+    overrides = {}
+    tag = args.tag
+    for opt in (args.opt.split(",") if args.opt else []):
+        if opt == "attn_tp":       # §Perf iter: Megatron GQA-TP attention
+            overrides.update({"attn_tp": True, "heads_tp": "model"})
+        elif opt == "kvseq":       # §Perf iter: sequence-sharded KV decode
+            overrides.update({"kv_seq": "model", "kv_heads": None,
+                              "kv_head_dim": None, "decode_seq_shard": True})
+        elif opt == "bf16grad":    # §Perf iter: bf16 residual-stream cotangents
+            overrides.update({"bf16_grad": True})
+        elif opt == "nofsdp":
+            overrides.update({"dmodel": None})
+        else:
+            raise SystemExit(f"unknown --opt {opt}")
+        tag = f"{tag}+{opt}" if tag else opt
+    run_one(args.arch, args.shape, args.multi_pod, out_dir, overrides=overrides or None, tag=tag)
+
+
+if __name__ == "__main__":
+    main()

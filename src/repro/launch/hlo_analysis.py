@@ -1,0 +1,245 @@
+"""Roofline-term extraction from compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` on the CPU backend counts each while-loop
+body ONCE, but our models scan over layer groups / attention tiles / SSD
+chunks — so every interesting FLOP lives inside a while.  This module
+re-derives trip-count-weighted totals by parsing ``compiled.as_text()``:
+
+  * computations are parsed into per-op symbol tables (name -> shape);
+  * ``while`` ops are resolved to their condition computation, whose largest
+    integer constant is taken as the trip count (scan bounds compile to a
+    ``compare(induction, constant(N))``);
+  * FLOPs are counted for ``dot``/``convolution`` ops
+    (2 × |result| × contraction), weighted by the product of enclosing
+    trip counts;
+  * collective bytes sum the result sizes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute, trip-weighted —
+    a per-chip ICI traffic proxy (ring algorithms move ≈|result| bytes
+    through each chip);
+  * HBM bytes are approximated as trip-weighted dot operand+result traffic
+    plus entry argument bytes (params/caches read once per step).
+
+All numbers are PER DEVICE (the compiled module is the per-device SPMD
+program).  Methodology caveats are documented in EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64|c128)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of all array shapes appearing in an HLO type string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(type_str: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    lines: List[str]
+    shapes: Dict[str, str]          # %op name -> result type string
+    whiles: List[Tuple[str, str]]   # (condition comp, body comp)
+
+
+def _parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    header_re = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->.*\{")
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        m = header_re.match(line)
+        if m and not line.startswith(" "):
+            cur = Computation(m.group(1), [], {}, [])
+            comps[cur.name] = cur
+            # parameters: "name: f32[...]" pairs
+            for pm in re.finditer(r"([\w\.\-]+):\s*((?:\([^)]*\)|[\w\[\],{}\s/]+?))(?:,|$)", m.group(2)):
+                cur.shapes["%" + pm.group(1)] = pm.group(2)
+            continue
+        if cur is None:
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        s = line.strip()
+        dm = re.match(r"(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\)|\S+))\s+([\w\-]+)\(", s)
+        if dm:
+            cur.shapes["%" + dm.group(1)] = dm.group(2)
+        cur.lines.append(s)
+        if re.search(r"\bwhile\(", s):
+            cm = re.search(r"condition=%?([\w\.\-]+)", s)
+            bm = re.search(r"body=%?([\w\.\-]+)", s)
+            if cm and bm:
+                cur.whiles.append((cm.group(1), bm.group(1)))
+    return comps
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    best = 1
+    for line in cond.lines:
+        for c in re.findall(r"constant\((\d+)\)", line):
+            best = max(best, int(c))
+    return best
+
+
+def _multipliers(comps: Dict[str, Computation], entry: str) -> Dict[str, int]:
+    """Computation -> product of enclosing while trip counts."""
+    mult: Dict[str, int] = {entry: 1}
+    # call graph: while bodies/conditions, fusions, calls
+    stack = [entry]
+    seen = set()
+    while stack:
+        name = stack.pop()
+        if name in seen:
+            continue
+        seen.add(name)
+        comp = comps.get(name)
+        if comp is None:
+            continue
+        m = mult.get(name, 1)
+        for cond, body in comp.whiles:
+            trips = _trip_count(comps, cond)
+            for child in (body, cond):
+                mult[child] = max(mult.get(child, 0), m * trips)
+                stack.append(child)
+        # other computation references (fusions, reduces, calls, maps)
+        for line in comp.lines:
+            for ref in re.findall(r"(?:calls|to_apply|fusion)=%?([\w\.\-]+)", line):
+                mult[ref] = max(mult.get(ref, 0), m)
+                stack.append(ref)
+    return mult
+
+
+def _dot_flops(comp: Computation, line: str) -> int:
+    dm = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\S+)\s+dot\(([^)]*)\)", line)
+    if not dm:
+        return 0
+    result_dims = _shape_dims(dm.group(1))
+    if result_dims is None:
+        return 0
+    out_elems = math.prod(result_dims) if result_dims else 1
+    # contraction size from lhs shape + lhs_contracting_dims
+    ops = [o.strip() for o in dm.group(2).split(",")]
+    lhs_type = comp.shapes.get(ops[0] if ops[0].startswith("%") else "%" + ops[0], "")
+    lhs_dims = _shape_dims(lhs_type)
+    cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    contract = 1
+    if lhs_dims and cm and cm.group(1):
+        for d in cm.group(1).split(","):
+            di = int(d)
+            if di < len(lhs_dims):
+                contract *= lhs_dims[di]
+    return 2 * out_elems * contract
+
+
+def _conv_flops(comp: Computation, line: str) -> int:
+    dm = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\S+)\s+convolution\(([^)]*)\)", line)
+    if not dm:
+        return 0
+    result_dims = _shape_dims(dm.group(1))
+    if result_dims is None:
+        return 0
+    ops = [o.strip() for o in dm.group(2).split(",")]
+    rhs_type = comp.shapes.get(ops[1] if ops[1].startswith("%") else "%" + ops[1], "")
+    rhs_dims = _shape_dims(rhs_type) or [1]
+    return 2 * math.prod(result_dims) * math.prod(rhs_dims[:-1])
+
+
+@dataclasses.dataclass
+class HLOAnalysis:
+    flops: float                 # trip-weighted dot/conv FLOPs, per device
+    collective_bytes: float      # trip-weighted collective result bytes, per device
+    dot_bytes: float             # trip-weighted dot operand+result bytes
+    argument_bytes: float        # entry argument bytes (params/caches)
+    collective_breakdown: Dict[str, float]
+    collective_count: int
+
+
+def analyze(hlo: str) -> HLOAnalysis:
+    comps = _parse_computations(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    mult = _multipliers(comps, entry)
+
+    flops = 0.0
+    coll_bytes = 0.0
+    dot_bytes = 0.0
+    breakdown: Dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    count = 0
+
+    for name, comp in comps.items():
+        m = mult.get(name, 1)
+        for line in comp.lines:
+            if " dot(" in line:
+                f = _dot_flops(comp, line)
+                flops += m * f
+                dm = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\S+)\s+dot\(([^)]*)\)", line)
+                if dm:
+                    b = _shape_bytes(dm.group(1))
+                    for o in dm.group(2).split(","):
+                        o = o.strip()
+                        b += _shape_bytes(comp.shapes.get(o if o.startswith("%") else "%" + o, ""))
+                    dot_bytes += m * b
+            elif " convolution(" in line:
+                flops += m * _conv_flops(comp, line)
+            else:
+                for c in _COLLECTIVES:
+                    if f" {c}(" in line or f" {c}-start(" in line:
+                        dm = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*((?:\([^)]*\)|\S+))\s", line)
+                        if dm:
+                            b = _shape_bytes(dm.group(1))
+                            coll_bytes += m * b
+                            breakdown[c] += m * b
+                            count += 1
+                        break
+
+    arg_bytes = 0.0
+    ec = comps.get(entry)
+    if ec:
+        for k, v in ec.shapes.items():
+            if re.match(r"%(arg|Arg|param)", k, re.IGNORECASE):
+                arg_bytes += _shape_bytes(v)
+
+    return HLOAnalysis(
+        flops=flops,
+        collective_bytes=coll_bytes,
+        dot_bytes=dot_bytes,
+        argument_bytes=arg_bytes,
+        collective_breakdown={k: v for k, v in breakdown.items() if v},
+        collective_count=count,
+    )

@@ -1,0 +1,33 @@
+"""Production mesh construction (TPU v5e pods; host-placeholder in dry-run).
+
+``make_production_mesh`` is a FUNCTION (never module-level state) so that
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and only then builds the mesh.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.  Multi-pod adds pod=2."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+    )
+
+
+def make_host_mesh():
+    """Degenerate 1×1 mesh over the local device (tests / examples)."""
+    return jax.make_mesh(
+        (1, 1), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto),
+    )
+
+
+MODEL_AXIS_SIZE = 16
+DATA_AXIS_SIZE = 16
+POD_AXIS_SIZE = 2

@@ -1,0 +1,80 @@
+"""Assigned input shapes and ShapeDtypeStruct input specs (no allocation).
+
+Shape-to-batch mapping per family (DESIGN.md §3):
+  * decoder-only: tokens (B, S)
+  * vlm: 256 patch embeddings + (S - 256) text tokens  (total budget = S)
+  * audio (enc-dec): encoder frames S//2 + decoder tokens S//2
+Decode shapes build a serve_step over a KV cache of the full seq_len.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, *, with_labels: bool):
+    """ShapeDtypeStructs for the data batch of a train/prefill step."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = cfg.jax_dtype
+    if cfg.encdec:
+        half = s // 2
+        out = {
+            "frames": jax.ShapeDtypeStruct((b, half, cfg.d_model), dt),
+            "tokens": jax.ShapeDtypeStruct((b, half), i32),
+        }
+        if with_labels:
+            out["labels"] = jax.ShapeDtypeStruct((b, half), i32)
+        return out
+    if cfg.frontend == "vision":
+        text = s - cfg.num_patches
+        out = {
+            "patches": jax.ShapeDtypeStruct((b, cfg.num_patches, cfg.d_model), dt),
+            "tokens": jax.ShapeDtypeStruct((b, text), i32),
+        }
+        if with_labels:
+            out["labels"] = jax.ShapeDtypeStruct((b, text), i32)
+        return out
+    out = {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    if with_labels:
+        out["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape):
+    """Abstract decode-cache pytree (jax.eval_shape — zero allocation)."""
+    return jax.eval_shape(
+        lambda: model.init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape):
+    b = shape.global_batch
+    return {
+        "cache": cache_specs(cfg, shape),
+        "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }

@@ -1,0 +1,177 @@
+"""Step functions (train / prefill / decode) with sharding specs.
+
+``build_step(cfg, shape, mesh, multi_pod)`` returns (fn, arg_specs,
+in_shardings) ready for ``jax.jit(fn, in_shardings=...).lower(*specs)``.
+Sharding rules follow DESIGN.md §4: batch -> (pod, data); ff/vocab/attn
+projections -> model; FSDP d_model -> data; long_500k (B=1) shards the KV
+cache sequence axis over data instead of the batch.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding
+from repro.launch import shapes as shapes_lib
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+
+def rules_for(cfg: ModelConfig, shape, *, multi_pod: bool, overrides=None):
+    r = sharding.default_rules(
+        multi_pod=multi_pod,
+        n_heads=cfg.n_heads,
+        n_kv_heads=cfg.n_kv_heads,
+        model_axis=16,
+        batch_shardable=shape.global_batch >= (32 if multi_pod else 16),
+        shard_kv_seq=shape.global_batch == 1,
+        # FSDP only makes sense in training (amortises optimizer state);
+        # at inference weights stay TP-only, else every decode step would
+        # re-gather the FSDP shard (dominates the collective roofline term).
+        # Exception: models whose TP-sharded weights alone exceed ~12 GiB per
+        # chip (grok-1: 631 GiB bf16 / 16 = 39 GiB) must weight-shard over
+        # data at inference as well.
+        fsdp=shape.kind == "train" or cfg.param_count() * 2 / 16 > 12e9,
+    )
+    r["attn_flat"] = "model"  # flattened head*dim projections always divide
+    if cfg.ssm_nheads and cfg.ssm_nheads % 16 != 0:
+        r["ssm_heads"] = None  # per-head scalars replicate when not divisible
+    if cfg.ssm_dinner and (cfg.ssm_dinner % 16 or (cfg.ssm_dinner // 16) % cfg.ssm_headdim):
+        r["ssm_inner"] = None  # shard only when shards stay head-aligned
+    if overrides:
+        r.update(overrides)
+    return r
+
+
+def _batch_sharding(cfg, shape, rules):
+    """PartitionSpec tree for the data batch."""
+    batch_axes = rules.get("batch")
+
+    def spec(s):
+        ndim = len(s.shape)
+        return P(batch_axes, *([None] * (ndim - 1)))
+
+    return jax.tree.map(spec, shapes_lib.batch_specs(cfg, shape, with_labels=True))
+
+
+def _cache_sharding(cfg, shape, rules):
+    """PartitionSpec tree for the decode cache, matched by leaf path."""
+    abstract = shapes_lib.cache_specs(cfg, shape)
+    batch = rules.get("batch")
+    kv_seq = rules.get("kv_seq")
+    kvh = rules.get("kv_heads")
+    kvd = rules.get("kv_head_dim")
+    ssmh = rules.get("ssm_heads")
+
+    def leaf_spec(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+        nd = len(leaf.shape)
+        if "state" in keys:  # ssm state (..., B, H, N, P)
+            return P(*([None] * (nd - 4)), batch, ssmh, None, None)
+        if "conv" in keys:  # conv ring (..., B, W, C)
+            return P(*([None] * (nd - 3)), batch, None, None)
+        # attention k/v: (..., B, C, KV, hd)
+        return P(*([None] * (nd - 4)), batch, kv_seq, kvh, kvd)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, abstract)
+
+
+def build_step(cfg: ModelConfig, shape, *, multi_pod: bool, rule_overrides=None):
+    """Returns (step_fn, example_args (ShapeDtypeStructs), in_shardings)."""
+    rules = rules_for(cfg, shape, multi_pod=multi_pod, overrides=rule_overrides)
+    with sharding.use_rules(rules):
+        pspecs = model.param_specs(cfg)
+        pstructs = model.abstract_params(cfg)
+
+        if shape.kind == "train":
+            batch_structs = shapes_lib.batch_specs(cfg, shape, with_labels=True)
+            batch_shard = _batch_sharding(cfg, shape, rules)
+            opt_structs = jax.eval_shape(
+                lambda p: adamw_init(p, cfg.opt_dtype), pstructs
+            )
+            opt_shard = {
+                "m": pspecs,
+                "v": pspecs,
+                "step": P(),
+            }
+
+            def train_step(params, opt_state, batch):
+                with sharding.use_rules(rules):
+                    na = cfg.grad_accum
+
+                    if na == 1:
+                        lval, grads = jax.value_and_grad(
+                            lambda p: model.loss_fn(p, batch, cfg)
+                        )(params)
+                    else:
+                        # gradient accumulation: scan over microbatches keeps
+                        # activation transients at 1/na of the global batch
+                        micro = jax.tree.map(
+                            lambda a: a.reshape((na, a.shape[0] // na) + a.shape[1:]),
+                            batch,
+                        )
+
+                        def micro_step(acc, mb):
+                            l, g = jax.value_and_grad(
+                                lambda p: model.loss_fn(p, mb, cfg)
+                            )(params)
+                            acc_l, acc_g = acc
+                            return (acc_l + l / na,
+                                    jax.tree.map(lambda a, b: a + b / na, acc_g, g)), None
+
+                        zero_g = jax.tree.map(jnp.zeros_like, params)
+                        (lval, grads), _ = jax.lax.scan(
+                            micro_step, (jnp.float32(0.0), zero_g), micro
+                        )
+
+                    lr = cosine_schedule(
+                        opt_state["step"], peak_lr=3e-4, warmup=2000, total=100_000
+                    )
+                    new_p, new_o = adamw_update(params, grads, opt_state, lr=lr)
+                    return new_p, new_o, {"loss": lval}
+
+            args = (pstructs, opt_structs, batch_structs)
+            in_shard = (pspecs, opt_shard, batch_shard)
+            out_shard = (pspecs, opt_shard, {"loss": P()})
+            return train_step, args, in_shard, out_shard
+
+        if shape.kind == "prefill":
+            batch_structs = shapes_lib.batch_specs(cfg, shape, with_labels=False)
+            batch_shard = _batch_sharding(cfg, shape, rules)
+            batch_shard = {k: batch_shard[k] for k in batch_structs}
+
+            def prefill_step(params, batch):
+                with sharding.use_rules(rules):
+                    logits, cache = model.prefill(params, batch, cfg)
+                    return logits, cache
+
+            args = (pstructs, batch_structs)
+            in_shard = (pspecs, batch_shard)
+            cache_shard = _cache_sharding(
+                cfg,
+                shapes_lib.InputShape(shape.name, shape.seq_len, shape.global_batch, "decode"),
+                rules,
+            )
+            out_shard = (P(rules.get("batch"), rules.get("vocab")), cache_shard)
+            return prefill_step, args, in_shard, out_shard
+
+        # decode
+        dec = shapes_lib.decode_specs(cfg, shape)
+        cache_shard = _cache_sharding(cfg, shape, rules)
+        tok_shard = P(rules.get("batch"))
+
+        def serve_step(params, cache, token, pos):
+            with sharding.use_rules(rules):
+                logits, new_cache = model.decode_step(params, cache, token, pos, cfg)
+                return logits, new_cache
+
+        args = (pstructs, dec["cache"], dec["token"], dec["pos"])
+        in_shard = (pspecs, cache_shard, tok_shard, P())
+        out_shard = (P(rules.get("batch"), rules.get("vocab")), cache_shard)
+        return serve_step, args, in_shard, out_shard

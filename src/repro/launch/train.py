@@ -1,0 +1,73 @@
+"""Training launcher: real steps on the local device, or production-mesh
+lowering via --dryrun (see dryrun.py for the full multi-pod sweep).
+
+Example (CPU, reduced config):
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+        --steps 50 --batch 8 --seq 128
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import ARCHS, SMOKES
+from repro.data import make_batch_iterator
+from repro.models import model
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="use the reduced config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args()
+
+    cfg = SMOKES[args.arch] if args.smoke else ARCHS[args.arch]
+    print(f"[train] {cfg.name}: {cfg.param_count()/1e6:.1f}M params")
+
+    params = model.init_params(cfg, jax.random.PRNGKey(args.seed))
+    opt = adamw_init(params, cfg.opt_dtype)
+    data = make_batch_iterator(cfg, args.batch, args.seq, seed=args.seed)
+
+    @jax.jit
+    def step(params, opt, batch):
+        loss, grads = jax.value_and_grad(lambda p: model.loss_fn(p, batch, cfg))(params)
+        lr = cosine_schedule(opt["step"], peak_lr=args.lr, warmup=10, total=args.steps)
+        params, opt = adamw_update(params, grads, opt, lr=lr)
+        return params, opt, loss
+
+    t0 = time.time()
+    losses = []
+    for i in range(args.steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data).items()}
+        params, opt, loss = step(params, opt, batch)
+        losses.append(float(loss))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"[train] step {i:4d} loss {losses[-1]:.4f} "
+                  f"({(time.time()-t0)/(i+1):.2f}s/step)")
+
+    if args.checkpoint:
+        save_checkpoint(args.checkpoint, params, step=args.steps)
+        print(f"[train] saved checkpoint to {args.checkpoint}")
+
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    print(f"[train] loss {first:.4f} -> {last:.4f} "
+          f"({'LEARNING' if last < first - 0.1 else 'flat'})")
+    return last < first
+
+
+if __name__ == "__main__":
+    main()

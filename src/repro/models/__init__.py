@@ -1,0 +1,3 @@
+"""Multi-architecture JAX model substrate (data plane)."""
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models import model  # noqa: F401

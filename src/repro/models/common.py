@@ -1,0 +1,450 @@
+"""Shared layer library: param builder, norms, RoPE, blockwise attention, MLP.
+
+Conventions:
+  * params are plain nested dicts of jnp arrays (bf16 by default);
+  * every parameter is declared once via :class:`ParamDef` so the same
+    definition yields concrete weights, ShapeDtypeStructs (dry-run) or
+    logical sharding axes;
+  * activations layout: (batch, seq, ...); attention heads (B, S, H, D);
+  * attention never materialises (S, S) logits — the blockwise (flash)
+    implementation scans Q and KV tiles (DESIGN.md §4), bounding peak
+    memory at (B, blk_q, H, blk_k) per step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import sharding
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical sharding axes, len == ndim
+    init: str = "normal"  # "normal" | "zeros" | "ones"
+    scale: float = 1.0    # stddev multiplier for "normal" (fan-in applied)
+    dtype: Optional[str] = None  # override model dtype (e.g. norms in f32)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def materialize(tree, mode: str, dtype, rng: Optional[jax.Array] = None):
+    """ParamDef tree -> params ("init"), specs ("abstract") or axes ("axes")."""
+    leaves, treedef = jax.tree.flatten(
+        tree, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+    if mode == "init":
+        keys = jax.random.split(rng, len(leaves))
+    out = []
+    for i, d in enumerate(leaves):
+        dt = jnp.dtype(d.dtype) if d.dtype else dtype
+        if mode == "abstract":
+            out.append(jax.ShapeDtypeStruct(d.shape, dt))
+        elif mode == "axes":
+            out.append(d.axes)
+        elif mode == "init":
+            if d.init == "zeros":
+                out.append(jnp.zeros(d.shape, dt))
+            elif d.init == "ones":
+                out.append(jnp.ones(d.shape, dt))
+            else:
+                fan_in = d.shape[0] if len(d.shape) > 1 else d.shape[-1]
+                std = d.scale / math.sqrt(max(fan_in, 1))
+                out.append(
+                    (jax.random.normal(keys[i], d.shape, jnp.float32) * std).astype(dt)
+                )
+        else:
+            raise ValueError(mode)
+    return jax.tree.unflatten(treedef, out)
+
+
+def param_partition_specs(defs_tree):
+    """ParamDef tree -> PartitionSpec tree under the active sharding rules."""
+    return jax.tree.map(
+        lambda d: sharding.resolve(d.axes),
+        defs_tree,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def rms_norm_def(d: int) -> ParamDef:
+    return ParamDef((d,), (None,), init="zeros", dtype="float32")
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# Positions
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, D) or (..., H, D); positions (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    # broadcast to head axis: x is (B,S,H,D) -> angles (B,S,1,half)
+    while angles.ndim < x.ndim:
+        angles = angles[..., None, :]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def sincos_positions(s: int, d: int) -> np.ndarray:
+    """Whisper-style sinusoidal position table (S, D)."""
+    half = d // 2
+    pos = np.arange(s)[:, None]
+    freqs = np.exp(-np.log(10000.0) * np.arange(half) / max(half - 1, 1))
+    t = pos * freqs[None, :]
+    return np.concatenate([np.sin(t), np.cos(t)], axis=1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash) attention — pure jnp, memory-bounded
+# ---------------------------------------------------------------------------
+
+
+def _tile_logits(qt, kt, scale, qpos, kpos, causal, window):
+    """Masked logits for one (Q-tile, KV-tile) pair.
+
+    qt: (B, KV, G, bq, D); kt: (B, KV, bk, D) -> (B, KV, G, bq, bk) f32.
+    """
+    logits = jnp.einsum(
+        "bkgqd,bksd->bkgqs", qt, kt, preferred_element_type=jnp.float32
+    ) * scale
+    mask = kpos[None, :] >= 0
+    if causal:
+        mask = mask & (qpos[:, None] >= kpos[None, :])
+    if window is not None:
+        mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    return jnp.where(mask[None, None, None], logits, -jnp.inf)
+
+
+def _make_flash_qtile(scale, causal, window, blk_k):
+    """Factory for a custom-VJP flash attention of ONE query tile vs a tiled
+    KV span.  Residuals are only (o, L): the backward pass recomputes tile
+    logits, so nested-scan autodiff never stores (bq × bk) probabilities —
+    this is what keeps train-time attention memory O(S·D) instead of O(S²).
+    """
+
+    def fwd_scan(qt, kts, vts, qstart, kstart):
+        b, kv, g, bq, d = qt.shape
+        nk = kts.shape[0]
+        qpos = qstart + jnp.arange(bq)
+
+        def body(carry, xs):
+            j, kt, vt = xs
+            kpos = kstart + j * blk_k + jnp.arange(blk_k)
+            logits = _tile_logits(qt, kt, scale, qpos, kpos, causal, window)
+            m, l, acc = carry
+            m_cur = jnp.max(logits, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m, m_cur)
+            safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.where(jnp.isfinite(logits), jnp.exp(logits - safe), 0.0)
+            alpha = jnp.where(jnp.isfinite(m), jnp.exp(m - safe), 0.0)
+            l_new = l * alpha + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p.astype(vt.dtype), vt,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        init = (
+            jnp.full((b, kv, g, bq, 1), -jnp.inf, jnp.float32),
+            jnp.zeros((b, kv, g, bq, 1), jnp.float32),
+            jnp.zeros((b, kv, g, bq, d), jnp.float32),
+        )
+        (m, l, acc), _ = jax.lax.scan(body, init, (jnp.arange(nk), kts, vts))
+        o = acc / jnp.where(l == 0, 1.0, l)
+        lse = jnp.where(l > 0, m + jnp.log(jnp.maximum(l, 1e-38)), -jnp.inf)
+        return o, lse  # (B,KV,G,bq,D), (B,KV,G,bq,1)
+
+    @jax.custom_vjp
+    def flash(qt, kts, vts, qstart, kstart):
+        o, _ = fwd_scan(qt, kts, vts, qstart, kstart)
+        return o.astype(qt.dtype)
+
+    def flash_fwd(qt, kts, vts, qstart, kstart):
+        o, lse = fwd_scan(qt, kts, vts, qstart, kstart)
+        return o.astype(qt.dtype), (qt, kts, vts, qstart, kstart, o, lse)
+
+    def flash_bwd(res, do):
+        qt, kts, vts, qstart, kstart, o, lse = res
+        b, kv, g, bq, d = qt.shape
+        nk = kts.shape[0]
+        qpos = qstart + jnp.arange(bq)
+        dof = do.astype(jnp.float32)
+        dsum = jnp.sum(dof * o, axis=-1, keepdims=True)  # (B,KV,G,bq,1)
+        qtf = qt.astype(jnp.float32)
+
+        def body(dq, xs):
+            j, kt, vt = xs
+            kpos = kstart + j * blk_k + jnp.arange(blk_k)
+            logits = _tile_logits(qtf, kt, scale, qpos, kpos, causal, window)
+            p = jnp.where(jnp.isfinite(logits), jnp.exp(logits - jnp.where(
+                jnp.isfinite(lse), lse, 0.0)), 0.0)  # (B,KV,G,bq,bk)
+            dv_j = jnp.einsum("bkgqs,bkgqd->bksd", p, dof,
+                              preferred_element_type=jnp.float32)
+            dp = jnp.einsum("bkgqd,bksd->bkgqs", dof, vt.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - dsum) * scale
+            dq = dq + jnp.einsum("bkgqs,bksd->bkgqd", ds, kt.astype(jnp.float32),
+                                 preferred_element_type=jnp.float32)
+            dk_j = jnp.einsum("bkgqs,bkgqd->bksd", ds, qtf,
+                              preferred_element_type=jnp.float32)
+            return dq, (dk_j, dv_j)
+
+        dq0 = jnp.zeros((b, kv, g, bq, d), jnp.float32)
+        dq, (dks, dvs) = jax.lax.scan(body, dq0, (jnp.arange(nk), kts, vts))
+        zint = np.zeros((), jax.dtypes.float0)
+        return (dq.astype(qt.dtype), dks.astype(kts.dtype), dvs.astype(vts.dtype),
+                zint, zint)
+
+    flash.defvjp(flash_fwd, flash_bwd)
+    return flash
+
+
+def blockwise_attention(
+    q: jax.Array,  # (B, Sq, H, D)
+    k: jax.Array,  # (B, Sk, KV, D)
+    v: jax.Array,  # (B, Sk, KV, D)
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    blk_q: int = 512,
+    blk_k: int = 512,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Flash attention with GQA, causal and optional sliding window.
+
+    Memory-optimal: the custom-VJP tile kernel stores only (o, logsumexp);
+    backward recomputes tile logits.  The sliding-window path slices only the
+    (blk_q + window) KV span each Q tile needs, so local layers cost
+    O(S·window) rather than O(S²).
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = d ** -0.5 if scale is None else scale
+    blk_q = min(blk_q, sq)
+    blk_k = min(blk_k, sk)
+    assert sq % blk_q == 0 and sk % blk_k == 0, (sq, blk_q, sk, blk_k)
+    nq = sq // blk_q
+
+    qg = q.reshape(b, nq, blk_q, kv, g, d).transpose(1, 0, 3, 4, 2, 5)
+    # (nq, B, KV, G, bq, D)
+
+    if window is not None and sk > blk_q + window:
+        # --- local path: each Q tile sees one (blk_q + window) KV span -----
+        span = blk_q + window
+        kp = jnp.pad(k, ((0, 0), (window, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (window, 0), (0, 0), (0, 0)))
+        flash = _make_flash_qtile(scale, causal, window, span)
+
+        def q_body(carry, qi):
+            i, qt = qi
+            start = i * blk_q  # padded coords == (i*blk_q - window) + window
+            kt = jax.lax.dynamic_slice_in_dim(kp, start, span, axis=1)
+            vt = jax.lax.dynamic_slice_in_dim(vp, start, span, axis=1)
+            kt = kt.transpose(0, 2, 1, 3)[None]  # (1, B, KV, span, D)
+            vt = vt.transpose(0, 2, 1, 3)[None]
+            o = flash(qt, kt, vt, q_offset + i * blk_q, i * blk_q - window)
+            return carry, o
+
+        _, out = jax.lax.scan(q_body, None, (jnp.arange(nq), qg))
+    else:
+        # --- global path: flash over all KV tiles --------------------------
+        nk = sk // blk_k
+        kt_all = k.reshape(b, nk, blk_k, kv, d).transpose(1, 0, 3, 2, 4)
+        vt_all = v.reshape(b, nk, blk_k, kv, d).transpose(1, 0, 3, 2, 4)
+        flash = _make_flash_qtile(scale, causal, window, blk_k)
+
+        def q_body(carry, qi):
+            i, qt = qi
+            o = flash(qt, kt_all, vt_all, q_offset + i * blk_q, 0)
+            return carry, o
+
+        _, out = jax.lax.scan(q_body, None, (jnp.arange(nq), qg))
+
+    # out: (nq, B, KV, G, bq, D) -> (B, Sq, H, D)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(b, sq, h, d)
+    return out.astype(q.dtype)
+
+
+def decode_gqa_attention(
+    q: jax.Array,       # (B, H, D) single token
+    k_cache: jax.Array,  # (B, S, KV, D)
+    v_cache: jax.Array,
+    kv_positions: jax.Array,  # (B, S) true token position per slot (-1 invalid)
+    pos: jax.Array,      # scalar current position
+    *,
+    scale: Optional[float] = None,
+    window: Optional[int] = None,
+) -> jax.Array:
+    """Single-token decode attention over a (ring or linear) KV cache."""
+    b, h, d = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    scale = d ** -0.5 if scale is None else scale
+    qf = q.reshape(b, kv, g, d).astype(jnp.float32)
+    logits = jnp.einsum(
+        "bkgd,bskd->bkgs", qf, k_cache.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    valid = (kv_positions >= 0) & (kv_positions <= pos)
+    if window is not None:
+        valid &= kv_positions > pos - window
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def grad_dtype_barrier(x: jax.Array) -> jax.Array:
+    """Identity whose backward casts the cotangent to x's dtype.
+
+    The CE loss computes logits with preferred_element_type=f32, so the
+    residual-stream cotangent arrives in f32 and every activation
+    all-reduce/all-gather in the backward pass doubles in size (§Perf).
+    Placing this barrier between the decoder stack and the loss keeps the
+    backward pass in bf16 (f32 still used inside norms/softmax locally).
+    """
+
+    @jax.custom_vjp
+    def _barrier(y):
+        return y
+
+    def _fwd(y):
+        return y, None
+
+    def _bwd(_, ct):
+        return (ct.astype(x.dtype),)
+
+    _barrier.defvjp(_fwd, _bwd)
+    return _barrier(x)
+
+
+def mask_padded_logits(logits: jax.Array, valid_vocab: int) -> jax.Array:
+    """-inf out embedding-padding rows (see ModelConfig.padded_vocab)."""
+    v = logits.shape[-1]
+    if v == valid_vocab:
+        return logits
+    mask = jnp.arange(v) < valid_vocab
+    return jnp.where(mask, logits, -1e30)
+
+
+def _sqrt_factor(n: int) -> int:
+    """Largest divisor of n that is <= sqrt(n)."""
+    best = 1
+    f = 1
+    while f * f <= n:
+        if n % f == 0:
+            best = f
+        f += 1
+    return best
+
+
+def remat_scan(body, carry, xs, *, train: bool):
+    """Scan over the leading axis of ``xs`` with sqrt(N) two-level remat.
+
+    Training a scan over N layers normally checkpoints N copies of the carry
+    (activations); splitting into outer×inner scans with ``jax.checkpoint``
+    on the outer body bounds live checkpoints at outer + inner ≈ 2·sqrt(N).
+    Inference (train=False) runs a plain scan.
+    """
+    leaves = jax.tree.leaves(xs)
+    n = leaves[0].shape[0]
+    if not train:
+        return jax.lax.scan(body, carry, xs)
+    o = _sqrt_factor(n)
+    i = n // o
+    inner_body = jax.checkpoint(body)  # per-layer: save only the carry
+    if o == 1:
+        return jax.lax.scan(inner_body, carry, xs)
+    xs2 = jax.tree.map(lambda a: a.reshape((o, i) + a.shape[1:]), xs)
+
+    @jax.checkpoint  # per super-group: bounds live checkpoints at o + i
+    def outer(c, xo):
+        return jax.lax.scan(inner_body, c, xo)
+
+    carry, ys = jax.lax.scan(outer, carry, xs2)
+    if ys is not None:
+        ys = jax.tree.map(
+            lambda a: a.reshape((n,) + a.shape[2:]) if a is not None else a, ys
+        )
+    return carry, ys
+
+
+def chunked_ce_loss(
+    x: jax.Array,        # (B, S, D) final hidden states
+    embed: jax.Array,    # (Vp, D) tied softmax weights (padded vocab)
+    labels: jax.Array,   # (B, S) int32, -1 = ignore
+    chunk: int = 512,
+    valid_vocab: int | None = None,
+) -> jax.Array:
+    """Cross-entropy with S-chunked logits (never materialises (B,S,V))."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0
+    xc = x.reshape(b, s // chunk, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, s // chunk, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint  # recompute chunk logits in backward: O(B·chunk·V) -> transient
+    def body(carry, xs):
+        xt, lt = xs
+        logits = jnp.einsum(
+            "bsd,vd->bsv", xt, embed, preferred_element_type=jnp.float32
+        )
+        logits = sharding.constraint(logits, "batch", None, "vocab")
+        if valid_vocab is not None:
+            logits = mask_padded_logits(logits, valid_vocab)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lt, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (lt >= 0).astype(jnp.float32)
+        loss_sum, n = carry
+        return (loss_sum + jnp.sum((lse - gold) * mask), n + jnp.sum(mask)), None
+
+    (loss_sum, n), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (xc, lc))
+    return loss_sum / jnp.maximum(n, 1.0)

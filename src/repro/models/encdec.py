@@ -1,0 +1,200 @@
+"""Whisper-style encoder–decoder (audio family).  [arXiv:2212.04356]
+
+The mel+conv frontend is a STUB (see DESIGN.md §3): the model consumes
+precomputed frame embeddings (B, S_enc, D).  Everything downstream — the
+bidirectional encoder, the causal decoder with learned positions, and
+cross-attention with a precomputed encoder KV cache — is fully implemented.
+
+Shape mapping: the assigned seq_len S is split S_enc = S_dec = S // 2.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models import common, transformer
+from repro.models.config import ModelConfig
+
+ParamDef = common.ParamDef
+
+
+def enc_layer_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "ln1": common.rms_norm_def(d),
+        "attn": transformer.attn_defs(cfg),
+        "ln2": common.rms_norm_def(d),
+        "mlp": transformer.mlp_defs(cfg),
+    }
+
+
+def dec_layer_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    return {
+        "ln1": common.rms_norm_def(d),
+        "self_attn": transformer.attn_defs(cfg),
+        "ln_x": common.rms_norm_def(d),
+        "cross_attn": transformer.attn_defs(cfg),
+        "ln2": common.rms_norm_def(d),
+        "mlp": transformer.mlp_defs(cfg),
+    }
+
+
+def model_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    return {
+        "embed": ParamDef((cfg.padded_vocab, cfg.d_model), ("vocab", "dmodel"), scale=1.0),
+        "enc_layers": transformer._stack(enc_layer_defs(cfg), cfg.n_enc_layers),
+        "dec_layers": transformer._stack(dec_layer_defs(cfg), cfg.n_layers),
+        "enc_norm": common.rms_norm_def(cfg.d_model),
+        "final_norm": common.rms_norm_def(cfg.d_model),
+        "pos_embed": ParamDef((32768, cfg.d_model), (None, "dmodel"), scale=1.0),
+    }
+
+
+def _cross_attention(p, x, enc_k, enc_v, cfg: ModelConfig):
+    """Unmasked attention from decoder states onto encoder KV."""
+    b, s, _ = x.shape
+    hn, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, hn, hd)
+    o = common.blockwise_attention(q, enc_k, enc_v, causal=False, blk_q=cfg.attn_blk, blk_k=cfg.attn_blk)
+    return o.reshape(b, s, -1) @ p["wo"]
+
+
+def _enc_layer(p, x, cfg: ModelConfig, positions):
+    h = common.rms_norm(x, p["ln1"])
+    hn, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b, s, _ = h.shape
+    q = (h @ p["attn"]["wq"]).reshape(b, s, hn, hd)
+    k = (h @ p["attn"]["wk"]).reshape(b, s, kv, hd)
+    v = (h @ p["attn"]["wv"]).reshape(b, s, kv, hd)
+    o = common.blockwise_attention(q, k, v, causal=False, blk_q=cfg.attn_blk, blk_k=cfg.attn_blk)
+    x = x + o.reshape(b, s, -1) @ p["attn"]["wo"]
+    x = x + transformer.mlp_block(p["mlp"], common.rms_norm(x, p["ln2"]), cfg)
+    return x
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig, *, train: bool = False):
+    """frames: (B, S_enc, D) stub embeddings -> encoder states (B, S_enc, D)."""
+    b, s, d = frames.shape
+    x = frames.astype(cfg.jax_dtype) + jnp.asarray(
+        common.sincos_positions(s, d), cfg.jax_dtype
+    )[None]
+    x = sharding.constraint(x, "batch", None, "dmodel_act")
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(xc, lp):
+        return _enc_layer(lp, xc, cfg, positions), None
+
+    x, _ = common.remat_scan(body, x, params["enc_layers"], train=train)
+    return common.rms_norm(x, params["enc_norm"])
+
+
+def _dec_layer(p, x, enc_k, enc_v, cfg: ModelConfig, positions):
+    """Training/prefill decoder layer. Returns (x, (self_k, self_v))."""
+    h = common.rms_norm(x, p["ln1"])
+    attn_out, (k, v) = transformer.attention_block(
+        p["self_attn"], h, cfg, window=None, positions=positions
+    )
+    x = x + attn_out
+    x = x + _cross_attention(
+        p["cross_attn"], common.rms_norm(x, p["ln_x"]), enc_k, enc_v, cfg
+    )
+    x = x + transformer.mlp_block(p["mlp"], common.rms_norm(x, p["ln2"]), cfg)
+    return x, (k, v)
+
+
+def dec_forward(params, tokens, enc_states, cfg: ModelConfig, *, train: bool = False, return_cache: bool = False):
+    """Decoder over full token sequence. Returns (hidden, cache or None)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(cfg.jax_dtype) * (cfg.d_model ** 0.5)
+    x = x + params["pos_embed"][:s][None].astype(x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+
+    def enc_kv(lp):
+        bb, se, _ = enc_states.shape
+        ek = (enc_states @ lp["cross_attn"]["wk"]).reshape(bb, se, kv, hd)
+        ev = (enc_states @ lp["cross_attn"]["wv"]).reshape(bb, se, kv, hd)
+        return ek, ev
+
+    def body(xc, lp):
+        ek, ev = enc_kv(lp)
+        out, c = _dec_layer(lp, xc, ek, ev, cfg, positions)
+        return out, c
+
+    x, caches = common.remat_scan(body, x, params["dec_layers"], train=train)
+    x = common.rms_norm(x, params["final_norm"])
+    if not return_cache:
+        return x, None
+    # self-attn cache (L, B, S, KV, hd) + cross KV per layer
+    def all_enc_kv(lp):
+        return enc_kv(lp)
+
+    ek, ev = jax.vmap(all_enc_kv)(params["dec_layers"])
+    cache = {
+        "self": {"k": caches[0], "v": caches[1]},
+        "cross": {"k": ek, "v": ev},
+    }
+    return x, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, dec_len: int, enc_len: int):
+    dtype = cfg.jax_dtype
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    L = cfg.n_layers
+    z = lambda s: jnp.zeros((L, batch, s, kv, hd), dtype)
+    return {
+        "self": {"k": z(dec_len), "v": z(dec_len)},
+        "cross": {"k": z(enc_len), "v": z(enc_len)},
+    }
+
+
+def decode(params, cache, token: jax.Array, pos, cfg: ModelConfig):
+    """One decoder token. Returns (logits (B, V), updated cache)."""
+    x = params["embed"][token].astype(cfg.jax_dtype) * (cfg.d_model ** 0.5)
+    x = x + params["pos_embed"][pos][None].astype(x.dtype)
+
+    def body(xc, inp):
+        lp, sk, sv, ck, cv = inp
+        h = common.rms_norm(xc, lp["ln1"])
+        attn_out, new_sc = transformer.attention_decode(
+            lp["self_attn"], h, {"k": sk, "v": sv}, cfg, window=None, pos=pos
+        )
+        xc = xc + attn_out
+        # cross attention (single query token onto precomputed encoder KV)
+        hq = common.rms_norm(xc, lp["ln_x"])
+        b = hq.shape[0]
+        q = (hq @ lp["cross_attn"]["wq"]).reshape(b, cfg.n_heads, cfg.head_dim)
+        enc_len = ck.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(enc_len)[None, :], (b, enc_len))
+        o = common.decode_gqa_attention(q, ck, cv, kv_pos, jnp.int32(enc_len))
+        xc = xc + o.reshape(b, -1) @ lp["cross_attn"]["wo"]
+        xc = xc + transformer.mlp_block(
+            lp["mlp"], common.rms_norm(xc, lp["ln2"])[:, None, :], cfg
+        )[:, 0]
+        return xc, new_sc
+
+    x, new_self = jax.lax.scan(
+        body,
+        x,
+        (
+            params["dec_layers"],
+            cache["self"]["k"],
+            cache["self"]["v"],
+            cache["cross"]["k"],
+            cache["cross"]["v"],
+        ),
+    )
+    x = common.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum("bd,vd->bv", x, params["embed"], preferred_element_type=jnp.float32)
+    logits = common.mask_padded_logits(logits, cfg.vocab)
+    new_cache = {
+        "self": {"k": new_self["k"], "v": new_self["v"]},
+        "cross": cache["cross"],
+    }
+    return sharding.constraint(logits, "batch", "vocab"), new_cache

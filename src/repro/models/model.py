@@ -1,0 +1,122 @@
+"""Unified model API over all families.
+
+  * ``param_defs(cfg)`` / ``abstract_params`` / ``init_params`` / ``param_specs``
+  * ``loss_fn(params, batch, cfg)``         — next-token CE (modality-aware)
+  * ``prefill(params, batch, cfg)``         — returns (last-token logits, cache)
+  * ``decode_step(params, cache, token, pos, cfg)``
+  * ``init_cache(cfg, batch, seq_len)``     — decode-cache pytree (allocation-free
+                                              via jax.eval_shape for the dry-run)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models import common, encdec, transformer
+from repro.models.config import ModelConfig
+
+
+def param_defs(cfg: ModelConfig):
+    if cfg.encdec:
+        return encdec.model_defs(cfg)
+    return transformer.model_defs(cfg)
+
+
+def abstract_params(cfg: ModelConfig):
+    return common.materialize(param_defs(cfg), "abstract", cfg.jax_dtype)
+
+
+def init_params(cfg: ModelConfig, rng: jax.Array):
+    return common.materialize(param_defs(cfg), "init", cfg.jax_dtype, rng)
+
+
+def param_specs(cfg: ModelConfig):
+    """PartitionSpec tree under the active sharding rules."""
+    return common.param_partition_specs(param_defs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Training loss
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: ModelConfig) -> jax.Array:
+    """Mean next-token cross-entropy.  batch keys per family:
+
+      * dense/moe/ssm/hybrid: tokens (B, S), labels (B, S)
+      * vlm:   + patches (B, P, D) stub embeddings (labels cover text only)
+      * audio: frames (B, S_enc, D) stub embeddings + tokens/labels (B, S_dec)
+    """
+    if cfg.encdec:
+        enc = encdec.encode(params, batch["frames"], cfg, train=True)
+        x, _ = encdec.dec_forward(params, batch["tokens"], enc, cfg, train=True)
+        if sharding.active_rule("bf16_grad"):
+            x = common.grad_dtype_barrier(x)
+        return common.chunked_ce_loss(x, params["embed"], batch["labels"], valid_vocab=cfg.vocab)
+
+    x, _ = transformer.forward(params, batch, cfg, train=True)
+    if sharding.active_rule("bf16_grad"):
+        x = common.grad_dtype_barrier(x)
+    labels = batch["labels"]
+    if cfg.frontend == "vision":
+        # hidden states include the patch prefix; ignore it in the loss
+        pad = jnp.full(
+            (labels.shape[0], cfg.num_patches), -1, labels.dtype
+        )
+        labels = jnp.concatenate([pad, labels], axis=1)
+    return common.chunked_ce_loss(x, params["embed"], labels, valid_vocab=cfg.vocab)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    if cfg.encdec:
+        half = seq_len // 2
+        return encdec.init_cache(cfg, batch, dec_len=half, enc_len=half)
+    if cfg.frontend == "vision":
+        seq_len = seq_len  # patches are part of seq_len budget already
+    return transformer.init_cache(cfg, batch, seq_len)
+
+
+def pad_cache(cache, prefill_len: int, max_len: int):
+    """Grow linear (non-ring) KV caches from prefill_len to max_len slots."""
+    def f(x):
+        if x.ndim >= 3 and x.shape[-3] == prefill_len:
+            pad = [(0, 0)] * x.ndim
+            pad[-3] = (0, max_len - prefill_len)
+            return jnp.pad(x, pad)
+        return x
+
+    return jax.tree.map(f, cache)
+
+
+def prefill(params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    """Process the full prompt; returns (last-token logits (B, V), cache)."""
+    if cfg.encdec:
+        enc = encdec.encode(params, batch["frames"], cfg)
+        x, cache = encdec.dec_forward(
+            params, batch["tokens"], enc, cfg, return_cache=True
+        )
+    else:
+        x, cache = transformer.forward(params, batch, cfg, return_cache=True)
+    last = x[:, -1]
+    logits = jnp.einsum(
+        "bd,vd->bv", last, params["embed"], preferred_element_type=jnp.float32
+    )
+    logits = common.mask_padded_logits(logits, cfg.vocab)
+    return sharding.constraint(logits, "batch", "vocab"), cache
+
+
+def decode_step(params, cache, token: jax.Array, pos, cfg: ModelConfig):
+    """One new token (B,) at position ``pos`` -> (logits (B, V), new cache)."""
+    if cfg.encdec:
+        return encdec.decode(params, cache, token, pos, cfg)
+    return transformer.decode(params, cache, token, pos, cfg)

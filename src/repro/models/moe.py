@@ -1,0 +1,154 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based dispatch.
+
+Dispatch uses sort/gather/scatter (static shapes, no one-hot dispatch
+einsums), so compiled HLO FLOPs stay ≈ active-expert FLOPs × capacity
+factor — this matters for the roofline analysis (DESIGN.md §4).
+
+Tokens are routed *locally* per data shard (routing is per-token, hence
+embarrassingly data-parallel); expert weights are TP-sharded on the ff axis
+and FSDP-sharded on d_model, exactly like dense MLP weights.  An
+expert-parallel (all-to-all) variant is explored in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models import common
+from repro.models.config import ModelConfig
+
+ParamDef = common.ParamDef
+
+
+def moe_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    gated = cfg.mlp in ("swiglu", "geglu")
+    defs = {
+        "router": ParamDef((d, e), ("dmodel", None), dtype="float32"),
+        "w_up": ParamDef((e, d, f), (None, "dmodel", "ff")),
+        "w_down": ParamDef((e, f, d), (None, "ff", "dmodel")),
+    }
+    if gated:
+        defs["w_gate"] = ParamDef((e, d, f), (None, "dmodel", "ff"))
+    return defs
+
+
+def _expert_ffn_batched(p, x, cfg: ModelConfig):
+    """Batched expert MLP. x: (B, E, C, D) -> (B, E, C, D).
+
+    Weights are explicitly gathered over the FSDP (dmodel) shard at the use
+    site (see transformer._gathered): contracting against dmodel-sharded
+    weights would otherwise all-reduce the large expert activations.
+    """
+    g = lambda w: sharding.constraint(w, "experts", None, "ff")
+    gd = lambda w: sharding.constraint(w, "experts", "ff", None)
+    up = jnp.einsum("becd,edf->becf", x, g(p["w_up"]))
+    if cfg.mlp == "swiglu":
+        gate = jnp.einsum("becd,edf->becf", x, g(p["w_gate"]))
+        h = common.silu(gate) * up
+    elif cfg.mlp == "geglu":
+        gate = jnp.einsum("becd,edf->becf", x, g(p["w_gate"]))
+        h = jax.nn.gelu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    h = sharding.constraint(h, "batch", "experts", None, "ff")
+    return jnp.einsum("becf,efd->becd", h, gd(p["w_down"]))
+
+
+def moe_layer(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D).
+
+    Dispatch is PER BATCH ROW: every op (top-k, sort, gather, scatter,
+    batched expert matmul) keeps the leading B axis, so the layer shards
+    cleanly over the data axis with zero cross-row communication — flattening
+    (B, S) -> T would force a global sort and replicate the dispatch buffers
+    across the mesh (catastrophic for a 314B MoE, see EXPERIMENTS.md).
+    Per-row capacity = ceil(S·k/E · capacity_factor); overflow tokens drop
+    (GShard semantics).
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.topk
+
+    # the f32 router cast must not leak f32 cotangents into the residual
+    # stream (doubles every backward collective) — see §Perf/bf16grad
+    xr = common.grad_dtype_barrier(x) if sharding.active_rule("bf16_grad") else x
+    logits = jnp.einsum(
+        "bsd,de->bse", xr.astype(jnp.float32), p["router"].astype(jnp.float32)
+    )
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, k)  # (B, S, k)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+
+    # (token-in-row, slot) pairs sorted by expert, per row
+    eid = idx.reshape(b, s * k)
+    tid = jnp.broadcast_to(jnp.repeat(jnp.arange(s), k)[None], (b, s * k))
+    wgt = w.reshape(b, s * k)
+    order = jnp.argsort(eid, axis=-1)
+    eid_s = jnp.take_along_axis(eid, order, axis=-1)
+    tid_s = jnp.take_along_axis(tid, order, axis=-1)
+    w_s = jnp.take_along_axis(wgt, order, axis=-1)
+
+    # position of each entry within its expert (per row)
+    counts = jnp.sum(
+        (idx[..., None] == jnp.arange(e)).reshape(b, s * k, e), axis=1
+    )  # (B, E)
+    start = jnp.cumsum(counts, axis=-1) - counts  # exclusive prefix (B, E)
+    pos = jnp.arange(s * k)[None, :] - jnp.take_along_axis(start, eid_s, axis=-1)
+
+    cap = int(s * k / e * cfg.capacity_factor)
+    cap = max(k, -(-cap // 4) * 4) if s > 1 else max(1, k // e + 1)
+    keep = pos < cap
+    # slot id of each kept (sorted) entry; kept slots are strictly increasing,
+    # which lets every data movement below be a batched GATHER — scatters
+    # with explicit index arrays defeat GSPMD's batch-dim detection and
+    # replicate the dispatch buffers across the mesh.
+    slot = jnp.where(keep, eid_s * cap + pos, e * cap)
+
+    # invert: which sorted entry fills slot s_idx (exact-match gather)
+    slot_ids = jnp.arange(e * cap)
+    entry_of_slot = jax.vmap(lambda sl: jnp.searchsorted(sl, slot_ids))(slot)
+    entry_of_slot = jnp.minimum(entry_of_slot, s * k - 1)  # (B, E*cap)
+    slot_hit = jnp.take_along_axis(slot, entry_of_slot, axis=-1) == slot_ids[None]
+
+    tok_of_slot = jnp.take_along_axis(tid_s, entry_of_slot, axis=-1)  # (B, E*cap)
+    expert_in = jnp.take_along_axis(x, tok_of_slot[..., None], axis=1)
+    # NB: zero literal must match dtype — a python 0.0 would promote the
+    # whole expert path to f32 and double every collective.
+    expert_in = jnp.where(slot_hit[..., None], expert_in, jnp.zeros((), x.dtype))
+    expert_in = expert_in.reshape(b, e, cap, d)
+    expert_in = sharding.constraint(expert_in, "batch", "experts", None, "dmodel_act")
+    expert_out = _expert_ffn_batched(p, expert_in, cfg).reshape(b, e * cap, d)
+
+    # route outputs back: sorted entry -> its slot -> original (token, k) lane
+    out_sorted = jnp.take_along_axis(
+        expert_out, jnp.minimum(slot, e * cap - 1)[..., None], axis=1
+    )  # (B, S*k, D)
+    out_sorted = out_sorted * (w_s * keep).astype(x.dtype)[..., None]
+    inv_order = jnp.argsort(order, axis=-1)  # sorted position of entry (t*k + j)
+    contrib = jnp.take_along_axis(out_sorted, inv_order[..., None], axis=1)
+    return jnp.sum(contrib.reshape(b, s, k, d), axis=2)
+
+
+def moe_layer_ref(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Dense-dispatch oracle (no capacity drops): loops experts, masks tokens."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.topk)
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    y = jnp.zeros_like(xf)
+    for e in range(cfg.n_experts):
+        pe = {kk: (vv[e] if kk != "router" else vv) for kk, vv in p.items()}
+        he = _expert_ffn_batched(
+            {kk: vv[None] for kk, vv in pe.items() if kk != "router"},
+            xf[None, None],
+            cfg,
+        )[0, 0]
+        weight = jnp.sum(jnp.where(idx == e, w, 0.0), axis=-1)  # (T,)
+        y = y + he * weight.astype(xf.dtype)[:, None]
+    return y.reshape(b, s, d)

@@ -1,0 +1,215 @@
+"""Mamba-2 (SSD — state-space duality) block: chunked train/prefill scan and
+O(1)-state decode step.  [arXiv:2405.21060]
+
+The chunked algorithm splits the sequence into chunks of Q tokens:
+intra-chunk terms are a masked attention-like matmul (runs on the MXU),
+inter-chunk terms pass a (H, P, N) state through a `lax.scan` — this is the
+TPU-native mapping of the paper's "quadratic mode within chunks, linear
+mode across chunks".
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models import common
+from repro.models.config import ModelConfig
+
+ParamDef = common.ParamDef
+
+
+def ssm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    """Projections are split per segment (z / x / BC / dt) so the inner dim
+    column-shards over the model axis (Megatron-style); the fused layout of
+    the reference implementation cannot shard its mixed channels and would
+    replicate (B, L, 2·di+2N+H) activations across all model shards."""
+    d = cfg.d_model
+    di = cfg.ssm_dinner
+    n = cfg.ssm_state
+    h = cfg.ssm_nheads
+    cw = cfg.conv_width
+    return {
+        "w_z": ParamDef((d, di), ("dmodel", "ssm_inner")),
+        "w_x": ParamDef((d, di), ("dmodel", "ssm_inner")),
+        "w_bc": ParamDef((d, 2 * n), ("dmodel", None)),   # shared across heads
+        "w_dt": ParamDef((d, h), ("dmodel", "ssm_heads")),
+        "conv_x": ParamDef((cw, di), (None, "ssm_inner"), scale=1.0),
+        "conv_bc": ParamDef((cw, 2 * n), (None, None), scale=1.0),
+        "conv_b_x": ParamDef((di,), ("ssm_inner",), init="zeros"),
+        "conv_b_bc": ParamDef((2 * n,), (None,), init="zeros"),
+        "a_log": ParamDef((h,), ("ssm_heads",), init="zeros", dtype="float32"),
+        "d_skip": ParamDef((h,), ("ssm_heads",), init="ones", dtype="float32"),
+        "dt_bias": ParamDef((h,), ("ssm_heads",), init="zeros", dtype="float32"),
+        "norm": common.rms_norm_def(di),
+        "out_proj": ParamDef((di, d), ("ssm_inner", "dmodel")),
+    }
+
+
+def _project(p, x: jax.Array, cfg: ModelConfig):
+    """x (..., D) -> (z, xs, B, C, dt) with inner dims model-sharded.
+
+    Weights are gathered over the FSDP shard at the use site (see
+    transformer._gathered).
+    """
+    n = cfg.ssm_state
+    g = lambda w, ax: sharding.constraint(w, None, ax)
+    z = sharding.constraint(x @ g(p["w_z"], "ssm_inner"), "batch", None, "ssm_inner")
+    xs = sharding.constraint(x @ g(p["w_x"], "ssm_inner"), "batch", None, "ssm_inner")
+    bc = x @ g(p["w_bc"], None)
+    dt = sharding.constraint(x @ g(p["w_dt"], "ssm_heads"), "batch", None, "ssm_heads")
+    return z, xs, bc[..., :n], bc[..., n:], dt
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv via explicit shifts. x: (B, L, C), w: (W, C)."""
+    cw = w.shape[0]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for k in range(cw):
+        shift = cw - 1 - k
+        xk = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, : x.shape[1]]
+        out = out + xk.astype(jnp.float32) * w[k].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssm_forward(p, x: jax.Array, cfg: ModelConfig, *, return_cache: bool = False):
+    """Chunked SSD forward. x: (B, L, D) -> (B, L, D).  L % chunk == 0.
+
+    With ``return_cache=True`` also returns the decode cache: the final SSM
+    state and the conv ring tail, so decoding can continue at position L.
+    """
+    bsz, l, _ = x.shape
+    di, n, h, pdim = cfg.ssm_dinner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    q = min(cfg.ssm_chunk, l)
+    assert l % q == 0, (l, q)
+    nc = l // q
+
+    z, xs, b_, c_, dt = _project(p, x, cfg)
+    conv_x_in = xs
+    conv_bc_in = jnp.concatenate([b_, c_], axis=-1)
+    xs = common.silu(_causal_conv(conv_x_in, p["conv_x"], p["conv_b_x"]))
+    bc = common.silu(_causal_conv(conv_bc_in, p["conv_bc"], p["conv_b_bc"]))
+    b_, c_ = bc[..., :n], bc[..., n:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, L, H)
+    a = -jnp.exp(p["a_log"])  # (H,)
+    da = dt * a  # (B, L, H) negative
+
+    xh = xs.reshape(bsz, l, h, pdim).astype(jnp.float32)
+    xh = sharding.constraint(xh, "batch", None, "ssm_heads", None)
+    bc = b_.astype(jnp.float32)  # (B, L, N) single group
+    cc = c_.astype(jnp.float32)
+
+    # chunk views — heads sharded over the model axis (DESIGN.md §4): the
+    # intra-chunk (B, nc, Q, Q, H) decay/score tensors are the SSD memory
+    # hot-spot and must not replicate across model shards.
+    shard_h = lambda t: sharding.constraint(t, "batch", None, None, "ssm_heads")
+    da_c = shard_h(da.reshape(bsz, nc, q, h))
+    dt_c = shard_h(dt.reshape(bsz, nc, q, h))
+    x_c = sharding.constraint(
+        xh.reshape(bsz, nc, q, h, pdim), "batch", None, None, "ssm_heads", None
+    )
+    b_c = bc.reshape(bsz, nc, q, n)
+    c_c = cc.reshape(bsz, nc, q, n)
+
+    cum = jnp.cumsum(da_c, axis=2)  # (B, nc, Q, H) inclusive
+    total = cum[:, :, -1:, :]  # (B, nc, 1, H)
+
+    # ---- intra-chunk (quadratic within chunk) ----------------------------
+    # scores[i, j] = (C_i · B_j) · exp(cum_i - cum_j) · dt_j  for i >= j
+    cb = jnp.einsum("bcin,bcjn->bcij", c_c, b_c)  # (B, nc, Q, Q)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B, nc, Qi, Qj, H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    # mask the exponent (not the result): exp of masked entries would be inf
+    # and poison the backward pass through the where.
+    seg = jnp.where(mask[None, None, :, :, None], seg, -jnp.inf)
+    decay = jnp.exp(seg)
+    scores = cb[..., None] * decay * dt_c[:, :, None, :, :]  # (B,nc,Qi,Qj,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, x_c)
+    y_intra = sharding.constraint(y_intra, "batch", None, None, "ssm_heads", None)
+
+    # ---- chunk states + inter-chunk scan ----------------------------------
+    # state contribution of chunk: sum_j exp(total - cum_j)·dt_j·B_j ⊗ x_j
+    w_j = jnp.exp(total - cum) * dt_c  # (B, nc, Q, H)
+    states = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", w_j, b_c, x_c)  # (B,nc,H,N,P)
+
+    chunk_decay = jnp.exp(total[:, :, 0, :])  # (B, nc, H)
+
+    def scan_body(s_prev, inp):
+        st, dec = inp  # (B,H,N,P), (B,H)
+        s_new = s_prev * dec[:, :, None, None] + st
+        return s_new, s_prev
+
+    s0 = jnp.zeros((bsz, h, n, pdim), jnp.float32)
+    s_last, s_prevs = jax.lax.scan(
+        scan_body,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)  # (B, nc, H, N, P) state BEFORE chunk
+
+    # inter-chunk output: C_i · S_prev · exp(cum_i)
+    y_inter = jnp.einsum("bcin,bchnp,bcih->bcihp", c_c, s_prevs, jnp.exp(cum))
+
+    y = (y_intra + y_inter) + p["d_skip"][None, None, :, None] * x_c.reshape(
+        bsz, nc, q, h, pdim
+    )
+    y = y.reshape(bsz, l, di).astype(x.dtype)
+
+    # gated norm + out proj (Mamba-2 block tail)
+    y = common.rms_norm(y * common.silu(z), p["norm"])
+    out = y @ sharding.constraint(p["out_proj"], "ssm_inner", None)
+    if not return_cache:
+        return out
+    cw = cfg.conv_width
+    conv_in = jnp.concatenate([conv_x_in, conv_bc_in], axis=-1)
+    conv_tail = conv_in[:, l - (cw - 1) :, :] if l >= cw - 1 else jnp.pad(
+        conv_in, ((0, 0), (cw - 1 - l, 0), (0, 0))
+    )
+    return out, {"state": s_last, "conv": conv_tail}
+
+
+def ssm_init_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    di, n, h, pdim = cfg.ssm_dinner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    conv_ch = di + 2 * n
+    return {
+        "state": jnp.zeros((batch, h, n, pdim), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def ssm_decode_step(p, x: jax.Array, cache, cfg: ModelConfig):
+    """Single-token SSD step. x: (B, D) -> (B, D), updated cache."""
+    bsz, _ = x.shape
+    di, n, h, pdim = cfg.ssm_dinner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+
+    z, xs, b_, c_, dt = _project(p, x[:, None, :], cfg)
+    z = z[:, 0]
+    conv_in = jnp.concatenate([xs, b_, c_], axis=-1)[:, 0]  # (B, C)
+    conv_w = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=-1)
+    conv_b = jnp.concatenate([p["conv_b_x"], p["conv_b_bc"]], axis=-1)
+
+    # conv ring: history (B, W-1, C) + current token
+    hist = jnp.concatenate([cache["conv"], conv_in[:, None, :]], axis=1)  # (B, W, C)
+    conv_out = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32), conv_w.astype(jnp.float32))
+    conv_out = common.silu(conv_out + conv_b.astype(jnp.float32)).astype(x.dtype)
+    new_conv = hist[:, 1:]
+
+    xs = conv_out[:, :di]
+    b_ = conv_out[:, di : di + n].astype(jnp.float32)
+    c_ = conv_out[:, di + n :].astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    a = -jnp.exp(p["a_log"])
+    dec = jnp.exp(dt * a)  # (B, H)
+
+    xh = xs.reshape(bsz, h, pdim).astype(jnp.float32)
+    state = cache["state"] * dec[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, b_, xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", c_, state) + p["d_skip"][None, :, None] * xh
+    y = y.reshape(bsz, di).astype(x.dtype)
+    y = common.rms_norm(y * common.silu(z), p["norm"])
+    return y @ p["out_proj"], {"state": state, "conv": new_conv}

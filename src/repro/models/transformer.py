@@ -1,0 +1,446 @@
+"""Decoder-only transformer assembly for all families (dense/moe/ssm/hybrid/vlm).
+
+Layers are stacked into scan *groups* following ``cfg.local_global``:
+each group is ``n_local`` sliding-window layers followed by ``n_global``
+full-attention layers (gemma3: 5+1; hymba: 15+1; uniform archs: 0+1).
+Parameters carry a leading ``n_groups`` axis and the layer stack runs as
+``lax.scan`` over groups (with an inner scan over the local stack), keeping
+HLO size O(1) in depth; training wraps group bodies in ``jax.checkpoint``.
+
+KV caches mirror the group structure:
+  * global layers: linear cache of the full sequence length;
+  * local layers: ring cache of ``window`` slots (slot = pos % window);
+  * ssm/hybrid: Mamba-2 state + conv ring.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models import common, moe, ssm
+from repro.models.config import ModelConfig
+
+ParamDef = common.ParamDef
+
+
+# ---------------------------------------------------------------------------
+# Param definitions
+# ---------------------------------------------------------------------------
+
+
+def attn_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    defs = {
+        "wq": ParamDef((d, h * hd), ("dmodel", "attn_flat")),
+        "wk": ParamDef((d, kv * hd), ("dmodel", "attn_flat")),
+        "wv": ParamDef((d, kv * hd), ("dmodel", "attn_flat")),
+        "wo": ParamDef((h * hd, d), ("attn_flat", "dmodel")),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = common.rms_norm_def(hd)
+        defs["k_norm"] = common.rms_norm_def(hd)
+    return defs
+
+
+def mlp_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d, f = cfg.d_model, cfg.d_ff
+    defs = {
+        "w_up": ParamDef((d, f), ("dmodel", "ff")),
+        "w_down": ParamDef((f, d), ("ff", "dmodel")),
+    }
+    if cfg.mlp in ("swiglu", "geglu"):
+        defs["w_gate"] = ParamDef((d, f), ("dmodel", "ff"))
+    return defs
+
+
+def layer_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    if cfg.family == "ssm":
+        return {"ln1": common.rms_norm_def(d), "ssm": ssm.ssm_defs(cfg)}
+    defs: Dict[str, Any] = {"ln1": common.rms_norm_def(d), "attn": attn_defs(cfg)}
+    if cfg.family == "hybrid":
+        defs["ssm"] = ssm.ssm_defs(cfg)
+        defs["attn_out_norm"] = common.rms_norm_def(d)
+        defs["ssm_out_norm"] = common.rms_norm_def(d)
+    defs["ln2"] = common.rms_norm_def(d)
+    defs["mlp"] = moe.moe_defs(cfg) if cfg.family == "moe" else mlp_defs(cfg)
+    if cfg.post_norm:
+        defs["post_ln1"] = common.rms_norm_def(d)
+        defs["post_ln2"] = common.rms_norm_def(d)
+    return defs
+
+
+def _stack(defs, n: int):
+    return jax.tree.map(
+        lambda p: ParamDef((n,) + p.shape, (None,) + p.axes, p.init, p.scale, p.dtype),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def model_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    n_local, n_global = cfg.group_pattern
+    group: Dict[str, Any] = {}
+    if n_local:
+        group["local"] = _stack(layer_defs(cfg), n_local)
+    group["global"] = _stack(layer_defs(cfg), n_global)
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((cfg.padded_vocab, cfg.d_model), ("vocab", "dmodel"), scale=1.0),
+        "groups": _stack(group, cfg.n_groups),
+        "final_norm": common.rms_norm_def(cfg.d_model),
+    }
+    if cfg.pos == "learned":
+        defs["pos_embed"] = ParamDef((32768, cfg.d_model), (None, "dmodel"), scale=1.0)
+    if cfg.frontend == "vision":
+        defs["vision_proj"] = ParamDef((cfg.d_model, cfg.d_model), ("dmodel", "dmodel_act"))
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def _gathered(w, *axes):
+    """FSDP weight gather: drop the dmodel shard at the use site so GSPMD
+    all-gathers the (small) weights once per layer instead of all-reducing
+    the (large) partial-sum activations of the contraction."""
+    return sharding.constraint(w, *axes)
+
+
+def _qkv(p, h_in, cfg: ModelConfig, positions):
+    b, s, _ = h_in.shape
+    hn, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = sharding.constraint(h_in @ _gathered(p["wq"], None, "attn_flat"), "batch", None, "attn_flat")
+    k = sharding.constraint(h_in @ _gathered(p["wk"], None, "attn_flat"), "batch", None, "attn_flat")
+    v = sharding.constraint(h_in @ _gathered(p["wv"], None, "attn_flat"), "batch", None, "attn_flat")
+    q = q.reshape(b, s, hn, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = common.rms_norm(q, p["q_norm"])
+        k = common.rms_norm(k, p["k_norm"])
+    if cfg.pos == "rope":
+        q = common.rope(q, positions, cfg.rope_theta)
+        k = common.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(p, x, cfg: ModelConfig, *, window, positions):
+    """Full attention sub-block for train/prefill. Returns (out, (k, v)).
+
+    With the ``attn_tp`` rule active (EXPERIMENTS.md §Perf iteration 1) the
+    KV heads are replicated across the model axis and expanded to the full
+    query-head count, so every attention tile is head-local (Megatron-style
+    GQA tensor parallelism, heads padded when H % 16 != 0).  Without it,
+    non-divisible head counts make GSPMD shard the head_dim contraction and
+    ALL-REDUCE every (bq × bk) logits tile — the dominant collective term of
+    the baseline.
+    """
+    q, k, v = _qkv(p, x, cfg, positions)
+    cache_kv = (k, v)
+    if sharding.active_rule("attn_tp"):
+        g = cfg.n_heads // cfg.n_kv_heads
+        if g > 1:
+            k = jnp.repeat(k, g, axis=2)
+            v = jnp.repeat(v, g, axis=2)
+        q = sharding.constraint(q, "batch", None, "heads_tp", None)
+        k = sharding.constraint(k, "batch", None, "heads_tp", None)
+        v = sharding.constraint(v, "batch", None, "heads_tp", None)
+    o = common.blockwise_attention(
+        q, k, v, causal=True, window=window, blk_q=cfg.attn_blk, blk_k=cfg.attn_blk
+    )
+    b, s, _, _ = o.shape
+    o = sharding.constraint(o, "batch", None, "heads_tp", None)
+    out = o.reshape(b, s, -1) @ _gathered(p["wo"], "attn_flat", None)
+    return sharding.constraint(out, "batch", None, "dmodel_act"), cache_kv
+
+
+def attention_decode(p, x, cache, cfg: ModelConfig, *, window, pos):
+    """Single-token attention. x: (B, D). cache: {"k","v"} (B, C, KV, hd)."""
+    b, _ = x.shape
+    hn, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, 1, hn, hd)
+    k_new = (x @ p["wk"]).reshape(b, 1, kv, hd)
+    v_new = (x @ p["wv"]).reshape(b, 1, kv, hd)
+    if cfg.qk_norm:
+        q = common.rms_norm(q, p["q_norm"])
+        k_new = common.rms_norm(k_new, p["k_norm"])
+    if cfg.pos == "rope":
+        pvec = jnp.full((b, 1), pos, jnp.int32)
+        q = common.rope(q, pvec, cfg.rope_theta)
+        k_new = common.rope(k_new, pvec, cfg.rope_theta)
+
+    c = cache["k"].shape[1]
+    slot = pos % c if window is not None else pos  # ring for local layers
+    k_c = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v_c = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+
+    idx = jnp.arange(c)
+    if window is not None:
+        # slot i holds the most recent position t <= pos with t % C == i
+        kv_pos = pos - ((pos - idx) % c)
+    else:
+        kv_pos = idx
+    kv_pos = jnp.broadcast_to(kv_pos[None, :], (b, c))
+
+    o = common.decode_gqa_attention(
+        q[:, 0], k_c, v_c, kv_pos, pos, window=window
+    )
+    return o.reshape(b, -1) @ p["wo"], {"k": k_c, "v": v_c}
+
+
+def mlp_block(p, x, cfg: ModelConfig):
+    up = sharding.constraint(x @ _gathered(p["w_up"], None, "ff"), "batch", None, "ff")
+    if cfg.mlp == "swiglu":
+        h = common.silu(sharding.constraint(x @ _gathered(p["w_gate"], None, "ff"), "batch", None, "ff")) * up
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(sharding.constraint(x @ _gathered(p["w_gate"], None, "ff"), "batch", None, "ff")) * up
+    else:
+        h = jax.nn.gelu(up)
+    return sharding.constraint(h @ _gathered(p["w_down"], "ff", None), "batch", None, "dmodel_act")
+
+
+def layer_forward(p, x, cfg: ModelConfig, *, window, positions, want_cache=False):
+    """One layer, train/prefill mode. Returns (x, cache_entry).
+
+    The cache entry mirrors the decode-cache structure of :func:`init_cache`
+    ({"attn": {"k","v"}} / {"ssm": ...}); attention caches are trimmed to the
+    window later by :func:`_prefill_cache_from`.
+    """
+    if cfg.family == "ssm":
+        h_in = common.rms_norm(x, p["ln1"])
+        if want_cache:
+            y, sc = ssm.ssm_forward(p["ssm"], h_in, cfg, return_cache=True)
+            return x + y, {"ssm": sc}
+        return x + ssm.ssm_forward(p["ssm"], h_in, cfg), 0
+
+    h_in = common.rms_norm(x, p["ln1"])
+    attn_out, (k, v) = attention_block(p["attn"], h_in, cfg, window=window, positions=positions)
+    cache = {"attn": {"k": k, "v": v}} if want_cache else 0
+    if cfg.family == "hybrid":
+        if want_cache:
+            ssm_out, sc = ssm.ssm_forward(p["ssm"], h_in, cfg, return_cache=True)
+            cache["ssm"] = sc
+        else:
+            ssm_out = ssm.ssm_forward(p["ssm"], h_in, cfg)
+        mixed = 0.5 * (
+            common.rms_norm(attn_out, p["attn_out_norm"])
+            + common.rms_norm(ssm_out, p["ssm_out_norm"])
+        )
+    else:
+        mixed = attn_out
+    if cfg.post_norm:
+        mixed = common.rms_norm(mixed, p["post_ln1"])
+    x = x + mixed
+
+    h2 = common.rms_norm(x, p["ln2"])
+    if cfg.family == "moe":
+        m = moe.moe_layer(p["mlp"], h2, cfg)
+    else:
+        m = mlp_block(p["mlp"], h2, cfg)
+    if cfg.post_norm:
+        m = common.rms_norm(m, p["post_ln2"])
+    return x + m, cache
+
+
+def layer_decode(p, x, cache, cfg: ModelConfig, *, window, pos):
+    """One layer, single-token decode. x: (B, D)."""
+    if cfg.family == "ssm":
+        y, new = ssm.ssm_decode_step(p["ssm"], common.rms_norm(x, p["ln1"]), cache["ssm"], cfg)
+        return x + y, {"ssm": new}
+
+    h_in = common.rms_norm(x, p["ln1"])
+    attn_out, new_attn = attention_decode(p["attn"], h_in, cache["attn"], cfg, window=window, pos=pos)
+    new_cache = {"attn": new_attn}
+    if cfg.family == "hybrid":
+        ssm_out, new_ssm = ssm.ssm_decode_step(p["ssm"], h_in, cache["ssm"], cfg)
+        new_cache["ssm"] = new_ssm
+        mixed = 0.5 * (
+            common.rms_norm(attn_out, p["attn_out_norm"])
+            + common.rms_norm(ssm_out, p["ssm_out_norm"])
+        )
+    else:
+        mixed = attn_out
+    if cfg.post_norm:
+        mixed = common.rms_norm(mixed, p["post_ln1"])
+    x = x + mixed
+
+    h2 = common.rms_norm(x, p["ln2"])
+    if cfg.family == "moe":
+        m = moe.moe_layer(p["mlp"], h2[:, None, :], cfg)[:, 0]
+    else:
+        m = mlp_block(p["mlp"], h2[:, None, :], cfg)[:, 0]
+    if cfg.post_norm:
+        m = common.rms_norm(m, p["post_ln2"])
+    return x + m, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cache construction
+# ---------------------------------------------------------------------------
+
+
+def _attn_cache_spec(cfg: ModelConfig, batch: int, length: int, dtype):
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, length, kv, hd), dtype),
+        "v": jnp.zeros((batch, length, kv, hd), dtype),
+    }
+
+
+def _layer_cache(cfg: ModelConfig, batch: int, *, window, seq_len: int, dtype):
+    if cfg.family == "ssm":
+        return {"ssm": ssm.ssm_init_cache(cfg, batch, dtype)}
+    length = min(window, seq_len) if window is not None else seq_len
+    c = {"attn": _attn_cache_spec(cfg, batch, length, dtype)}
+    if cfg.family == "hybrid":
+        c["ssm"] = ssm.ssm_init_cache(cfg, batch, dtype)
+    return c
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int):
+    """Decode cache pytree matching the scan-group structure."""
+    dtype = cfg.jax_dtype
+    n_local, n_global = cfg.group_pattern
+
+    def stack(tree, n):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), tree)
+
+    group: Dict[str, Any] = {}
+    if n_local:
+        group["local"] = stack(
+            _layer_cache(cfg, batch, window=cfg.window, seq_len=seq_len, dtype=dtype), n_local
+        )
+    group["global"] = stack(
+        _layer_cache(cfg, batch, window=None, seq_len=seq_len, dtype=dtype), n_global
+    )
+    return stack(group, cfg.n_groups)
+
+
+# ---------------------------------------------------------------------------
+# Full model: embed -> groups -> norm
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params, batch: Dict[str, jax.Array], cfg: ModelConfig):
+    """Token (+ modality stub) embedding. Returns (x, positions)."""
+    tokens = batch["tokens"]
+    x = params["embed"][tokens].astype(cfg.jax_dtype) * (cfg.d_model ** 0.5)
+    if cfg.frontend == "vision":
+        patches = batch["patches"].astype(cfg.jax_dtype)  # (B, P, D) stub embeds
+        px = patches @ params["vision_proj"]
+        x = jnp.concatenate([px, x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    if cfg.pos == "learned":
+        x = x + params["pos_embed"][:s][None].astype(x.dtype)
+    return sharding.constraint(x, "batch", None, "dmodel_act"), positions
+
+
+def forward(params, batch, cfg: ModelConfig, *, train: bool = False, return_cache: bool = False):
+    """Run the decoder stack. Returns (hidden (B,S,D), cache or None)."""
+    x, positions = embed_inputs(params, batch, cfg)
+    n_local, _ = cfg.group_pattern
+
+    def group_body(x, gp):
+        caches = {}
+
+        if n_local:
+            def local_body(xc, lp):
+                out, c = layer_forward(lp, xc, cfg, window=cfg.window,
+                                       positions=positions, want_cache=return_cache)
+                return out, c
+
+            x, local_c = jax.lax.scan(local_body, x, gp["local"])
+            caches["local"] = local_c
+
+        def global_body(xc, lp):
+            out, c = layer_forward(lp, xc, cfg, window=None,
+                                   positions=positions, want_cache=return_cache)
+            return out, c
+
+        x, global_c = jax.lax.scan(global_body, x, gp["global"])
+        caches["global"] = global_c
+        return x, caches
+
+    x, caches = common.remat_scan(group_body, x, params["groups"], train=train)
+    x = common.rms_norm(x, params["final_norm"])
+
+    if not return_cache:
+        return x, None
+    return x, _prefill_cache_from(caches, cfg)
+
+
+def _prefill_cache_from(caches, cfg: ModelConfig):
+    """Trim attention caches of local layers to the ring window.
+
+    Prefill length S is a multiple of the window, so positions S-W..S-1 land
+    on ring slots 0..W-1 in order — a plain tail slice is ring-aligned.
+    """
+
+    def trim(group_cache, window):
+        if window is None or "attn" not in group_cache:
+            return group_cache
+        out = dict(group_cache)
+        attn = group_cache["attn"]
+        length = attn["k"].shape[-3]
+        w = min(window, length)
+
+        def ring(x):
+            # tail positions L-w..L-1 must land on slots t % w; tail index i
+            # holds position L-w+i whose slot is (i + L) % w -> roll by L % w.
+            t = x[..., -w:, :, :]
+            return jnp.roll(t, shift=length % w, axis=-3)
+
+        out["attn"] = {"k": ring(attn["k"]), "v": ring(attn["v"])}
+        return out
+
+    out = {}
+    if "local" in caches:
+        out["local"] = trim(caches["local"], cfg.window)
+    out["global"] = trim(caches["global"], None)
+    return out
+
+
+def decode(params, cache, token: jax.Array, pos, cfg: ModelConfig):
+    """One decode step. token: (B,) int32. Returns (logits (B, V), cache)."""
+    x = params["embed"][token].astype(cfg.jax_dtype) * (cfg.d_model ** 0.5)
+    if cfg.pos == "learned":
+        x = x + params["pos_embed"][pos][None].astype(x.dtype)
+
+    n_local, _ = cfg.group_pattern
+
+    def group_body(x, scan_in):
+        gp, gc = scan_in
+        new_c = {}
+        if n_local:
+            def local_body(xc, inp):
+                lp, lc = inp
+                out, c = layer_decode(lp, xc, lc, cfg, window=cfg.window, pos=pos)
+                return out, c
+
+            x, nc = jax.lax.scan(local_body, x, (gp["local"], gc["local"]))
+            new_c["local"] = nc
+
+        def global_body(xc, inp):
+            lp, lc = inp
+            out, c = layer_decode(lp, xc, lc, cfg, window=None, pos=pos)
+            return out, c
+
+        x, ngc = jax.lax.scan(global_body, x, (gp["global"], gc["global"]))
+        new_c["global"] = ngc
+        return x, new_c
+
+    x, new_cache = jax.lax.scan(group_body, x, (params["groups"], cache))
+    x = common.rms_norm(x, params["final_norm"])
+    logits = jnp.einsum(
+        "bd,vd->bv", x, params["embed"], preferred_element_type=jnp.float32
+    )
+    logits = common.mask_padded_logits(logits, cfg.vocab)
+    return sharding.constraint(logits, "batch", "vocab"), new_cache

@@ -1,0 +1,4 @@
+"""Pure-JAX optimizers and schedules."""
+
+from repro.optim.adamw import adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedule import cosine_schedule  # noqa: F401

@@ -1,0 +1,81 @@
+"""AdamW in pure JAX (no optax dependency).
+
+Moments are stored in ``moment_dtype`` — float32 normally, bfloat16 for
+very large models (grok-1) where optimizer state dominates HBM
+(DESIGN.md §4).  Moments follow the parameter sharding.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params, moment_dtype: str = "float32") -> Dict[str, Any]:
+    dt = jnp.dtype(moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    params,
+    grads,
+    state,
+    *,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+) -> Tuple[Any, Dict[str, Any]]:
+    step = state["step"] + 1
+
+    # global-norm clip; layer-stacked leaves reduce via lax.map so the f32
+    # squares never materialise for a whole (L, ...) stack at once
+    def leaf_sq(g):
+        if g.ndim >= 2 and g.shape[0] > 1 and g.size > (1 << 26):
+            return jnp.sum(jax.lax.map(
+                lambda t: jnp.sum(jnp.square(t.astype(jnp.float32))), g))
+        return jnp.sum(jnp.square(g.astype(jnp.float32)))
+
+    gnorm = jnp.sqrt(sum(leaf_sq(g) for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32) * scale
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+        update = update + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * update
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+
+    def upd_leaf(p, g, m, v):
+        # layer-stacked leaves update via lax.map so the transient f32 copies
+        # cover one layer at a time, not the whole (L, ...) stack
+        if p.ndim >= 2 and p.shape[0] > 1 and p.size > (1 << 26):
+            return tuple(
+                jax.lax.map(lambda t: upd(*t), (p, g, m, v))
+            )
+        return upd(p, g, m, v)
+
+    out = [upd_leaf(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}

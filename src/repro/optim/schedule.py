@@ -1,0 +1,13 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    stepf = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = peak_lr * stepf / max(warmup, 1)
+    t = jnp.clip((stepf - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(stepf < warmup, warm, cos)

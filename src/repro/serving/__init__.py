@@ -1,0 +1,4 @@
+"""Multi-tenant GPU-as-a-Service serving: MFI admission + batched decode."""
+
+from repro.serving.engine import ServingEngine, Request  # noqa: F401
+from repro.serving.admission import AdmissionController  # noqa: F401

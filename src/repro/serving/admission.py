@@ -1,0 +1,92 @@
+"""Admission control: the paper's scheduler as the serving control plane.
+
+Each incoming serving workload declares a MIG profile demand (derived from
+its model's memory footprint); the controller consults a scheduling policy
+(MFI by default, any paper baseline selectable) against the simulated MIG
+cluster, commits accepted placements and releases them on completion —
+reproducing the arrival/termination churn of paper Fig. 1 inside a real
+serving loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from repro.core import mig
+from repro.core.schedulers import Scheduler, make_scheduler
+
+# model HBM footprint (GiB) -> smallest sufficient MIG profile
+_PROFILE_BY_GIB = [
+    (10, "1g.10gb"),
+    (20, "1g.20gb"),  # picked when compute demand is low; else 2g.20gb
+    (40, "3g.40gb"),
+    (80, "7g.80gb"),
+]
+
+
+def profile_for_model(param_bytes: int, kv_bytes: int = 0, compute_heavy: bool = False) -> str:
+    """Map a model's memory footprint to the smallest fitting MIG profile."""
+    gib = (param_bytes + kv_bytes) / 2**30 * 1.2  # + activation headroom
+    if gib <= 10:
+        return "1g.10gb"
+    if gib <= 20:
+        return "2g.20gb" if compute_heavy else "1g.20gb"
+    if gib <= 40:
+        return "4g.40gb" if compute_heavy else "3g.40gb"
+    return "7g.80gb"
+
+
+@dataclasses.dataclass
+class Placement:
+    workload_id: int
+    profile: str
+    gpu: int
+    anchor: int
+
+
+class AdmissionController:
+    """Places serving workloads on the MIG cluster via a scheduling policy."""
+
+    def __init__(self, num_gpus: int, policy: str = "mfi", metric: str = "blocked"):
+        self.cluster = mig.ClusterState(num_gpus)
+        self.scheduler: Scheduler = make_scheduler(policy, metric)
+        self.placements: Dict[int, Placement] = {}
+        self.accepted = 0
+        self.rejected = 0
+
+    def admit(self, workload_id: int, profile: str) -> Optional[Placement]:
+        pid = mig.PROFILE_NAMES.index(profile)
+        sel = self.scheduler.select(self.cluster, pid)
+        if sel is None:
+            self.rejected += 1
+            return None
+        gpu, anchor = sel
+        self.cluster.allocate(workload_id, pid, gpu, anchor)
+        placement = Placement(workload_id, profile, gpu, anchor)
+        self.placements[workload_id] = placement
+        self.accepted += 1
+        return placement
+
+    def release(self, workload_id: int) -> None:
+        self.placements.pop(workload_id)
+        self.cluster.release(workload_id)
+
+    @property
+    def acceptance_rate(self) -> float:
+        total = self.accepted + self.rejected
+        return self.accepted / total if total else 1.0
+
+    def stats(self) -> Dict[str, float]:
+        from repro.core import fragmentation
+
+        return {
+            "accepted": self.accepted,
+            "rejected": self.rejected,
+            "acceptance_rate": self.acceptance_rate,
+            "active_gpus": self.cluster.active_gpus,
+            "used_slices": self.cluster.used_mem_slices,
+            "frag_severity": fragmentation.cluster_fragmentation(
+                self.cluster.occupancy_matrix(), self.scheduler.metric
+            ),
+        }

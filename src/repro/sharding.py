@@ -1,0 +1,97 @@
+"""Logical-axis sharding rules (MaxText-style), resolved against the mesh.
+
+Models annotate parameters and activations with *logical* axis names
+("batch", "ff", "heads", ...).  The launcher installs a rule set mapping
+logical names to mesh axes; outside a rule context every constraint is a
+no-op, so the same model code runs single-device (tests, examples) and
+multi-pod (dry-run, train/serve).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_state = threading.local()
+
+
+def _rules() -> Optional[Dict[str, MeshAxes]]:
+    return getattr(_state, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Dict[str, MeshAxes]):
+    prev = _rules()
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def active_rule(name: str):
+    """Value of a rule in the active rule set (None outside a context)."""
+    rules = _rules()
+    return rules.get(name) if rules else None
+
+
+def resolve(logical_axes: Sequence[Optional[str]]) -> P:
+    """Logical axes -> PartitionSpec under the active rules."""
+    rules = _rules() or {}
+    return P(*[rules.get(a) if a is not None else None for a in logical_axes])
+
+
+def constraint(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint when rules are active; identity otherwise."""
+    if _rules() is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, resolve(logical_axes))
+
+
+# ---------------------------------------------------------------------------
+# Default rule sets (see DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+
+def default_rules(
+    *,
+    multi_pod: bool = False,
+    n_heads: int = 0,
+    n_kv_heads: int = 0,
+    model_axis: int = 16,
+    batch_shardable: bool = True,
+    shard_kv_seq: bool = False,
+    fsdp: bool = True,
+) -> Dict[str, MeshAxes]:
+    """Standard rules: batch->data(+pod), ff/vocab->model, FSDP d_model->data.
+
+    Head axes go to "model" only when divisible; otherwise head_dim (always a
+    multiple of 64 here) takes the model axis.
+    """
+    batch = (("pod", "data") if multi_pod else ("data",)) if batch_shardable else None
+    heads_div = n_heads > 0 and n_heads % model_axis == 0
+    kv_div = n_kv_heads > 0 and n_kv_heads % model_axis == 0
+    return {
+        "batch": batch,
+        "seq": None,
+        "kv_seq": "data" if shard_kv_seq else None,
+        "vocab": "model",
+        "ff": "model",
+        "dmodel": "data" if fsdp else None,  # FSDP weight shard (gathered per layer)
+        "dmodel_act": None,                  # activations keep d_model replicated
+        "heads": "model" if heads_div else None,
+        "head_dim": None if heads_div else "model",
+        "kv_heads": "model" if kv_div else None,
+        "kv_head_dim": None if kv_div else "model",
+        "experts": None,       # experts replicated; TP inside experts via "ff"
+        "ssm_inner": "model",  # SSD inner channels (head-aligned column shard)
+        "ssm_heads": "model",
+        "ssm_state": None,
+        "conv": None,
+    }

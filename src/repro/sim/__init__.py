@@ -1,0 +1,4 @@
+"""Monte-Carlo online evaluation of MIG scheduling (paper §VI)."""
+
+from repro.sim.distributions import DISTRIBUTIONS, sample_profiles  # noqa: F401
+from repro.sim.simulator import SimConfig, SimResult, run_simulation, run_many  # noqa: F401

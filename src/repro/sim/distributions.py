@@ -1,0 +1,35 @@
+"""MIG-profile request distributions (paper Table II)."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core import mig
+
+# Probability per profile, ordered as mig.PROFILE_NAMES =
+# (7g.80gb, 4g.40gb, 3g.40gb, 2g.20gb, 1g.20gb, 1g.10gb)
+DISTRIBUTIONS: Dict[str, np.ndarray] = {
+    "uniform": np.array([1 / 6] * 6),
+    "skew-small": np.array([0.05, 0.10, 0.10, 0.20, 0.25, 0.30]),
+    "skew-big": np.array([0.30, 0.25, 0.20, 0.10, 0.10, 0.05]),
+    "bimodal": np.array([0.30, 0.15, 0.05, 0.05, 0.15, 0.30]),
+}
+
+for _name, _p in DISTRIBUTIONS.items():
+    assert abs(_p.sum() - 1.0) < 1e-9, _name
+
+
+def sample_profiles(name: str, n: int, rng: np.random.Generator) -> np.ndarray:
+    """Sample ``n`` profile ids from the named distribution."""
+    try:
+        p = DISTRIBUTIONS[name]
+    except KeyError:
+        raise ValueError(f"unknown distribution {name!r}; options {sorted(DISTRIBUTIONS)}")
+    return rng.choice(mig.NUM_PROFILES, size=n, p=p)
+
+
+def mean_mem_demand(name: str) -> float:
+    """Expected memory-slice demand per request under the distribution."""
+    return float(DISTRIBUTIONS[name] @ mig.PROFILE_MEM)

@@ -1,0 +1,113 @@
+"""Unit tests for the MIG hardware model (paper Table I semantics)."""
+
+import numpy as np
+import pytest
+
+from repro.core import mig
+
+
+PID = {name: i for i, name in enumerate(mig.PROFILE_NAMES)}
+
+
+class TestProfiles:
+    def test_table_i(self):
+        spec = {
+            "7g.80gb": (7, 7, (0,)),
+            "4g.40gb": (4, 4, (0,)),
+            "3g.40gb": (3, 4, (0, 4)),
+            "2g.20gb": (2, 2, (0, 2, 4)),
+            "1g.20gb": (1, 2, (0, 2, 4, 6)),
+            "1g.10gb": (1, 1, (0, 1, 2, 3, 4, 5, 6)),
+        }
+        for name, (comp, mem, anchors) in spec.items():
+            p = mig.PROFILE_BY_NAME[name]
+            assert p.compute == comp
+            assert p.mem == mem
+            assert p.anchors == anchors
+
+    def test_placement_table_has_18_rows(self):
+        assert mig.NUM_PLACEMENTS == 18
+        assert mig.PLACEMENT_MASKS.shape == (18, 8)
+        # each mask is a contiguous run of `mem` ones
+        for r in range(18):
+            mask = mig.PLACEMENT_MASKS[r]
+            mem = mig.PLACEMENT_MEM[r]
+            anchor = mig.PLACEMENT_ANCHOR[r]
+            assert mask.sum() == mem
+            assert (mask[anchor : anchor + mem] == 1).all()
+
+    def test_windows_stay_in_bounds(self):
+        for p in mig.PROFILES:
+            for a in p.anchors:
+                assert a + p.mem <= mig.NUM_MEM_SLICES
+
+
+class TestGPUState:
+    def test_allocate_release_roundtrip(self):
+        g = mig.GPUState()
+        g.allocate(1, PID["3g.40gb"], 4)
+        assert g.occupancy.tolist() == [0, 0, 0, 0, 1, 1, 1, 1]
+        assert g.free_slices == 4
+        assert g.used_compute_slices == 3
+        g.release(1)
+        assert g.occupancy.sum() == 0
+
+    def test_illegal_anchor_rejected(self):
+        g = mig.GPUState()
+        with pytest.raises(ValueError, match="illegal"):
+            g.allocate(1, PID["4g.40gb"], 4)  # 4g only anchors at 0
+
+    def test_overlap_rejected(self):
+        g = mig.GPUState()
+        g.allocate(1, PID["2g.20gb"], 2)
+        with pytest.raises(ValueError, match="overlaps"):
+            g.allocate(2, PID["4g.40gb"], 0)
+
+    def test_two_3g_coexist(self):
+        """Real-MIG property: two 3g.40gb instances fit one GPU."""
+        g = mig.GPUState()
+        g.allocate(1, PID["3g.40gb"], 0)
+        g.allocate(2, PID["3g.40gb"], 4)
+        assert g.free_slices == 0
+
+    def test_seven_1g_saturate_compute(self):
+        g = mig.GPUState()
+        for i in range(7):
+            g.allocate(i, PID["1g.10gb"], i)
+        assert g.used_compute_slices == 7
+        assert g.feasible_anchors(PID["1g.10gb"]) == []
+
+    def test_7g_excludes_everything(self):
+        g = mig.GPUState()
+        g.allocate(1, PID["7g.80gb"], 0)
+        for name, pid in PID.items():
+            assert not g.can_fit(pid), name
+
+    def test_4g_plus_3g_fit(self):
+        g = mig.GPUState()
+        g.allocate(1, PID["4g.40gb"], 0)
+        assert g.feasible_anchors(PID["3g.40gb"]) == [4]
+        g.allocate(2, PID["3g.40gb"], 4)
+        assert g.free_slices == 0
+
+
+class TestClusterState:
+    def test_metrics(self):
+        cl = mig.ClusterState(4)
+        cl.allocate(1, PID["2g.20gb"], 0, 0)
+        cl.allocate(2, PID["1g.10gb"], 2, 3)
+        assert cl.active_gpus == 2
+        assert cl.used_mem_slices == 3
+        assert cl.used_compute_slices == 3
+        cl.release(1)
+        assert cl.active_gpus == 1
+        assert cl.gpu_of(1) is None
+        assert cl.gpu_of(2) == 2
+
+    def test_occupancy_matrix(self):
+        cl = mig.ClusterState(2)
+        cl.allocate(1, PID["1g.20gb"], 1, 6)
+        occ = cl.occupancy_matrix()
+        assert occ.shape == (2, 8)
+        assert occ[0].sum() == 0
+        assert occ[1].tolist() == [0, 0, 0, 0, 0, 0, 1, 1]

@@ -1,0 +1,122 @@
+"""Tests for the fragmentation metric (Algorithm 1) incl. the paper's worked example."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import cluster as jcluster
+from repro.core import fragmentation, mig
+
+import jax.numpy as jnp
+
+PID = {name: i for i, name in enumerate(mig.PROFILE_NAMES)}
+
+
+def _occ(*slices):
+    x = np.zeros(mig.NUM_MEM_SLICES, dtype=np.int32)
+    for s in slices:
+        x[s] = 1
+    return x
+
+
+class TestPaperWorkedExample:
+    """Fig. 3a: GPU2 = {2g.20gb@0, 1g.10gb@5} -> F=16; GPU1 = {2g.20gb@2} -> F=8.
+
+    The paper's stated arithmetic (16 = 2+2+8+4 over profiles 1g.20gb, 2g.20gb,
+    3g.40gb, 4g.40gb) is reproduced by the "partial" variant (DESIGN.md §1.1).
+    """
+
+    def test_gpu2_partial(self):
+        g = mig.GPUState()
+        g.allocate(1, PID["2g.20gb"], 0)
+        g.allocate(2, PID["1g.10gb"], 5)
+        assert fragmentation.fragmentation_score(g, "partial") == 16.0
+
+    def test_gpu1_partial(self):
+        g = mig.GPUState()
+        g.allocate(1, PID["2g.20gb"], 2)
+        assert fragmentation.fragmentation_score(g, "partial") == 8.0
+
+    def test_gpu2_more_fragmented_than_gpu1_both_variants(self):
+        g2 = mig.GPUState()
+        g2.allocate(1, PID["2g.20gb"], 0)
+        g2.allocate(2, PID["1g.10gb"], 5)
+        g1 = mig.GPUState()
+        g1.allocate(1, PID["2g.20gb"], 2)
+        for metric in fragmentation.METRIC_VARIANTS:
+            assert fragmentation.fragmentation_score(
+                g2, metric
+            ) > fragmentation.fragmentation_score(g1, metric)
+
+
+class TestFragmentationProperties:
+    def test_empty_gpu_zero(self):
+        for metric in fragmentation.METRIC_VARIANTS:
+            assert fragmentation.fragmentation_score(_occ(), metric) == 0.0
+
+    def test_full_gpu_zero(self):
+        occ = np.ones(8, dtype=np.int32)
+        for metric in fragmentation.METRIC_VARIANTS:
+            assert fragmentation.fragmentation_score(occ, metric) == 0.0
+
+    def test_misplaced_1g_blocks_4g(self):
+        """Paper: 1g.10gb at index 1 prevents 4g.40gb -> positive score."""
+        occ = _occ(1)
+        for metric in fragmentation.METRIC_VARIANTS:
+            assert fragmentation.fragmentation_score(occ, metric) > 0
+
+    def test_blocked_geq_partial(self):
+        """Every partial window is also blocked."""
+        rng = np.random.default_rng(0)
+        occ = (rng.random((256, 8)) < 0.4).astype(np.int32)
+        b = fragmentation.fragmentation_scores(occ, "blocked")
+        p = fragmentation.fragmentation_scores(occ, "partial")
+        assert (b >= p).all()
+
+    def test_eligibility_gate(self):
+        """Profiles larger than the free-slice count don't contribute."""
+        # 7 of 8 slices used -> only 1g.10gb eligible; its windows are size-1
+        # (never partial), and all occupied -> blocked counts 7.
+        occ = _occ(0, 1, 2, 3, 4, 5, 6)
+        assert fragmentation.fragmentation_score(occ, "partial") == 0.0
+        assert fragmentation.fragmentation_score(occ, "blocked") == 7.0
+
+    def test_empty_gpu_defence_term(self):
+        """One occupied slice keeps 7g eligible (mem=7 <= ΔS=7): the broken
+        7g window is the empty-GPU defence (DESIGN.md §1.2)."""
+        occ = _occ(6)
+        s = fragmentation.fragmentation_score(occ, "blocked")
+        assert s >= 7.0
+
+    @given(st.lists(st.integers(0, 7), min_size=0, max_size=8))
+    @settings(max_examples=200, deadline=None)
+    def test_jnp_matches_numpy(self, slices):
+        occ = _occ(*slices)[None, :]
+        for metric in fragmentation.METRIC_VARIANTS:
+            ref = fragmentation.fragmentation_scores(occ, metric)
+            got = np.asarray(jcluster.frag_scores(jnp.asarray(occ), metric))
+            np.testing.assert_allclose(got, ref)
+
+    @given(st.lists(st.integers(0, 7), min_size=0, max_size=6))
+    @settings(max_examples=100, deadline=None)
+    def test_nonnegative_and_bounded(self, slices):
+        occ = _occ(*slices)
+        for metric in fragmentation.METRIC_VARIANTS:
+            f = fragmentation.fragmentation_score(occ, metric)
+            assert 0 <= f <= mig.PLACEMENT_MEM.sum()
+
+
+class TestDeltaF:
+    def test_delta_matches_difference(self):
+        occ = _occ(0, 1)
+        d = fragmentation.delta_f(occ, PID["2g.20gb"], 2, "blocked")
+        before = fragmentation.fragmentation_score(occ, "blocked")
+        occ2 = _occ(0, 1, 2, 3)
+        after = fragmentation.fragmentation_score(occ2, "blocked")
+        assert d == after - before
+
+    def test_infeasible_raises(self):
+        occ = _occ(0)
+        with pytest.raises(ValueError):
+            fragmentation.delta_f(occ, PID["4g.40gb"], 0)

@@ -1,0 +1,147 @@
+"""Per-kernel allclose tests: Pallas (interpret=True) vs pure-jnp oracles.
+
+Shape/dtype sweeps as required: every kernel is compared against its
+``ref.py`` oracle over a grid of shapes and dtypes, plus hypothesis
+property tests on the scheduler kernels.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import cluster as jcluster
+from repro.core import fragmentation as frag_np
+from repro.core import mig, schedulers
+from repro.kernels.fragscore import ops as frag_ops
+from repro.kernels.fragscore.ref import fragscore_ref
+from repro.kernels.decode_attention.decode_attention import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+class TestFragscoreKernel:
+    @pytest.mark.parametrize("m", [1, 7, 100, 513, 2048])
+    @pytest.mark.parametrize("metric", ["blocked", "partial"])
+    def test_matches_ref_random(self, m, metric):
+        rng = np.random.default_rng(m)
+        occ = (rng.random((m, 8)) < 0.4).astype(np.int32)
+        got = np.asarray(frag_ops.fragmentation_scores(jnp.asarray(occ), metric))
+        ref = np.asarray(fragscore_ref(jnp.asarray(occ), metric))
+        np.testing.assert_allclose(got, ref)
+
+    @pytest.mark.parametrize("dtype", [np.int32, np.float32, np.int8])
+    def test_dtypes(self, dtype):
+        rng = np.random.default_rng(0)
+        occ = (rng.random((64, 8)) < 0.5).astype(dtype)
+        got = np.asarray(frag_ops.fragmentation_scores(jnp.asarray(occ)))
+        ref = frag_np.fragmentation_scores(occ.astype(np.int32))
+        np.testing.assert_allclose(got, ref)
+
+    def test_matches_numpy_reference_exhaustive(self):
+        """All 256 possible occupancy bitmaps."""
+        occ = np.array([[int(b) for b in f"{i:08b}"] for i in range(256)], np.int32)
+        for metric in ("blocked", "partial"):
+            got = np.asarray(frag_ops.fragmentation_scores(jnp.asarray(occ), metric))
+            ref = frag_np.fragmentation_scores(occ, metric)
+            np.testing.assert_allclose(got, ref)
+
+
+class TestMFIDeltaKernel:
+    @pytest.mark.parametrize("pid", range(mig.NUM_PROFILES))
+    def test_matches_numpy_candidates(self, pid):
+        rng = np.random.default_rng(pid)
+        occ = (rng.random((257, 8)) < 0.35).astype(np.int32)
+        delta = np.asarray(frag_ops.mfi_delta_f(jnp.asarray(occ), jnp.int32(pid)))
+        gpus, anchors, deltas = schedulers.mfi_candidates(occ, pid)
+        anchor_list = list(np.asarray(jcluster.PROFILE_ANCHORS)[pid])
+        n_feasible = 0
+        for g, a, d in zip(gpus, anchors, deltas):
+            col = anchor_list.index(a)
+            np.testing.assert_allclose(delta[g, col], d, rtol=1e-6)
+            n_feasible += 1
+        assert (delta < 1e29).sum() == n_feasible
+
+    @given(st.integers(0, 255), st.integers(0, 5))
+    @settings(max_examples=80, deadline=None)
+    def test_single_gpu_property(self, bitmap, pid):
+        occ = np.array([[int(b) for b in f"{bitmap:08b}"]], np.int32)
+        delta = np.asarray(frag_ops.mfi_delta_f(jnp.asarray(occ), jnp.int32(pid)))[0]
+        prof = mig.PROFILES[pid]
+        for j, anchor in enumerate(prof.anchors):
+            window_free = occ[0, anchor : anchor + prof.mem].sum() == 0
+            if window_free:
+                expect = frag_np.delta_f(occ[0], pid, anchor)
+                np.testing.assert_allclose(delta[j], expect, rtol=1e-6)
+            else:
+                assert delta[j] > 1e29
+
+    def test_select_agrees_with_reference_scheduler(self):
+        rng = np.random.default_rng(42)
+        occ = (rng.random((128, 8)) < 0.45).astype(np.int32)
+        for pid in range(6):
+            g, a, acc = frag_ops.mfi_select(jnp.asarray(occ), jnp.int32(pid))
+            d = jcluster.mfi_select(jnp.asarray(occ), jnp.int32(pid))
+            assert bool(acc) == bool(d.accepted)
+            if bool(acc):
+                assert (int(g), int(a)) == (int(d.gpu), int(d.anchor))
+
+
+class TestDecodeAttentionKernel:
+    SHAPES = [
+        # (batch, q_heads, kv_heads, head_dim, kv_len, blk_s)
+        (2, 8, 2, 64, 300, 128),    # GQA, ragged tail block
+        (1, 8, 1, 128, 1024, 512),  # MQA (paligemma-style)
+        (3, 10, 5, 64, 77, 512),    # block larger than sequence
+        (2, 4, 4, 256, 513, 256),   # MHA, gemma3 head_dim
+        (1, 12, 4, 128, 2048, 512), # starcoder2-style ratio
+    ]
+
+    @pytest.mark.parametrize("shape", SHAPES)
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, shape, dtype):
+        b, h, kh, d, s, blk = shape
+        rng = np.random.default_rng(0)
+        q = jnp.asarray(rng.standard_normal((b, h, d)), dtype)
+        k = jnp.asarray(rng.standard_normal((b, s, kh, d)), dtype)
+        v = jnp.asarray(rng.standard_normal((b, s, kh, d)), dtype)
+        length = jnp.asarray(rng.integers(1, s + 1, size=b), jnp.int32)
+        got = decode_attention(q, k, v, length, blk_s=blk)
+        ref = decode_attention_ref(q, k, v, length=length)
+        tol = 2e-5 if dtype == jnp.float32 else 2.5e-2
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(ref, np.float32), atol=tol, rtol=tol
+        )
+
+    def test_full_length_default(self):
+        rng = np.random.default_rng(1)
+        q = jnp.asarray(rng.standard_normal((2, 4, 64)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((2, 256, 2, 64)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((2, 256, 2, 64)), jnp.float32)
+        length = jnp.full((2,), 256, jnp.int32)
+        got = decode_attention(q, k, v, length)
+        ref = decode_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+    def test_custom_scale(self):
+        rng = np.random.default_rng(2)
+        q = jnp.asarray(rng.standard_normal((1, 4, 64)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((1, 128, 2, 64)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((1, 128, 2, 64)), jnp.float32)
+        length = jnp.full((1,), 128, jnp.int32)
+        got = decode_attention(q, k, v, length, scale=0.1)
+        ref = decode_attention_ref(q, k, v, scale=0.1, length=length)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+    def test_length_one(self):
+        """Degenerate cache with a single valid entry -> output == v[0]."""
+        rng = np.random.default_rng(3)
+        q = jnp.asarray(rng.standard_normal((1, 2, 64)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((1, 128, 2, 64)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((1, 128, 2, 64)), jnp.float32)
+        length = jnp.asarray([1], jnp.int32)
+        got = decode_attention(q, k, v, length)
+        np.testing.assert_allclose(
+            np.asarray(got)[0], np.asarray(v)[0, 0], atol=1e-6, rtol=1e-6
+        )

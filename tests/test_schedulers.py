@@ -1,0 +1,180 @@
+"""Tests for MFI (Algorithm 2) and the baseline schedulers."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import cluster as jcluster
+from repro.core import fragmentation, mig, schedulers
+
+PID = {name: i for i, name in enumerate(mig.PROFILE_NAMES)}
+
+
+def _cluster_with(allocs, n=4):
+    cl = mig.ClusterState(n)
+    for wid, (pid, gpu, anchor) in enumerate(allocs):
+        cl.allocate(1000 + wid, pid, gpu, anchor)
+    return cl
+
+
+class TestBaselines:
+    def test_ff_picks_first_gpu_first_index(self):
+        cl = _cluster_with([(PID["7g.80gb"], 0, 0)])
+        sel = schedulers.FirstFit().select(cl, PID["1g.10gb"])
+        assert sel == (1, 0)
+
+    def test_rr_advances(self):
+        cl = mig.ClusterState(3)
+        rr = schedulers.RoundRobin()
+        assert rr.select(cl, PID["1g.10gb"]) == (0, 0)
+        cl.allocate(1, PID["1g.10gb"], 0, 0)
+        assert rr.select(cl, PID["1g.10gb"]) == (1, 0)
+        cl.allocate(2, PID["1g.10gb"], 1, 0)
+        assert rr.select(cl, PID["1g.10gb"]) == (2, 0)
+
+    def test_bf_picks_tightest_gpu_best_index(self):
+        # GPU0 empty; GPU1 has 4 slices used -> BF should pick GPU1, and the
+        # best-index policy places 1g.10gb at the highest feasible anchor.
+        cl = _cluster_with([(PID["4g.40gb"], 1, 0)])
+        sel = schedulers.BestFitBestIndex().select(cl, PID["1g.10gb"])
+        assert sel == (1, 6)
+
+    def test_wf_picks_emptiest_gpu(self):
+        cl = _cluster_with([(PID["4g.40gb"], 1, 0)])
+        sel = schedulers.WorstFitBestIndex().select(cl, PID["1g.10gb"])
+        assert sel == (0, 6)
+
+    def test_best_index_reserves_index0_for_4g(self):
+        """Paper §VI: 1g.10gb goes to index 6 rather than 0."""
+        cl = mig.ClusterState(1)
+        sel = schedulers.BestFitBestIndex().select(cl, PID["1g.10gb"])
+        assert sel == (0, 6)
+
+    def test_reject_when_full(self):
+        cl = _cluster_with([(PID["7g.80gb"], g, 0) for g in range(4)])
+        for name in schedulers.SCHEDULERS:
+            s = schedulers.make_scheduler(name)
+            assert s.select(cl, PID["1g.10gb"]) is None
+
+
+class TestMFI:
+    def test_accepts_when_feasible(self):
+        cl = mig.ClusterState(2)
+        sel = schedulers.MFI().select(cl, PID["3g.40gb"])
+        assert sel is not None
+        gpu, anchor = sel
+        assert anchor in mig.PROFILES[PID["3g.40gb"]].anchors
+
+    def test_selection_minimizes_delta_f(self):
+        cl = _cluster_with([(PID["2g.20gb"], 0, 0), (PID["1g.10gb"], 1, 3)])
+        mfi = schedulers.MFI()
+        sel = mfi.select(cl, PID["2g.20gb"])
+        occ = cl.occupancy_matrix()
+        gpus, anchors, deltas = schedulers.mfi_candidates(occ, PID["2g.20gb"], mfi.metric)
+        best = deltas.min()
+        # the chosen placement attains the minimum ΔF
+        chosen = [d for g, a, d in zip(gpus, anchors, deltas) if (g, a) == sel]
+        assert chosen and chosen[0] == best
+
+    def test_mfi_fills_holes_before_opening_empty_gpus(self):
+        # GPU0 has {0..3} occupied; a 3g.40gb fits the {4..7} hole exactly.
+        cl = _cluster_with([(PID["4g.40gb"], 0, 0)])
+        sel = schedulers.MFI().select(cl, PID["3g.40gb"])
+        assert sel == (0, 4)
+
+    def test_mfi_commit_matches_dry_run(self):
+        """Committing the selected placement yields exactly F + ΔF."""
+        cl = _cluster_with([(PID["1g.10gb"], 0, 2), (PID["2g.20gb"], 1, 4)])
+        mfi = schedulers.MFI()
+        occ = cl.occupancy_matrix()
+        before = fragmentation.fragmentation_scores(occ, mfi.metric).sum()
+        gpus, anchors, deltas = schedulers.mfi_candidates(occ, PID["1g.20gb"], mfi.metric)
+        k = np.lexsort((anchors, gpus, deltas))[0]
+        cl.allocate(77, PID["1g.20gb"], int(gpus[k]), int(anchors[k]))
+        after = fragmentation.fragmentation_scores(cl.occupancy_matrix(), mfi.metric).sum()
+        np.testing.assert_allclose(after - before, deltas[k])
+
+
+class TestJaxParity:
+    """The jitted cluster scheduler must agree with the numpy reference."""
+
+    @given(
+        st.lists(
+            st.tuples(st.integers(0, 5), st.integers(0, 5)), min_size=0, max_size=24
+        ),
+        st.integers(0, 5),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_mfi_select_parity(self, placements, req_pid):
+        cl = mig.ClusterState(6)
+        wid = 0
+        for pid, gpu in placements:
+            anchors = cl.gpus[gpu].feasible_anchors(pid)
+            if anchors:
+                cl.allocate(wid, pid, gpu, anchors[0])
+                wid += 1
+        occ = cl.occupancy_matrix()
+        d = jcluster.mfi_select(jnp.asarray(occ), jnp.int32(req_pid))
+        gpus, anchors, deltas = schedulers.mfi_candidates(occ, req_pid)
+        if len(gpus) == 0:
+            assert not bool(d.accepted)
+        else:
+            assert bool(d.accepted)
+            k = np.lexsort((anchors, gpus, deltas))[0]
+            assert (int(d.gpu), int(d.anchor)) == (int(gpus[k]), int(anchors[k]))
+            np.testing.assert_allclose(float(d.delta_f), deltas[k], rtol=1e-6)
+
+    def test_allocate_release_roundtrip(self):
+        occ = jnp.zeros((3, 8), dtype=jnp.int32)
+        occ1, d = jcluster.mfi_allocate(occ, jnp.int32(PID["3g.40gb"]))
+        assert bool(d.accepted)
+        occ2 = jcluster.release(occ1, d.gpu, jnp.int32(PID["3g.40gb"]), d.anchor)
+        assert bool((occ2 == occ).all())
+
+    def test_rejected_allocate_is_noop(self):
+        occ = jnp.ones((2, 8), dtype=jnp.int32)
+        occ1, d = jcluster.mfi_allocate(occ, jnp.int32(PID["1g.10gb"]))
+        assert not bool(d.accepted)
+        assert bool((occ1 == occ).all())
+
+
+class TestMFIDefrag:
+    """Beyond-paper extension: single-migration defragmentation."""
+
+    def test_migration_enables_acceptance(self):
+        from repro.core.schedulers import MFIDefrag
+
+        # GPU0: 1g.10gb at slice 1 blocks 4g.40gb@0; GPU1 full except slice 6.
+        cl = mig.ClusterState(2)
+        cl.allocate(1, PID["1g.10gb"], 0, 1)
+        cl.allocate(2, PID["4g.40gb"], 1, 0)
+        cl.allocate(3, PID["2g.20gb"], 1, 4)
+        # request 4g.40gb: plain MFI must reject (GPU0 blocked at {0..3}, GPU1 full)
+        assert schedulers.MFI().select(cl, PID["4g.40gb"]) is None
+        d = MFIDefrag()
+        sel = d.select(cl, PID["4g.40gb"])
+        assert sel is not None
+        assert d.pending_migration is not None
+        vwid, vg, va = d.pending_migration
+        assert vwid == 1  # the misplaced 1g.10gb moves
+        # applying the migration then the request must be legal
+        cl.release(vwid)
+        cl.allocate(vwid, PID["1g.10gb"], vg, va)
+        cl.allocate(9, PID["4g.40gb"], *sel)
+
+    def test_no_migration_when_feasible(self):
+        from repro.core.schedulers import MFIDefrag
+
+        cl = mig.ClusterState(2)
+        d = MFIDefrag()
+        sel = d.select(cl, PID["2g.20gb"])
+        assert sel is not None and d.pending_migration is None
+
+    def test_rejects_when_truly_full(self):
+        from repro.core.schedulers import MFIDefrag
+
+        cl = _cluster_with([(PID["7g.80gb"], g, 0) for g in range(2)], n=2)
+        assert MFIDefrag().select(cl, PID["1g.10gb"]) is None

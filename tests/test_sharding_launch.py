@@ -1,0 +1,128 @@
+"""Sharding rules + launcher tests.
+
+The multi-device lowering test runs in a SUBPROCESS so the 8-device
+XLA_FLAGS override never pollutes the main test process (smoke tests must
+see exactly 1 device, per the dry-run contract).
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding
+from repro.configs import ARCHS, ASSIGNED, LONG_CONTEXT_OK
+from repro.launch.shapes import SHAPES, batch_specs, cache_specs
+from repro.launch import hlo_analysis
+from repro.launch.dryrun import runnable
+from repro.models import model
+
+
+class TestRules:
+    def test_constraint_noop_outside_rules(self):
+        import jax.numpy as jnp
+
+        x = jnp.ones((4, 4))
+        y = sharding.constraint(x, "batch", "ff")
+        assert (y == x).all()
+
+    def test_resolve(self):
+        with sharding.use_rules({"batch": ("pod", "data"), "ff": "model"}):
+            assert sharding.resolve(("batch", None, "ff")) == P(("pod", "data"), None, "model")
+
+    def test_default_rules_head_divisibility(self):
+        r = sharding.default_rules(n_heads=32, n_kv_heads=8, model_axis=16)
+        assert r["heads"] is None or r["heads"] == "model"
+        # 32 % 16 == 0 -> heads sharded; kv 8 % 16 != 0 -> head_dim path
+        assert r["heads"] == "model"
+        assert r["kv_heads"] is None and r["kv_head_dim"] == "model"
+
+    def test_param_specs_resolve_for_all_archs(self):
+        for arch in ASSIGNED:
+            cfg = ARCHS[arch]
+            with sharding.use_rules(sharding.default_rules(
+                n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads)):
+                specs = model.param_specs(cfg)
+            import jax
+            assert all(isinstance(s, P) for s in jax.tree.leaves(
+                specs, is_leaf=lambda x: isinstance(x, P)))
+
+
+class TestShapes:
+    def test_four_shapes(self):
+        assert set(SHAPES) == {"train_4k", "prefill_32k", "decode_32k", "long_500k"}
+        assert SHAPES["long_500k"].seq_len == 524_288
+
+    def test_batch_specs_per_family(self):
+        for arch in ("qwen3-14b", "paligemma-3b", "whisper-large-v3"):
+            cfg = ARCHS[arch]
+            b = batch_specs(cfg, SHAPES["train_4k"], with_labels=True)
+            assert "tokens" in b and "labels" in b
+            total = b["tokens"].shape[1]
+            if cfg.frontend == "vision":
+                total += cfg.num_patches
+                assert "patches" in b
+            if cfg.encdec:
+                total += b["frames"].shape[1]
+            assert total == 4096  # seq budget preserved
+
+    def test_cache_specs_no_allocation(self):
+        import jax
+
+        cfg = ARCHS["gemma3-12b"]
+        c = cache_specs(cfg, SHAPES["decode_32k"])
+        for leaf in jax.tree.leaves(c):
+            assert isinstance(leaf, jax.ShapeDtypeStruct)
+
+    def test_long500k_applicability(self):
+        assert not runnable("qwen3-14b", "long_500k")
+        assert runnable("mamba2-2.7b", "long_500k")
+        assert runnable("gemma3-12b", "long_500k")
+        assert runnable("hymba-1.5b", "long_500k")
+        for a in ASSIGNED:
+            assert runnable(a, "train_4k")
+
+
+class TestHLOAnalysis:
+    def test_shape_bytes(self):
+        assert hlo_analysis._shape_bytes("f32[2,3]{1,0}") == 24
+        assert hlo_analysis._shape_bytes("bf16[128]") == 256
+        assert hlo_analysis._shape_bytes("(f32[2], s32[4])") == 24
+
+    def test_trip_weighted_scan_flops(self):
+        """End-to-end: compile a scanned matmul on 8 host devices in a
+        subprocess, assert our analysis multiplies by the trip count."""
+        code = textwrap.dedent("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            import sys, json
+            sys.path.insert(0, "src")
+            import jax, jax.numpy as jnp
+            from jax.sharding import PartitionSpec as P
+            from repro.launch.hlo_analysis import analyze
+            mesh = jax.make_mesh((2,4), ("data","model"),
+                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            def f(w, x):
+                def body(c, wi):
+                    return jnp.tanh(c @ wi), None
+                y, _ = jax.lax.scan(body, x, w)
+                return y.sum()
+            wspec = jax.ShapeDtypeStruct((6, 256, 256), jnp.float32)
+            xspec = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+            with jax.set_mesh(mesh):
+                comp = jax.jit(f, in_shardings=(P(None, "data", "model"), P("data", None))).lower(wspec, xspec).compile()
+            a = analyze(comp.as_text())
+            print(json.dumps({"flops": a.flops, "coll": a.collective_bytes}))
+        """)
+        out = subprocess.run(
+            [sys.executable, "-c", code], capture_output=True, text=True, timeout=300
+        )
+        assert out.returncode == 0, out.stderr[-2000:]
+        res = json.loads(out.stdout.strip().splitlines()[-1])
+        ideal = 2 * 6 * 64 * 256 * 256 / 8  # per device
+        assert res["flops"] == pytest.approx(ideal, rel=0.05)
+        assert res["coll"] > 0

@@ -1,0 +1,73 @@
+"""Tests for the Monte-Carlo simulator and workload distributions."""
+
+import numpy as np
+import pytest
+
+from repro.core import mig
+from repro.sim import SimConfig, distributions, run_simulation, run_many
+from repro.core.schedulers import make_scheduler
+
+
+class TestDistributions:
+    def test_all_sum_to_one(self):
+        for name, p in distributions.DISTRIBUTIONS.items():
+            assert abs(p.sum() - 1.0) < 1e-9, name
+            assert len(p) == mig.NUM_PROFILES
+
+    def test_table_ii_values(self):
+        d = distributions.DISTRIBUTIONS["skew-small"]
+        np.testing.assert_allclose(d, [0.05, 0.10, 0.10, 0.20, 0.25, 0.30])
+        d = distributions.DISTRIBUTIONS["bimodal"]
+        np.testing.assert_allclose(d, [0.30, 0.15, 0.05, 0.05, 0.15, 0.30])
+
+    def test_sampling_matches_distribution(self):
+        rng = np.random.default_rng(0)
+        s = distributions.sample_profiles("skew-small", 20000, rng)
+        freq = np.bincount(s, minlength=6) / 20000
+        np.testing.assert_allclose(freq, distributions.DISTRIBUTIONS["skew-small"], atol=0.02)
+
+    def test_unknown_name_raises(self):
+        with pytest.raises(ValueError):
+            distributions.sample_profiles("nope", 1, np.random.default_rng(0))
+
+
+class TestSimulator:
+    def test_steady_runs_and_is_deterministic(self):
+        cfg = SimConfig(num_gpus=10, offered_load=0.7, seed=3)
+        r1 = run_simulation(make_scheduler("mfi"), cfg)
+        r2 = run_simulation(make_scheduler("mfi"), cfg)
+        assert r1.acceptance_rate == r2.acceptance_rate
+        assert 0.0 < r1.acceptance_rate <= 1.0
+        assert 0.0 <= r1.utilization <= 1.0
+        assert 0 <= r1.active_gpus <= 10
+
+    def test_cumulative_traces(self):
+        cfg = SimConfig(num_gpus=10, protocol="cumulative", max_demand=1.0, seed=3)
+        r = run_simulation(make_scheduler("ff"), cfg)
+        assert r.traces is not None
+        assert len(r.traces["acceptance_rate"]) == len(cfg.demand_grid)
+        # acceptance is a ratio in [0, 1] and monotone demand grid
+        assert ((r.traces["acceptance_rate"] >= 0) & (r.traces["acceptance_rate"] <= 1)).all()
+
+    def test_conservation(self):
+        """accepted + rejected == arrived (by profile)."""
+        cfg = SimConfig(num_gpus=8, offered_load=1.2, seed=5)
+        r = run_simulation(make_scheduler("rr"), cfg)
+        arrived = r.arrivals_by_profile.sum()
+        assert arrived > 0
+        assert r.allocated_workloads + r.rejects_by_profile.sum() == arrived
+
+    def test_mfi_beats_spreading_baselines_under_load(self):
+        """Core paper claim, small-scale: MFI acceptance >= RR and WF-BI."""
+        cfg = SimConfig(num_gpus=16, offered_load=0.9, seed=11)
+        mfi = np.mean([run_simulation(make_scheduler("mfi"), cfg, seed=11 + k).acceptance_rate for k in range(3)])
+        rr = np.mean([run_simulation(make_scheduler("rr"), cfg, seed=11 + k).acceptance_rate for k in range(3)])
+        wf = np.mean([run_simulation(make_scheduler("wf-bi"), cfg, seed=11 + k).acceptance_rate for k in range(3)])
+        assert mfi >= rr
+        assert mfi >= wf
+
+    def test_run_many_aggregates(self):
+        cfg = SimConfig(num_gpus=8, offered_load=0.8, seed=0)
+        out = run_many("ff", cfg, runs=2)
+        for k in ("acceptance_rate", "allocated_workloads", "utilization", "frag_severity"):
+            assert k in out
