@@ -1,0 +1,86 @@
+"""Replica-throughput benchmark: batched JAX engine vs the Python reference.
+
+Measures both engines back-to-back on the same point — by default the
+paper-scale heavy-load point (M=100, uniform, 85% offered load) with 64
+replicas — and reports replicas/second.  The batched engine is reported
+twice: *cold* (first call, includes XLA compilation — what a one-shot
+script sees) and *steady-state* (what any sweep beyond one point sees:
+the compiled program is reused across loads, distributions and seeds,
+only shapes recompile).  The headline speedup is the steady-state number;
+the acceptance bar is >= 10x on CPU.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.sim import SimConfig, run_many
+from repro.sim.batched import run_batched
+
+
+def bench_point(policy: str, cfg: SimConfig, runs: int, py_runs: int):
+    t0 = time.perf_counter()
+    rp = run_many(policy, cfg, runs=py_runs)
+    t_python = (time.perf_counter() - t0) / py_runs  # sec / replica
+
+    t0 = time.perf_counter()
+    rb = run_batched(policy, cfg, runs=runs)
+    t_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    run_batched(policy, cfg, runs=runs)
+    t_warm = time.perf_counter() - t0
+
+    return {
+        "python_rps": 1.0 / t_python,
+        "cold_rps": runs / t_cold,
+        "warm_rps": runs / t_warm,
+        "speedup_cold": t_python * runs / t_cold,
+        "speedup_warm": t_python * runs / t_warm,
+        "acc_python": rp["acceptance_rate"],
+        "acc_batched": rb["acceptance_rate"],
+    }
+
+
+def main(runs: int = 64, num_gpus: int = 100, load: float = 0.85,
+         policy: str = "mfi", py_runs: int = 3):
+    cfg = SimConfig(
+        num_gpus=num_gpus, distribution="uniform", offered_load=load, seed=0
+    )
+    print("table,engine,policy,num_gpus,runs,replicas_per_sec,speedup")
+    r = bench_point(policy, cfg, runs, py_runs)
+    print(f"engine,python,{policy},{num_gpus},{py_runs},{r['python_rps']:.2f},1.0")
+    print(
+        f"engine,batched-cold,{policy},{num_gpus},{runs},"
+        f"{r['cold_rps']:.2f},{r['speedup_cold']:.1f}"
+    )
+    print(
+        f"engine,batched,{policy},{num_gpus},{runs},"
+        f"{r['warm_rps']:.2f},{r['speedup_warm']:.1f}"
+    )
+    print(
+        f"# acceptance parity: python={r['acc_python']:.4f} "
+        f"batched={r['acc_batched']:.4f}"
+    )
+    ok = r["speedup_warm"] >= 10.0
+    print(
+        f"# replica-throughput speedup (steady-state) @ "
+        f"(M={num_gpus}, runs={runs}, uniform, {load:.2f} load): "
+        f"{r['speedup_warm']:.1f}x (cold incl. compile: {r['speedup_cold']:.1f}x) "
+        f"-> {'PASS' if ok else 'FAIL'} (>= 10x required)"
+    )
+    return r
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", type=int, default=64)
+    ap.add_argument("--num-gpus", type=int, default=100)
+    ap.add_argument("--load", type=float, default=0.85)
+    ap.add_argument("--policy", default="mfi")
+    ap.add_argument("--py-runs", type=int, default=3)
+    args = ap.parse_args()
+    main(
+        runs=args.runs, num_gpus=args.num_gpus, load=args.load,
+        policy=args.policy, py_runs=args.py_runs,
+    )

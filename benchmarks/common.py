@@ -21,3 +21,27 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
 
 def csv_row(name: str, us: float, derived: str = "") -> str:
     return f"{name},{us:.1f},{derived}"
+
+
+ENGINES = ("python", "batched")
+
+
+def run_engine(engine: str, scheduler: str, cfg, runs: int):
+    """Dispatch a Monte-Carlo sweep point to the chosen simulation engine.
+
+    ``batched`` covers the four stateless policies (mfi/ff/bf-bi/wf-bi) on
+    the steady protocol; anything else (rr, mfi-defrag, cumulative) falls
+    back to the Python reference loop so sweeps stay complete.
+    """
+    from repro.sim import run_many
+    from repro.sim.batched import POLICIES, run_batched
+
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; options {ENGINES}")
+    if (
+        engine == "batched"
+        and scheduler in POLICIES
+        and cfg.protocol == "steady"
+    ):
+        return run_batched(scheduler, cfg, runs=runs)
+    return run_many(scheduler, cfg, runs=runs)

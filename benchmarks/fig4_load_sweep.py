@@ -4,18 +4,26 @@ Sweeps offered load over the steady-state protocol and reports all five paper
 metrics per scheduler.  Paper claims to validate: MFI highest allocated
 workloads + acceptance ~ highest across loads; RR/WF-BI degrade sharply;
 FF/BF-BI pack but fragment.
+
+``--engine batched`` (default ``python``) runs each sweep point through the
+batched JAX engine (:mod:`repro.sim.batched`) — same aggregates, one device
+program per point; RR falls back to the Python loop (stateful policy).
 """
 
 from __future__ import annotations
 
+import argparse
+
 import numpy as np
 
-from repro.sim import SimConfig, run_many
+from benchmarks.common import ENGINES, run_engine
+from repro.sim import SimConfig
 
 SCHEDULERS = ("ff", "rr", "bf-bi", "wf-bi", "mfi")
 
 
-def run(runs: int = 30, num_gpus: int = 100, loads=(0.5, 0.7, 0.85, 1.0), seed: int = 0):
+def run(runs: int = 30, num_gpus: int = 100, loads=(0.5, 0.7, 0.85, 1.0),
+        seed: int = 0, engine: str = "python"):
     rows = []
     results = {}
     for load in loads:
@@ -24,7 +32,7 @@ def run(runs: int = 30, num_gpus: int = 100, loads=(0.5, 0.7, 0.85, 1.0), seed: 
                 num_gpus=num_gpus, distribution="uniform",
                 offered_load=load, seed=seed,
             )
-            r = run_many(name, cfg, runs=runs)
+            r = run_engine(engine, name, cfg, runs=runs)
             results[(name, load)] = r
             rows.append(
                 f"fig4,{name},{load},{r['acceptance_rate']:.4f},"
@@ -34,9 +42,9 @@ def run(runs: int = 30, num_gpus: int = 100, loads=(0.5, 0.7, 0.85, 1.0), seed: 
     return rows, results
 
 
-def main(runs: int = 30):
+def main(runs: int = 30, engine: str = "python"):
     print("table,scheduler,load,acceptance,allocated,utilization,active_gpus,frag")
-    rows, results = run(runs=runs)
+    rows, results = run(runs=runs, engine=engine)
     for row in rows:
         print(row)
     # headline check at heavy load
@@ -48,4 +56,8 @@ def main(runs: int = 30):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", type=int, default=30)
+    ap.add_argument("--engine", choices=ENGINES, default="python")
+    args = ap.parse_args()
+    main(runs=args.runs, engine=args.engine)

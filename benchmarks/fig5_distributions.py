@@ -1,24 +1,31 @@
 """Paper Fig. 5: scheduler comparison at heavy load (85%) across the four
-MIG-profile distributions of Table II."""
+MIG-profile distributions of Table II.
+
+``--engine batched`` (default ``python``) runs each sweep point through the
+batched JAX engine (:mod:`repro.sim.batched`); RR falls back to the Python
+loop (stateful policy).
+"""
 
 from __future__ import annotations
 
-import numpy as np
+import argparse
 
-from repro.sim import SimConfig, run_many
+from benchmarks.common import ENGINES, run_engine
+from repro.sim import SimConfig
 from repro.sim.distributions import DISTRIBUTIONS
 
 SCHEDULERS = ("ff", "rr", "bf-bi", "wf-bi", "mfi")
 
 
-def run(runs: int = 30, num_gpus: int = 100, load: float = 0.85, seed: int = 0):
+def run(runs: int = 30, num_gpus: int = 100, load: float = 0.85, seed: int = 0,
+        engine: str = "python"):
     rows, results = [], {}
     for dist in DISTRIBUTIONS:
         for name in SCHEDULERS:
             cfg = SimConfig(
                 num_gpus=num_gpus, distribution=dist, offered_load=load, seed=seed
             )
-            r = run_many(name, cfg, runs=runs)
+            r = run_engine(engine, name, cfg, runs=runs)
             results[(name, dist)] = r
             rows.append(
                 f"fig5,{name},{dist},{r['acceptance_rate']:.4f},"
@@ -28,9 +35,9 @@ def run(runs: int = 30, num_gpus: int = 100, load: float = 0.85, seed: int = 0):
     return rows, results
 
 
-def main(runs: int = 30):
+def main(runs: int = 30, engine: str = "python"):
     print("table,scheduler,distribution,acceptance,allocated,utilization,active_gpus,frag")
-    rows, results = run(runs=runs)
+    rows, results = run(runs=runs, engine=engine)
     for row in rows:
         print(row)
     for dist in DISTRIBUTIONS:
@@ -41,4 +48,8 @@ def main(runs: int = 30):
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", type=int, default=30)
+    ap.add_argument("--engine", choices=ENGINES, default="python")
+    args = ap.parse_args()
+    main(runs=args.runs, engine=args.engine)

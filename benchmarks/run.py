@@ -13,23 +13,26 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--runs", type=int, default=6, help="MC runs per point (paper: 500; full record: experiments/paper_figures.csv @ 30)")
     ap.add_argument("--quick", action="store_true", help="runs=5 for CI")
-    ap.add_argument("--only", default=None, help="comma list: fig4,fig5,fig6,scaling,kernels,roofline")
+    ap.add_argument("--engine", choices=("python", "batched"), default="python",
+                    help="Monte-Carlo engine for fig4/fig5 sweep points")
+    ap.add_argument("--only", default=None, help="comma list: fig4,fig5,fig6,scaling,kernels,roofline,engine")
     args = ap.parse_args()
     runs = 5 if args.quick else args.runs
     only = set(args.only.split(",")) if args.only else None
 
-    from benchmarks import (fig4_load_sweep, fig5_distributions, fig6_fragscore,
-                            kernels_bench, roofline_report, scheduler_scaling)
+    from benchmarks import (batched_engine_bench, fig4_load_sweep,
+                            fig5_distributions, fig6_fragscore, kernels_bench,
+                            roofline_report, scheduler_scaling)
 
     def want(name):
         return only is None or name in only
 
     if want("fig4"):
         print("=== Fig. 4: load sweep (uniform) ===")
-        fig4_load_sweep.main(runs=runs)
+        fig4_load_sweep.main(runs=runs, engine=args.engine)
     if want("fig5"):
         print("=== Fig. 5: distributions @ 85% ===")
-        fig5_distributions.main(runs=runs)
+        fig5_distributions.main(runs=runs, engine=args.engine)
     if want("fig6"):
         print("=== Fig. 6: fragmentation severity ===")
         fig6_fragscore.main(runs=runs)
@@ -42,6 +45,9 @@ def main() -> None:
     if want("roofline"):
         print("=== Roofline (from dry-run artifacts) ===")
         roofline_report.main()
+    if want("engine"):
+        print("=== Batched engine replica throughput ===")
+        batched_engine_bench.main(runs=max(runs, 16))
 
 
 if __name__ == "__main__":

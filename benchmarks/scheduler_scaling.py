@@ -1,20 +1,25 @@
 """Scheduler decision latency vs cluster size (paper §V complexity claim:
-O(kM) per decision) — numpy reference vs jitted JAX vs Pallas kernel path."""
+O(kM) per decision) — numpy reference vs jitted JAX vs Pallas kernel path,
+plus the batched engine's single-decision path (``--engine batched`` limits
+the sweep to it; default ``python`` times everything)."""
 
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import time_fn
+from benchmarks.common import ENGINES, time_fn
 from repro.core import cluster as jcluster
 from repro.core import mig
 from repro.core.schedulers import make_scheduler
 from repro.kernels.fragscore import ops as kops
+from repro.sim.batched import policy_select
 
 
-def main():
+def main(engine: str = "python"):
     print("table,impl,num_gpus,us_per_decision,decisions_per_sec")
     rng = np.random.default_rng(0)
     for m in (100, 1000, 10_000):
@@ -22,8 +27,8 @@ def main():
         occ = jnp.asarray(occ_np)
         pid = jnp.int32(2)
 
-        # numpy reference (paper's python algorithm, vectorized)
-        if m <= 10_000:
+        if engine == "python":
+            # numpy reference (paper's python algorithm, vectorized)
             cl = mig.ClusterState(m)
             for g in range(m):
                 cl.gpus[g].occupancy[:] = occ_np[g]
@@ -31,18 +36,26 @@ def main():
             us = time_fn(lambda: sched.select(cl, 2), warmup=1, iters=5)
             print(f"scaling,numpy,{m},{us:.1f},{1e6/us:.0f}")
 
-        # jitted jnp
-        f = jax.jit(lambda o, p: jcluster.mfi_select(o, p))
-        us = time_fn(lambda: jax.block_until_ready(f(occ, pid)), warmup=2, iters=10)
-        print(f"scaling,jax-jit,{m},{us:.1f},{1e6/us:.0f}")
+            # jitted jnp
+            f = jax.jit(lambda o, p: jcluster.mfi_select(o, p))
+            us = time_fn(lambda: jax.block_until_ready(f(occ, pid)), warmup=2, iters=10)
+            print(f"scaling,jax-jit,{m},{us:.1f},{1e6/us:.0f}")
 
-        # pallas kernel (interpret mode on CPU — TPU-shaped, not TPU-timed)
-        us = time_fn(
-            lambda: jax.block_until_ready(kops.mfi_select(occ, pid)),
-            warmup=1, iters=3,
-        )
-        print(f"scaling,pallas-interpret,{m},{us:.1f},{1e6/us:.0f}")
+            # pallas kernel (interpret mode on CPU — TPU-shaped, not TPU-timed)
+            us = time_fn(
+                lambda: jax.block_until_ready(kops.mfi_select(occ, pid)),
+                warmup=1, iters=3,
+            )
+            print(f"scaling,pallas-interpret,{m},{us:.1f},{1e6/us:.0f}")
+
+        # batched engine's decision path (window-count state, linear ΔF)
+        g = jax.jit(lambda o, p: policy_select(o, p, "mfi"))
+        us = time_fn(lambda: jax.block_until_ready(g(occ, pid)), warmup=2, iters=10)
+        print(f"scaling,batched-select,{m},{us:.1f},{1e6/us:.0f}")
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--engine", choices=ENGINES, default="python")
+    args = ap.parse_args()
+    main(engine=args.engine)

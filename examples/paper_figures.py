@@ -2,7 +2,9 @@
 
     PYTHONPATH=src:. python examples/paper_figures.py --runs 100
 
-(The paper uses 500 runs; 30-100 gives the same ordering with tight CIs.)
+(The paper uses 500 runs; 30-100 gives the same ordering with tight CIs.
+``--engine batched`` runs fig4/fig5 sweep points through the batched JAX
+engine — paper-scale 500-replica sweeps become practical on CPU.)
 """
 
 import argparse
@@ -11,6 +13,7 @@ import argparse
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--runs", type=int, default=50)
+    ap.add_argument("--engine", choices=("python", "batched"), default="python")
     args = ap.parse_args()
 
     from benchmarks import fig4_load_sweep, fig5_distributions, fig6_fragscore
@@ -18,11 +21,11 @@ def main():
     print("=" * 70)
     print("Fig. 4 — load sweep, uniform distribution")
     print("=" * 70)
-    fig4_load_sweep.main(runs=args.runs)
+    fig4_load_sweep.main(runs=args.runs, engine=args.engine)
     print("=" * 70)
     print("Fig. 5 — four distributions at 85% load")
     print("=" * 70)
-    fig5_distributions.main(runs=args.runs)
+    fig5_distributions.main(runs=args.runs, engine=args.engine)
     print("=" * 70)
     print("Fig. 6 — fragmentation severity")
     print("=" * 70)

@@ -80,6 +80,39 @@ class MFIDecision(NamedTuple):
     delta_f: jax.Array  # float32 ΔF of the chosen placement (0 when rejected)
 
 
+def placement_feasibility(occ: jax.Array, profile_id: jax.Array) -> jax.Array:
+    """(M, A) bool — anchors of ``profile_id`` whose window is fully free.
+
+    Columns follow ``PROFILE_ANCHORS[profile_id]`` (ascending anchor order);
+    padded anchor columns are always infeasible.
+    """
+    masks = PROFILE_MASKS[profile_id]  # (A, 8) int32
+    valid = PROFILE_VALID[profile_id]  # (A,)
+    occf = occ.astype(jnp.float32)
+    overlap = occf @ masks.T.astype(jnp.float32)  # (M, A)
+    return (overlap == 0) & valid[None, :]
+
+
+def placement_delta_f(
+    occ: jax.Array, profile_id: jax.Array, metric: str = "blocked", frag_fn=None
+) -> jax.Array:
+    """(M, A) float32 — ΔF of every dry-run placement of ``profile_id``.
+
+    ``frag_fn`` maps an (N, 8) occupancy to (N,) scores; defaults to the
+    pure-jnp :func:`frag_scores` (the Pallas ``fragscore`` kernel is a
+    drop-in — see :mod:`repro.kernels.fragscore.ops`).
+    """
+    if frag_fn is None:
+        frag_fn = functools.partial(frag_scores, metric=metric)
+    masks = PROFILE_MASKS[profile_id]  # (A, 8) int32
+    f_before = frag_fn(occ)  # (M,)
+    hypo = jnp.minimum(occ[:, None, :] + masks[None, :, :], 1)  # (M, A, 8)
+    f_after = frag_fn(hypo.reshape(-1, mig.NUM_MEM_SLICES)).reshape(
+        occ.shape[0], -1
+    )  # (M, A)
+    return f_after - f_before[:, None]
+
+
 @functools.partial(jax.jit, static_argnames=("metric",))
 def mfi_select(occ: jax.Array, profile_id: jax.Array, metric: str = "blocked") -> MFIDecision:
     """Algorithm 2's argmin over all feasible (GPU, anchor) dry-runs.
@@ -88,20 +121,9 @@ def mfi_select(occ: jax.Array, profile_id: jax.Array, metric: str = "blocked") -
       occ: (M, 8) int32 cluster occupancy.
       profile_id: scalar int32 (traced — one jit serves all profiles).
     """
-    masks = PROFILE_MASKS[profile_id]  # (A, 8) int32
-    valid = PROFILE_VALID[profile_id]  # (A,)
     anchors = PROFILE_ANCHORS[profile_id]  # (A,)
-
-    occf = occ.astype(jnp.float32)
-    overlap = occf @ masks.T.astype(jnp.float32)  # (M, A)
-    feasible = (overlap == 0) & valid[None, :]
-
-    f_before = frag_scores(occ, metric)  # (M,)
-    hypo = jnp.minimum(occ[:, None, :] + masks[None, :, :], 1)  # (M, A, 8)
-    f_after = frag_scores(
-        hypo.reshape(-1, mig.NUM_MEM_SLICES), metric
-    ).reshape(occ.shape[0], -1)  # (M, A)
-    delta = f_after - f_before[:, None]
+    feasible = placement_feasibility(occ, profile_id)
+    delta = placement_delta_f(occ, profile_id, metric)
 
     big = jnp.float32(1e9)
     scored = jnp.where(feasible, delta, big)

@@ -202,6 +202,8 @@ class MFIDefrag(MFI):
         best = None  # (total_F, victim_id, victim_new, request_placement)
         tried = 0
         for gpu in cluster.gpus:
+            if tried >= self.max_candidates:
+                break  # candidate budget caps TOTAL work, not per-GPU work
             for wid, alloc in list(gpu.allocations.items()):
                 if tried >= self.max_candidates:
                     break

@@ -139,8 +139,49 @@ def _multipliers(comps: Dict[str, Computation], entry: str) -> Dict[str, int]:
     return mult
 
 
+def _split_operands(s: str) -> List[str]:
+    """Split an HLO operand list at top-level commas (shape dims contain ',').
+
+    A close paren at depth 0 is the end of the operand list itself — the
+    caller's greedy capture may run past it into trailing attributes (e.g.
+    paren-containing ``metadata={op_name="jit(f)/..."}``), which must not
+    leak into the last operand.
+    """
+    parts: List[str] = []
+    depth = 0
+    cur: List[str] = []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            if depth == 0:
+                break  # closing paren of the operand list
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        parts.append("".join(cur).strip())
+    return parts
+
+
+def _operand_type(comp: Computation, operand: str) -> str:
+    """Type string of one operand.
+
+    Compiled modules inline operand types (``f32[32,256]{1,0} %copy.1``);
+    unoptimized ones reference bare names (``%copy.1``) resolved via the
+    computation's symbol table.
+    """
+    if _SHAPE_RE.search(operand):
+        return operand
+    name = operand.split()[-1] if operand else ""
+    return comp.shapes.get(name if name.startswith("%") else "%" + name, "")
+
+
 def _dot_flops(comp: Computation, line: str) -> int:
-    dm = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\S+)\s+dot\(([^)]*)\)", line)
+    dm = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\S+)\s+dot\((.*)\)", line)
     if not dm:
         return 0
     result_dims = _shape_dims(dm.group(1))
@@ -148,9 +189,8 @@ def _dot_flops(comp: Computation, line: str) -> int:
         return 0
     out_elems = math.prod(result_dims) if result_dims else 1
     # contraction size from lhs shape + lhs_contracting_dims
-    ops = [o.strip() for o in dm.group(2).split(",")]
-    lhs_type = comp.shapes.get(ops[0] if ops[0].startswith("%") else "%" + ops[0], "")
-    lhs_dims = _shape_dims(lhs_type)
+    ops = _split_operands(dm.group(2))
+    lhs_dims = _shape_dims(_operand_type(comp, ops[0])) if ops else None
     cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
     contract = 1
     if lhs_dims and cm and cm.group(1):
@@ -162,15 +202,16 @@ def _dot_flops(comp: Computation, line: str) -> int:
 
 
 def _conv_flops(comp: Computation, line: str) -> int:
-    dm = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\S+)\s+convolution\(([^)]*)\)", line)
+    dm = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\S+)\s+convolution\((.*)\)", line)
     if not dm:
         return 0
     result_dims = _shape_dims(dm.group(1))
     if result_dims is None:
         return 0
-    ops = [o.strip() for o in dm.group(2).split(",")]
-    rhs_type = comp.shapes.get(ops[1] if ops[1].startswith("%") else "%" + ops[1], "")
-    rhs_dims = _shape_dims(rhs_type) or [1]
+    ops = _split_operands(dm.group(2))
+    rhs_dims = (
+        _shape_dims(_operand_type(comp, ops[1])) if len(ops) > 1 else None
+    ) or [1]
     return 2 * math.prod(result_dims) * math.prod(rhs_dims[:-1])
 
 
@@ -208,12 +249,11 @@ def analyze(hlo: str) -> HLOAnalysis:
             if " dot(" in line:
                 f = _dot_flops(comp, line)
                 flops += m * f
-                dm = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\S+)\s+dot\(([^)]*)\)", line)
+                dm = re.match(r"(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*(\S+)\s+dot\((.*)\)", line)
                 if dm:
                     b = _shape_bytes(dm.group(1))
-                    for o in dm.group(2).split(","):
-                        o = o.strip()
-                        b += _shape_bytes(comp.shapes.get(o if o.startswith("%") else "%" + o, ""))
+                    for o in _split_operands(dm.group(2)):
+                        b += _shape_bytes(_operand_type(comp, o))
                     dot_bytes += m * b
             elif " convolution(" in line:
                 flops += m * _conv_flops(comp, line)

@@ -1,4 +1,16 @@
-"""Monte-Carlo online evaluation of MIG scheduling (paper §VI)."""
+"""Monte-Carlo online evaluation of MIG scheduling (paper §VI).
+
+Two engines simulate the same load model (see ``docs/SIMULATOR.md``):
+
+* :mod:`repro.sim.simulator` — the Python/`heapq` reference, one replica at
+  a time (both ``steady`` and ``cumulative`` protocols);
+* :mod:`repro.sim.batched` — the batched JAX engine: R replicas × T slots
+  as one ``lax.scan`` over a vmapped replica axis (``steady`` only,
+  policies MFI/FF/BF-BI/WF-BI), ≥10× replica throughput on CPU and the
+  engine every large scenario sweep should use.
+"""
 
 from repro.sim.distributions import DISTRIBUTIONS, sample_profiles  # noqa: F401
 from repro.sim.simulator import SimConfig, SimResult, run_simulation, run_many  # noqa: F401
+from repro.sim.batched import POLICIES as BATCHED_POLICIES  # noqa: F401
+from repro.sim.batched import policy_select, run_batched  # noqa: F401

@@ -1,0 +1,563 @@
+"""Batched on-device Monte-Carlo simulation engine (steady protocol).
+
+The Python reference in :mod:`repro.sim.simulator` runs replicas one at a
+time through a ``ClusterState``/``heapq`` event loop; at the paper's scale
+(500 replicas per point, §VI) a load sweep takes hours.  This module runs
+**R replicas × T slots as one** ``lax.scan`` **over a vmapped replica axis**
+so the whole Monte-Carlo average is a single XLA program.
+
+Event stream
+    Arrivals are pre-sampled on host (Poisson counts, profile ids and
+    durations per slot) and flattened into one *event stream* per replica:
+    one event per arrival, plus one synthetic heartbeat event for every
+    empty slot so consecutive events never skip a slot.  Streams are padded
+    to the longest replica (``pid = -1`` lanes are no-ops), and everything
+    slot-dependent (release ring row, metric-sample flags, measurement
+    window membership) is precomputed host-side, so the device step is pure
+    tensor algebra with no clock arithmetic.
+
+Replica state (fixed-capacity struct-of-arrays pytree)
+    * ``occ (M, 8) int32`` — cluster occupancy bitmap (materialized only
+      when the Pallas-kernel scoring path needs it; otherwise ``base``
+      carries the full information);
+    * ``base (M, 18) float32`` — occupied-slice count per placement window,
+      ``occ @ Wᵀ``.  Window counts are *linear* in occupancy, so ``base``
+      is maintained incrementally (row add on commit, row subtract on
+      release) and every fragmentation quantity — F(m), the full MFI ΔF
+      table, feasibility — derives from it without per-arrival matmuls
+      over hypothetical occupancies;
+    * ``free (M,) int32`` / ``f (M,) float32`` — free-slice counts and
+      per-GPU fragmentation scores, recomputed only for rows a drain or
+      commit touched;
+    * an expiry ring buffer ``ring_gpu (K+2, E) int32`` /
+      ``ring_mask (K+2, E, 8) int32`` keyed by end slot modulo
+      ``K = T + 1``: row ``e % K`` holds the (gpu, placement-window) rows
+      of workloads expiring at slot ``e``.  Durations are drawn from
+      ``[1, T]``, so an end slot is strictly less than one ring revolution
+      ahead and each row is drained (masked scatter-subtract) exactly when
+      the clock reaches it, before it can be re-targeted.  Within-row
+      columns are assigned on host (arrival rank among same-end-slot
+      arrivals), so inserts never collide; row ``K + 1`` is a write-only
+      trash row for padding lanes.
+
+Policies — **MFI, FF, BF-BI and WF-BI as pure-``jnp`` selection rules**
+over the same feasibility/ΔF tensors :func:`repro.core.cluster.mfi_select`
+computes (MFI: argmin ΔF with (gpu, anchor) tie-break; FF: first feasible;
+BF-BI/WF-BI: argmin/argmax post-allocation free slices with best-index
+anchors), selected by a static ``policy`` argument.  Acceptance,
+utilization, active-GPU and fragmentation-severity metrics accumulate
+inside the scan; :func:`run_batched` returns the same aggregate dict as
+:func:`repro.sim.simulator.run_many`.
+
+Parity guarantees vs the Python reference (``tests/test_batched_sim.py``):
+
+* single-step decisions of all four policies match their
+  ``Scheduler.select`` counterparts *exactly* (including rejects and
+  tie-breaks — every score involved is integer-valued, hence exact in
+  float32);
+* whole-run acceptance rates agree within Monte-Carlo tolerance (the two
+  engines consume their RNG streams differently, so trajectories are
+  statistically — not bitwise — identical).
+
+On TPU, per-GPU fragmentation rescoring (the rows each drain/commit
+touches, which feed both MFI and the severity metric) routes through the
+Pallas ``fragscore`` kernel (``interpret=False``); on CPU the
+``base``-derived pure-jnp scoring is used.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cluster as jcluster
+from repro.core import mig
+from repro.sim import distributions
+from repro.sim.simulator import SAMPLE_EVERY, SimConfig, steady_params
+
+POLICIES = ("mfi", "ff", "bf-bi", "wf-bi")
+
+_BIG = jnp.float32(1e9)
+
+# Constant tables.  W (18, 8) placement windows, V (18,) window sizes;
+# per-profile padded anchor views of the flattened placement table.
+_W = jnp.asarray(mig.PLACEMENT_MASKS, dtype=jnp.float32)  # (18, 8)
+_V = jnp.asarray(mig.PLACEMENT_MEM, dtype=jnp.float32)  # (18,)
+
+
+def _np_profile_rows() -> np.ndarray:
+    """(P, A_max) int32 — placement-table row of each profile anchor (0-padded)."""
+    rows = np.zeros((mig.NUM_PROFILES, jcluster.MAX_ANCHORS), dtype=np.int32)
+    for pid in range(mig.NUM_PROFILES):
+        s = mig.profile_placement_rows(pid)
+        n = s.stop - s.start
+        rows[pid, :n] = np.arange(s.start, s.stop)
+    return rows
+
+
+_PROFILE_ROWS = jnp.asarray(_np_profile_rows())  # (P, A_max)
+# occupied-slice count each profile anchor adds to every placement window
+_MASKWIN = jnp.asarray(
+    jcluster._PROFILE_MASKS_NP.astype(np.float32)
+    @ np.asarray(mig.PLACEMENT_MASKS, dtype=np.float32).T
+)  # (P, A_max, 18)
+_MASKPOS = (_MASKWIN > 0).astype(jnp.float32)  # (P, A_max, 18)
+
+
+# ---------------------------------------------------------------------------
+# Fragmentation scoring from the window-count state
+# ---------------------------------------------------------------------------
+
+
+def _frag_from_base(base: jax.Array, free: jax.Array, metric: str) -> jax.Array:
+    """F(m) for every GPU from window counts ``base (M, 18)``: (M,) float32."""
+    if metric == "partial":
+        counted = (base > 0) & (base < _V[None, :])
+    else:  # blocked
+        counted = base > 0
+    eligible = _V[None, :] <= free[:, None].astype(jnp.float32)
+    return jnp.sum(jnp.where(counted & eligible, _V[None, :], 0.0), axis=-1)
+
+
+def _delta_from_base(
+    base: jax.Array,
+    free: jax.Array,
+    pid: jax.Array,
+    metric: str,
+    f_before: jax.Array = None,
+) -> jax.Array:
+    """ΔF of every anchor dry-run of ``pid``: (M, A) float32.
+
+    Window counts after placement are ``base + MASKWIN[pid, a]`` (exact for
+    feasible placements — the window is disjoint from current occupancy),
+    so for the "blocked" metric the counted-predicate decomposes as
+    ``(base > 0) | (maskwin > 0)`` and the whole (M, A) table reduces to
+    one (M, 18) × (18, A) matmul; "partial" needs the dense (M, A, 18)
+    elementwise form.  All scores are integer-valued — exact in float32.
+    """
+    v = _V[None, :]
+    freef = free.astype(jnp.float32)
+    if f_before is None:
+        f_before = _frag_from_base(base, free, metric)  # (M,)
+    free_after = freef - jcluster.PROFILE_MEM[pid]  # (M,) — same for every anchor
+    elig = v <= free_after[:, None]  # (M, 18)
+    if metric == "partial":
+        ba = base[:, None, :] + _MASKWIN[pid][None, :, :]  # (M, A, 18)
+        counted = (ba > 0) & (ba < v[None, :, :])
+        f_after = jnp.sum(
+            jnp.where(counted & elig[:, None, :], _V[None, None, :], 0.0), axis=-1
+        )
+    else:  # blocked: counted_after = (base > 0) | (maskwin > 0)
+        cb = base > 0  # (M, 18)
+        s_occ = jnp.sum(jnp.where(cb & elig, v, 0.0), axis=-1)  # (M,)
+        cross = jnp.where(~cb & elig, v, 0.0) @ _MASKPOS[pid].T  # (M, A)
+        f_after = s_occ[:, None] + cross
+    return f_after - f_before[:, None]
+
+
+def make_frag_fn(metric: str = "blocked", use_kernel: bool = False):
+    """(N, 8) occupancy -> (N,) F scores; Pallas kernel when ``use_kernel``."""
+    if use_kernel:
+        from repro.kernels.fragscore import fragscore as _k
+
+        return lambda occ: _k.fragscore(occ, _W, _V, metric=metric, interpret=False)
+    return functools.partial(jcluster.frag_scores, metric=metric)
+
+
+# ---------------------------------------------------------------------------
+# Policies as pure-jnp selection rules over the feasibility/ΔF tensors
+# ---------------------------------------------------------------------------
+
+
+def _select_mfi(base, free, f, feasible, pid, metric):
+    """Argmin ΔF over all feasible (GPU, anchor); ties (gpu, anchor) lex."""
+    delta = _delta_from_base(base, free, pid, metric, f_before=f)
+    flat = jnp.where(feasible, delta, _BIG).reshape(-1)
+    k = jnp.argmin(flat)
+    a = feasible.shape[1]
+    return k // a, k % a, flat[k] < _BIG
+
+
+def _select_ff(base, free, f, feasible, pid, metric):
+    """First feasible (GPU, anchor) in ascending (gpu, anchor) order."""
+    flat = feasible.reshape(-1)
+    k = jnp.argmax(flat)
+    a = feasible.shape[1]
+    return k // a, k % a, flat[k]
+
+
+def _best_anchor(feasible_row):
+    """Highest feasible anchor index (the Best-Index rule)."""
+    a = feasible_row.shape[0]
+    return a - 1 - jnp.argmax(feasible_row[::-1])
+
+
+def _select_bf(base, free, f, feasible, pid, metric):
+    """Fewest post-allocation free slices, ties by gpu id; best index."""
+    any_feas = feasible.any(axis=1)
+    g = jnp.argmin(jnp.where(any_feas, free.astype(jnp.float32), _BIG))
+    return g, _best_anchor(feasible[g]), any_feas.any()
+
+
+def _select_wf(base, free, f, feasible, pid, metric):
+    """Most post-allocation free slices, ties by gpu id; best index."""
+    any_feas = feasible.any(axis=1)
+    g = jnp.argmin(jnp.where(any_feas, -free.astype(jnp.float32), _BIG))
+    return g, _best_anchor(feasible[g]), any_feas.any()
+
+
+_SELECT = {"mfi": _select_mfi, "ff": _select_ff, "bf-bi": _select_bf, "wf-bi": _select_wf}
+
+
+def _feasibility(base: jax.Array, pid: jax.Array) -> jax.Array:
+    """(M, A) bool — anchors of ``pid`` whose window has zero occupied slices."""
+    overlap = jnp.take(base, _PROFILE_ROWS[pid], axis=1)  # (M, A)
+    return (overlap == 0) & jcluster.PROFILE_VALID[pid][None, :]
+
+
+def policy_select(
+    occ: jax.Array,
+    profile_id: jax.Array,
+    policy: str,
+    metric: str = "blocked",
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One placement decision on a raw occupancy: ``(gpu, anchor, accepted)``.
+
+    Runs the same selection rule as the scan step (via the derived
+    ``base``/``free`` state) and exactly matches the corresponding Python
+    ``Scheduler.select`` — including rejects — for all :data:`POLICIES`.
+    """
+    occf = occ.astype(jnp.float32)
+    base = occf @ _W.T  # (M, 18)
+    free = (mig.NUM_MEM_SLICES - occ.sum(axis=1)).astype(jnp.int32)
+    f = _frag_from_base(base, free, metric)
+    feasible = _feasibility(base, profile_id)
+    gpu, aidx, ok = _SELECT[policy](base, free, f, feasible, profile_id, metric)
+    anchor = jnp.where(ok, jcluster.PROFILE_ANCHORS[profile_id][aidx], -1)
+    return (
+        jnp.where(ok, gpu, -1).astype(jnp.int32),
+        anchor.astype(jnp.int32),
+        ok,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Scan state and event step
+# ---------------------------------------------------------------------------
+
+
+class ReplicaState(NamedTuple):
+    occ: jax.Array        # (M, 8) int32 — None when occupancy isn't tracked
+    base: jax.Array       # (M, 18) float32 — occ @ Wᵀ, kept incrementally
+    free: jax.Array       # (M,) int32
+    f: jax.Array          # (M,) float32 — per-GPU F score, kept incrementally
+    ring_gpu: jax.Array   # (K+2, E) int32 — expiry ring, keyed end_slot % K
+    ring_mask: jax.Array  # (K+2, E, 8) int32
+
+
+class EventStream(NamedTuple):
+    """Host-precomputed per-event scan inputs, each ``(E_max, R)``."""
+
+    pid: np.ndarray        # profile id, -1 for heartbeat/padding lanes
+    exp_row: np.ndarray    # ring row (end_slot % K; trash row for padding)
+    exp_col: np.ndarray    # ring column (host-assigned, collision-free)
+    drain_row: np.ndarray  # ring row to drain when new_slot
+    new_slot: np.ndarray   # first event of its slot (drain + maybe sample)
+    sample: np.ndarray     # sample metrics of the just-finished slot
+    measuring: np.ndarray  # arrival inside the measurement window
+
+
+class EventMeta(NamedTuple):
+    """Host-only per-event annotations (never shipped to device), ``(E_max, R)``.
+
+    Used by :mod:`repro.sim.replay` to reconstruct and validate occupancy
+    trajectories from a decision trace.
+    """
+
+    slot: np.ndarray  # arrival/heartbeat slot (total_slots for padding)
+    end: np.ndarray   # absolute end slot of the arrival (0 for non-arrivals)
+
+
+class EventTrace(NamedTuple):
+    """Per-event scan outputs, each ``(E_max, R)``; counters and metric sums
+    are reduced host-side against the host-known flags of the stream."""
+
+    ok: jax.Array        # arrival accepted
+    gpu: jax.Array       # chosen GPU (undefined when not accepted)
+    aidx: jax.Array      # chosen anchor index (undefined when not accepted)
+    free_sum: jax.Array  # Σ free slices at slot boundary (pre-drain)
+    active: jax.Array    # active-GPU count at slot boundary (pre-drain)
+    frag: jax.Array      # cluster-mean F at slot boundary (pre-drain)
+
+
+def _init_state(
+    num_gpus: int, ring_rows: int, ring_cols: int, track_occ: bool
+) -> ReplicaState:
+    return ReplicaState(
+        occ=(
+            jnp.zeros((num_gpus, mig.NUM_MEM_SLICES), jnp.int32)
+            if track_occ
+            else None
+        ),
+        base=jnp.zeros((num_gpus, mig.NUM_PLACEMENTS), jnp.float32),
+        free=jnp.full((num_gpus,), mig.NUM_MEM_SLICES, jnp.int32),
+        f=jnp.zeros((num_gpus,), jnp.float32),
+        ring_gpu=jnp.zeros((ring_rows, ring_cols), jnp.int32),
+        ring_mask=jnp.zeros(
+            (ring_rows, ring_cols, mig.NUM_MEM_SLICES), jnp.int32
+        ),
+    )
+
+
+def _event_step(st: ReplicaState, x, *, policy, metric, frag_fn):
+    pid, exp_row, exp_col, drain_row, new_slot = x
+
+    # 1. slot-boundary metrics (state == end of slot t-1); reduced host-side
+    frag = st.f.mean()
+    free_sum = st.free.sum()
+    active = (st.free < mig.NUM_MEM_SLICES).sum()
+
+    # 2. drain this slot's expiry-ring row (first event of the slot only)
+    ns = new_slot.astype(jnp.int32)
+    rel_gpu = st.ring_gpu[drain_row]  # (E,)
+    rel_mask = st.ring_mask[drain_row] * ns  # (E, 8)
+    occ = None if st.occ is None else st.occ.at[rel_gpu].add(-rel_mask)
+    base = st.base.at[rel_gpu].add(-(rel_mask.astype(jnp.float32) @ _W.T))
+    free = st.free.at[rel_gpu].add(rel_mask.sum(axis=1))
+    # rescore exactly the touched rows — through the Pallas kernel when it
+    # is routed in (occ is materialized then), else from the window counts
+    f = st.f.at[rel_gpu].set(
+        frag_fn(occ[rel_gpu])
+        if frag_fn is not None
+        else _frag_from_base(base[rel_gpu], free[rel_gpu], metric)
+    )
+    ring_mask = st.ring_mask.at[drain_row].set(st.ring_mask[drain_row] * (1 - ns))
+
+    # 3. place (or reject) the arrival; pid == -1 lanes are no-ops
+    valid = pid >= 0
+    pid_c = jnp.maximum(pid, 0)
+    feasible = _feasibility(base, pid_c)
+    gpu, aidx, ok = _SELECT[policy](base, free, f, feasible, pid_c, metric)
+    ok = ok & valid
+
+    oki = ok.astype(jnp.int32)
+    mask = jcluster.PROFILE_MASKS[pid_c, aidx] * oki  # (8,)
+    mwin = _MASKWIN[pid_c, aidx] * oki  # (18,)
+    gpu_c = jnp.where(ok, gpu, 0).astype(jnp.int32)
+    occ = None if occ is None else occ.at[gpu_c].add(mask)
+    base = base.at[gpu_c].add(mwin)
+    free = free.at[gpu_c].add(-mask.sum())
+    f = f.at[gpu_c].set(
+        frag_fn(occ[gpu_c][None])[0]
+        if frag_fn is not None
+        else _frag_from_base(base[gpu_c][None], free[gpu_c][None], metric)[0]
+    )
+    ring_gpu = st.ring_gpu.at[exp_row, exp_col].set(
+        jnp.where(ok, gpu_c, st.ring_gpu[exp_row, exp_col])
+    )
+    ring_mask = ring_mask.at[exp_row, exp_col].add(mask)
+
+    st = ReplicaState(
+        occ=occ, base=base, free=free, f=f, ring_gpu=ring_gpu, ring_mask=ring_mask
+    )
+    trace = EventTrace(
+        ok=ok,
+        gpu=gpu_c,
+        aidx=aidx.astype(jnp.int32),
+        free_sum=free_sum,
+        active=active,
+        frag=frag,
+    )
+    return st, trace
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "policy", "metric", "num_gpus", "ring_rows", "ring_cols", "use_kernel"
+    ),
+)
+def _simulate(
+    events: EventStream,  # each field (E_max, R) — events are the scanned axis
+    *,
+    policy: str,
+    metric: str,
+    num_gpus: int,
+    ring_rows: int,
+    ring_cols: int,
+    use_kernel: bool,
+) -> Tuple[ReplicaState, EventTrace]:
+    runs = events.pid.shape[1]
+    frag_fn = make_frag_fn(metric, True) if use_kernel else None
+    step = jax.vmap(
+        functools.partial(_event_step, policy=policy, metric=metric, frag_fn=frag_fn),
+        in_axes=(0, 0),
+    )
+    init = jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (runs,) + x.shape),
+        _init_state(num_gpus, ring_rows, ring_cols, track_occ=use_kernel),
+    )
+    # sample/measuring are host-side reduction flags — never shipped to the scan
+    xs = (events.pid, events.exp_row, events.exp_col, events.drain_row, events.new_slot)
+    return jax.lax.scan(lambda st, x: step(st, x), init, xs)
+
+
+# ---------------------------------------------------------------------------
+# Host-side arrival pre-sampling + public entry point
+# ---------------------------------------------------------------------------
+
+
+def _rank_within_groups(keys: np.ndarray) -> np.ndarray:
+    """Rank of each element within its equal-key group (first-occurrence order)."""
+    order = np.argsort(keys, kind="stable")
+    ks = keys[order]
+    starts = np.r_[0, np.flatnonzero(np.diff(ks)) + 1]
+    lengths = np.diff(np.r_[starts, len(ks)])
+    ranks_sorted = np.arange(len(ks)) - np.repeat(starts, lengths)
+    ranks = np.empty(len(ks), dtype=np.int64)
+    ranks[order] = ranks_sorted
+    return ranks
+
+
+def presample_arrivals(
+    cfg: SimConfig, runs: int, seed=None
+) -> Tuple[EventStream, EventMeta, int, int]:
+    """Build per-replica event streams on host.
+
+    Returns ``(events, meta, ring_rows, ring_cols)``.  One event per
+    Poisson arrival plus one heartbeat per empty slot (so consecutive
+    events never skip a slot), plus a trailing sentinel that samples the
+    final slot; streams are right-padded to the longest replica with no-op
+    lanes.
+    """
+    rng = np.random.default_rng(cfg.seed if seed is None else seed)
+    T, warm, meas, rate = steady_params(cfg)
+    total_slots = warm + meas
+    ring_k = T + 1  # end slots live in (t, t + T] — one ring revolution
+
+    counts = rng.poisson(rate, size=(runs, total_slots))
+    ev_per_slot = np.maximum(counts, 1)  # heartbeat for empty slots
+    n_events = ev_per_slot.sum(axis=1)  # (R,)
+    e_max = int(n_events.max()) + 1  # +1 trailing sentinel
+
+    pid = np.full((runs, e_max), -1, dtype=np.int32)
+    slot = np.full((runs, e_max), total_slots, dtype=np.int32)
+    new_slot = np.zeros((runs, e_max), dtype=bool)
+    end = np.zeros((runs, e_max), dtype=np.int64)  # absolute end slot
+
+    for r in range(runs):
+        n = n_events[r]
+        slots_r = np.repeat(np.arange(total_slots), ev_per_slot[r])
+        within = np.arange(n) - np.repeat(
+            np.cumsum(ev_per_slot[r]) - ev_per_slot[r], ev_per_slot[r]
+        )
+        is_arr = within < counts[r, slots_r]
+        na = int(is_arr.sum())
+        pid[r, :n][is_arr] = distributions.sample_profiles(
+            cfg.distribution, na, rng
+        )
+        slot[r, :n] = slots_r
+        new_slot[r, :n] = within == 0
+        end[r, :n][is_arr] = slots_r[is_arr] + rng.integers(1, T + 1, size=na)
+        new_slot[r, n] = True  # sentinel: drains/samples the final slot
+
+    is_arrival = pid >= 0
+    # collision-free ring columns: rank among same-(replica, end-slot) arrivals
+    exp_col = np.zeros((runs, e_max), dtype=np.int32)
+    flat = np.flatnonzero(is_arrival)  # C-order == per-replica arrival order
+    keys = (np.repeat(np.arange(runs), e_max)[flat].astype(np.int64)
+            * (total_slots + T + 1) + end.ravel()[flat])
+    ranks = _rank_within_groups(keys)
+    exp_col.ravel()[flat] = ranks
+    ring_cols = max(1, int(ranks.max()) + 1 if len(ranks) else 1)
+
+    exp_row = np.where(is_arrival, end % ring_k, ring_k + 1).astype(np.int32)
+    drain_row = (slot % ring_k).astype(np.int32)
+    prev = slot - 1
+    sample = (
+        new_slot & (prev >= warm) & ((prev - warm) % SAMPLE_EVERY == 0)
+    )
+    measuring = is_arrival & (slot >= warm)
+
+    events = EventStream(
+        pid=pid.T,
+        exp_row=exp_row.T,
+        exp_col=exp_col.T,
+        drain_row=drain_row.T,
+        new_slot=new_slot.T,
+        sample=sample.T,
+        measuring=measuring.T,
+    )
+    meta = EventMeta(slot=slot.T, end=end.T)
+    return events, meta, ring_k + 2, ring_cols
+
+
+def run_batched(
+    policy: str,
+    cfg: SimConfig,
+    runs: int = 64,
+    use_kernel: bool | None = None,
+) -> Dict[str, float]:
+    """Average ``runs`` replicas in one device program.
+
+    Drop-in for :func:`repro.sim.simulator.run_many` on the steady protocol
+    (same aggregate keys); ``policy`` must be one of :data:`POLICIES`.
+    ``use_kernel`` routes fragmentation-severity sampling through the
+    Pallas ``fragscore`` kernel (default: only on TPU).
+    """
+    if policy not in POLICIES:
+        raise ValueError(f"unknown batched policy {policy!r}; options {POLICIES}")
+    if cfg.protocol != "steady":
+        raise ValueError("run_batched implements the steady protocol only")
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+
+    events, _, ring_rows, ring_cols = presample_arrivals(cfg, runs)
+    _, trace = jax.device_get(
+        _simulate(
+            jax.tree.map(jnp.asarray, events),
+            policy=policy,
+            metric=cfg.metric,
+            num_gpus=cfg.num_gpus,
+            ring_rows=ring_rows,
+            ring_cols=ring_cols,
+            use_kernel=use_kernel,
+        )
+    )
+    return aggregate(events, trace, cfg.num_gpus, runs)
+
+
+def aggregate(
+    events: EventStream, trace: EventTrace, num_gpus: int, runs: int
+) -> Dict[str, float]:
+    """Reduce per-event traces against host-known flags to ``run_many`` keys."""
+    cap = float(num_gpus * mig.NUM_MEM_SLICES)
+    ok = np.asarray(trace.ok)
+    meas = events.measuring
+    samp = events.sample
+
+    arrived = np.maximum(meas.sum(axis=0), 1)  # (R,)
+    accepted = (ok & meas).sum(axis=0)
+    nsamp = np.maximum(samp.sum(axis=0), 1)
+    util = ((cap - trace.free_sum) / cap * samp).sum(axis=0) / nsamp
+    active = (trace.active * samp).sum(axis=0) / nsamp
+    frag = (trace.frag * samp).sum(axis=0) / nsamp
+    arrivals_p = np.stack(
+        [((events.pid == p) & meas).sum() for p in range(mig.NUM_PROFILES)]
+    )
+    rejects_p = np.stack(
+        [((events.pid == p) & meas & ~ok).sum() for p in range(mig.NUM_PROFILES)]
+    )
+    return {
+        "acceptance_rate": float((accepted / arrived).mean()),
+        "allocated_workloads": float(accepted.mean()),
+        "active_gpus": float(active.mean()),
+        "utilization": float(util.mean()),
+        "frag_severity": float(frag.mean()),
+        "rejects_by_profile": rejects_p / runs,
+        "arrivals_by_profile": arrivals_p / runs,
+    }

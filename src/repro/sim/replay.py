@@ -1,0 +1,123 @@
+"""Host-side replay and validation of batched-engine decision traces.
+
+The batched engine (:mod:`repro.sim.batched`) emits one decision per event
+(``EventTrace``); together with the host-known stream annotations
+(``EventStream``/``EventMeta``) the full occupancy trajectory of every
+replica is reproducible in plain numpy.  :func:`replay` re-executes the
+commits and releases and asserts the scheduling invariants the engine must
+uphold:
+
+* an accepted placement uses a *legal Table-I anchor* for its profile;
+* it never *double-books* a memory slice (its window is fully free);
+* a *release after expiry restores the exact pre-allocation occupancy*
+  (the window is fully occupied right before release and fully free after).
+
+Tests use this to cross-check the device scan against an independent
+host implementation; it is also handy for debugging new policies.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from repro.core import mig
+from repro.sim.batched import EventMeta, EventStream, EventTrace
+
+
+def _walk(
+    events: EventStream,
+    meta: EventMeta,
+    trace: EventTrace,
+    num_gpus: int,
+    check: bool,
+):
+    """Shared event walk: returns (final_occ (R, M, 8), alive sets per replica).
+
+    Each alive entry is ``(end_slot, gpu, anchor, mem)`` for a workload
+    still allocated when the stream ends.
+    """
+    e_max, runs = np.asarray(events.pid).shape
+    pid = np.asarray(events.pid)
+    new_slot = np.asarray(events.new_slot)
+    ok = np.asarray(trace.ok)
+    gpu = np.asarray(trace.gpu)
+    aidx = np.asarray(trace.aidx)
+    slot = np.asarray(meta.slot)
+    end = np.asarray(meta.end)
+
+    final = np.zeros((runs, num_gpus, mig.NUM_MEM_SLICES), dtype=np.int32)
+    alive_sets = []
+    for r in range(runs):
+        occ = final[r]
+        alive = []  # (end_slot, gpu, anchor, mem)
+        for e in range(e_max):
+            if new_slot[e, r]:
+                t = slot[e, r]
+                expired = [w for w in alive if w[0] <= t]
+                alive = [w for w in alive if w[0] > t]
+                for _, g, a, m in expired:
+                    if check:
+                        assert (occ[g, a : a + m] == 1).all(), (
+                            f"replica {r} event {e}: release of [{a},{a + m}) on "
+                            f"GPU {g} does not match a fully-occupied window"
+                        )
+                    occ[g, a : a + m] = 0
+            p = pid[e, r]
+            if p < 0 or not ok[e, r]:
+                continue
+            prof = mig.PROFILES[p]
+            g, j = int(gpu[e, r]), int(aidx[e, r])
+            if check:
+                assert 0 <= j < prof.num_placements, (
+                    f"replica {r} event {e}: anchor index {j} illegal for "
+                    f"profile {prof.name}"
+                )
+            anchor = prof.anchors[j]
+            if check:
+                assert (occ[g, anchor : anchor + prof.mem] == 0).all(), (
+                    f"replica {r} event {e}: {prof.name}@{anchor} double-books "
+                    f"slices on GPU {g}"
+                )
+            occ[g, anchor : anchor + prof.mem] = 1
+            alive.append((int(end[e, r]), g, anchor, prof.mem))
+        alive_sets.append(alive)
+    return final, alive_sets
+
+
+def replay(
+    events: EventStream,
+    meta: EventMeta,
+    trace: EventTrace,
+    num_gpus: int,
+    check: bool = True,
+) -> np.ndarray:
+    """Re-execute a decision trace on host; returns final occupancy (R, M, 8).
+
+    With ``check=True`` (default), raises ``AssertionError`` on any
+    invariant violation (illegal anchor, double-booking, inexact release).
+    """
+    final, _ = _walk(events, meta, trace, num_gpus, check)
+    return final
+
+
+def drain_all(
+    events: EventStream,
+    meta: EventMeta,
+    trace: EventTrace,
+    num_gpus: int,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Replay, then release every still-active workload.
+
+    Returns ``(final_occ, drained_occ)``; ``drained_occ`` must be all-zero
+    if and only if every release restores its exact allocation window —
+    the end-to-end form of the release-restores-occupancy invariant.
+    """
+    final, alive_sets = _walk(events, meta, trace, num_gpus, check=True)
+    drained = final.copy()
+    for r, alive in enumerate(alive_sets):
+        for _, g, a, m in alive:
+            assert (drained[r, g, a : a + m] == 1).all()
+            drained[r, g, a : a + m] = 0
+    return final, drained

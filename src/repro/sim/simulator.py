@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -71,6 +71,25 @@ def _saturation_horizon(num_gpus: int, dist: str) -> int:
     return int(np.ceil(cap / distributions.mean_mem_demand(dist)))
 
 
+#: slots between metric samples in the steady measurement window
+SAMPLE_EVERY = 10
+
+
+def steady_params(cfg: SimConfig) -> Tuple[int, int, int, float]:
+    """Shared steady-protocol parameters: ``(T, warm, meas, rate)``.
+
+    Both the Python reference loop and the batched JAX engine
+    (:mod:`repro.sim.batched`) derive their load model from here so the two
+    simulate the *same* arrival process by construction.
+    """
+    cap = cfg.num_gpus * mig.NUM_MEM_SLICES
+    mean_mem = distributions.mean_mem_demand(cfg.distribution)
+    T = _saturation_horizon(cfg.num_gpus, cfg.distribution)
+    mean_dur = (1 + T) / 2
+    rate = cfg.offered_load * cap / (mean_dur * mean_mem)
+    return T, cfg.warmup_horizons * T, cfg.measure_horizons * T, rate
+
+
 def run_simulation(scheduler: Scheduler, cfg: SimConfig, seed: Optional[int] = None) -> SimResult:
     if cfg.protocol == "steady":
         return _run_steady(scheduler, cfg, cfg.seed if seed is None else seed)
@@ -83,13 +102,7 @@ def _run_steady(scheduler: Scheduler, cfg: SimConfig, seed: int) -> SimResult:
     rng = np.random.default_rng(seed)
     scheduler.reset()
     cap = cfg.num_gpus * mig.NUM_MEM_SLICES
-    mean_mem = distributions.mean_mem_demand(cfg.distribution)
-    T = _saturation_horizon(cfg.num_gpus, cfg.distribution)
-    mean_dur = (1 + T) / 2
-    rate = cfg.offered_load * cap / (mean_dur * mean_mem)
-
-    warm = cfg.warmup_horizons * T
-    meas = cfg.measure_horizons * T
+    T, warm, meas, rate = steady_params(cfg)
 
     cluster = mig.ClusterState(cfg.num_gpus)
     expiry: List = []
@@ -128,7 +141,7 @@ def _run_steady(scheduler: Scheduler, cfg: SimConfig, seed: int) -> SimResult:
             elif measuring:
                 rejects[pid] += 1
             wid += 1
-        if t >= warm and (t - warm) % 10 == 0:
+        if t >= warm and (t - warm) % SAMPLE_EVERY == 0:
             util_s += cluster.used_mem_slices / cap
             gpus_s += cluster.active_gpus
             frag_s += fragmentation.cluster_fragmentation(

@@ -1,0 +1,93 @@
+"""Hypothesis property tests for the batched engine's scheduling invariants.
+
+Module-level skip-guarded (``hypothesis`` is an optional dev dependency —
+see ``requirements-dev.txt``); the deterministic fixed-seed variants of
+these checks always run in ``test_batched_sim.py``.
+
+Invariants (checked by the host replay in :mod:`repro.sim.replay` against
+the device decision trace):
+
+* a scan-step trajectory never double-books a memory slice;
+* accepted placements only use legal Table-I anchors;
+* ``release`` after expiry restores the exact pre-allocation occupancy.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mig
+from repro.sim import SimConfig
+from repro.sim import batched, replay
+
+
+def _run_trace(policy, seed, load, runs=2, num_gpus=3):
+    cfg = SimConfig(num_gpus=num_gpus, offered_load=load, seed=seed)
+    events, meta, rr, rc = batched.presample_arrivals(cfg, runs=runs)
+    final, trace = jax.device_get(
+        batched._simulate(
+            jax.tree.map(jnp.asarray, events),
+            policy=policy,
+            metric=cfg.metric,
+            num_gpus=cfg.num_gpus,
+            ring_rows=rr,
+            ring_cols=rc,
+            use_kernel=False,
+        )
+    )
+    return events, meta, trace, final, cfg
+
+
+class TestTrajectoryInvariants:
+    @given(
+        st.sampled_from(batched.POLICIES),
+        st.integers(0, 2**16),
+        st.sampled_from([0.6, 0.9, 1.2]),
+    )
+    @settings(max_examples=8, deadline=None)
+    def test_no_double_booking_and_legal_anchors(self, policy, seed, load):
+        events, meta, trace, final, cfg = _run_trace(policy, seed, load)
+        # replay raises AssertionError on any double-booked slice or
+        # illegal anchor, and on any release that does not free a
+        # fully-occupied window
+        occ = replay.replay(events, meta, trace, cfg.num_gpus)
+        w = np.asarray(mig.PLACEMENT_MASKS, np.float32)
+        np.testing.assert_allclose(final.base, occ.astype(np.float32) @ w.T)
+
+    @given(st.sampled_from(batched.POLICIES), st.integers(0, 2**16))
+    @settings(max_examples=6, deadline=None)
+    def test_release_restores_exact_occupancy(self, policy, seed):
+        events, meta, trace, final, cfg = _run_trace(policy, seed, 0.9)
+        _, drained = replay.drain_all(events, meta, trace, cfg.num_gpus)
+        np.testing.assert_array_equal(drained, 0)
+
+
+class TestSingleDecisionProperties:
+    @given(
+        st.sampled_from(batched.POLICIES),
+        st.lists(st.integers(0, 255), min_size=1, max_size=6),
+        st.integers(0, mig.NUM_PROFILES - 1),
+    )
+    @settings(max_examples=120, deadline=None)
+    def test_accepted_placement_is_legal_and_free(self, policy, bitmaps, pid):
+        occ = np.array(
+            [[int(b) for b in f"{bm:08b}"] for bm in bitmaps], np.int32
+        )
+        g, a, ok = batched.policy_select(jnp.asarray(occ), jnp.int32(pid), policy)
+        if not bool(ok):
+            return
+        g, a = int(g), int(a)
+        prof = mig.PROFILES[pid]
+        assert a in prof.anchors  # Table-I legality
+        assert (occ[g, a : a + prof.mem] == 0).all()  # no double-booking
+        # commit + release roundtrip restores exact occupancy
+        after = occ.copy()
+        after[g, a : a + prof.mem] = 1
+        after[g, a : a + prof.mem] = 0
+        np.testing.assert_array_equal(after, occ)

@@ -1,0 +1,199 @@
+"""Parity tests: the batched JAX engine vs the Python reference simulator.
+
+Two layers of guarantees (see ``docs/SIMULATOR.md``):
+
+* **exact** — single-step placement decisions of all four JAX policies
+  match their Python ``Scheduler.select`` counterparts on arbitrary
+  occupancy matrices (including full-cluster rejects);
+* **statistical** — whole-run aggregates agree within Monte-Carlo
+  tolerance (the engines consume their RNG streams differently).
+
+Plus deterministic trajectory-invariant checks via the host replay
+(:mod:`repro.sim.replay`); the hypothesis-driven variants live in
+``test_batched_invariants.py``.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mig, schedulers
+from repro.sim import SimConfig, run_many
+from repro.sim import batched, replay
+
+PID = {name: i for i, name in enumerate(mig.PROFILE_NAMES)}
+
+PY_SCHEDULERS = {
+    "mfi": schedulers.MFI,
+    "ff": schedulers.FirstFit,
+    "bf-bi": schedulers.BestFitBestIndex,
+    "wf-bi": schedulers.WorstFitBestIndex,
+}
+
+
+def _random_cluster(rng, m):
+    """A cluster with random legal allocations (possibly empty or full)."""
+    cl = mig.ClusterState(m)
+    density = rng.random() * 1.2
+    wid = 0
+    for g in range(m):
+        for pid in rng.permutation(mig.NUM_PROFILES):
+            if rng.random() < density:
+                anchors = cl.gpus[g].feasible_anchors(int(pid))
+                if anchors:
+                    cl.allocate(wid, int(pid), g, int(rng.choice(anchors)))
+                    wid += 1
+    return cl
+
+
+class TestSingleStepParity:
+    """(b) decisions match Scheduler.select exactly, incl. rejects."""
+
+    @pytest.mark.slow
+    def test_randomized_decisions_match_python(self):
+        rng = np.random.default_rng(7)
+        checked = 0
+        for _ in range(220):
+            m = int(rng.integers(1, 12))
+            cl = _random_cluster(rng, m)
+            occ = cl.occupancy_matrix()
+            pid = int(rng.integers(0, mig.NUM_PROFILES))
+            for name, cls in PY_SCHEDULERS.items():
+                ref = cls().select(cl, pid)
+                g, a, ok = batched.policy_select(
+                    jnp.asarray(occ), jnp.int32(pid), name
+                )
+                got = (int(g), int(a)) if bool(ok) else None
+                assert got == ref, (
+                    f"{name}: pid={pid} python={ref} batched={got}\n{occ}"
+                )
+                checked += 1
+        assert checked >= 200 * len(PY_SCHEDULERS)
+
+    @pytest.mark.parametrize("policy", batched.POLICIES)
+    def test_full_cluster_rejects(self, policy):
+        occ = jnp.ones((3, mig.NUM_MEM_SLICES), jnp.int32)
+        for pid in range(mig.NUM_PROFILES):
+            g, a, ok = batched.policy_select(occ, jnp.int32(pid), policy)
+            assert not bool(ok) and int(g) == -1 and int(a) == -1
+
+    @pytest.mark.parametrize("policy", batched.POLICIES)
+    def test_empty_cluster_accepts_everything(self, policy):
+        occ = jnp.zeros((3, mig.NUM_MEM_SLICES), jnp.int32)
+        for pid in range(mig.NUM_PROFILES):
+            cl = mig.ClusterState(3)
+            ref = PY_SCHEDULERS[policy]().select(cl, pid)
+            g, a, ok = batched.policy_select(occ, jnp.int32(pid), policy)
+            assert bool(ok) and (int(g), int(a)) == ref
+
+    def test_partial_metric_decisions_match_python(self):
+        rng = np.random.default_rng(11)
+        for _ in range(40):
+            cl = _random_cluster(rng, int(rng.integers(1, 8)))
+            occ = cl.occupancy_matrix()
+            pid = int(rng.integers(0, mig.NUM_PROFILES))
+            ref = schedulers.MFI(metric="partial").select(cl, pid)
+            g, a, ok = batched.policy_select(
+                jnp.asarray(occ), jnp.int32(pid), "mfi", metric="partial"
+            )
+            got = (int(g), int(a)) if bool(ok) else None
+            assert got == ref
+
+
+class TestAggregateParity:
+    """(a) whole-run aggregates agree within Monte-Carlo tolerance."""
+
+    RUNS = 24
+
+    @pytest.mark.slow
+    @pytest.mark.parametrize("policy", batched.POLICIES)
+    def test_acceptance_rate_m8(self, policy):
+        cfg = SimConfig(num_gpus=8, offered_load=0.85, seed=0)
+        rb = batched.run_batched(policy, cfg, runs=self.RUNS)
+        rp = run_many(policy, cfg, runs=self.RUNS)
+        # per-run acceptance std at M=8 is ~0.05 -> 3 sigma of the
+        # difference of two 24-run means is ~0.06
+        assert abs(rb["acceptance_rate"] - rp["acceptance_rate"]) < 0.06, (
+            f"{policy}: batched={rb['acceptance_rate']:.4f} "
+            f"python={rp['acceptance_rate']:.4f}"
+        )
+        assert abs(rb["utilization"] - rp["utilization"]) < 0.08
+        assert abs(rb["active_gpus"] - rp["active_gpus"]) < 1.0
+
+    def test_aggregate_keys_match_run_many(self):
+        cfg = SimConfig(num_gpus=4, offered_load=0.7, seed=1)
+        rb = batched.run_batched("mfi", cfg, runs=2)
+        rp = run_many("mfi", cfg, runs=2)
+        assert set(rb) == set(rp)
+        assert rb["arrivals_by_profile"].shape == (mig.NUM_PROFILES,)
+        total = rb["arrivals_by_profile"].sum()
+        accepted_plus_rejected = (
+            rb["allocated_workloads"] + rb["rejects_by_profile"].sum()
+        )
+        np.testing.assert_allclose(total, accepted_plus_rejected)
+
+
+class TestTrajectoryInvariants:
+    """Deterministic replay checks; hypothesis variants in
+    test_batched_invariants.py."""
+
+    @pytest.mark.parametrize("policy", batched.POLICIES)
+    def test_replay_validates_and_matches_final_state(self, policy):
+        cfg = SimConfig(num_gpus=4, offered_load=1.1, seed=3)
+        events, meta, rr, rc = batched.presample_arrivals(cfg, runs=3)
+        final, trace = jax.device_get(
+            batched._simulate(
+                jax.tree.map(jnp.asarray, events),
+                policy=policy,
+                metric=cfg.metric,
+                num_gpus=cfg.num_gpus,
+                ring_rows=rr,
+                ring_cols=rc,
+                use_kernel=False,
+            )
+        )
+        # replay asserts: legal anchors, no double-booking, exact releases
+        occ = replay.replay(events, meta, trace, cfg.num_gpus)
+        # device state must equal the independently reconstructed occupancy
+        w = np.asarray(mig.PLACEMENT_MASKS, np.float32)
+        np.testing.assert_allclose(final.base, occ.astype(np.float32) @ w.T)
+        np.testing.assert_array_equal(
+            final.free, mig.NUM_MEM_SLICES - occ.sum(axis=-1)
+        )
+
+    def test_drain_all_restores_empty_cluster(self):
+        cfg = SimConfig(num_gpus=4, offered_load=0.9, seed=5)
+        events, meta, rr, rc = batched.presample_arrivals(cfg, runs=2)
+        _, trace = jax.device_get(
+            batched._simulate(
+                jax.tree.map(jnp.asarray, events),
+                policy="mfi",
+                metric=cfg.metric,
+                num_gpus=cfg.num_gpus,
+                ring_rows=rr,
+                ring_cols=rc,
+                use_kernel=False,
+            )
+        )
+        _, drained = replay.drain_all(events, meta, trace, cfg.num_gpus)
+        np.testing.assert_array_equal(drained, 0)
+
+
+class TestAPI:
+    def test_unknown_policy_raises(self):
+        with pytest.raises(ValueError, match="unknown batched policy"):
+            batched.run_batched("rr", SimConfig(num_gpus=2), runs=1)
+
+    def test_cumulative_protocol_raises(self):
+        cfg = SimConfig(num_gpus=2, protocol="cumulative")
+        with pytest.raises(ValueError, match="steady"):
+            batched.run_batched("mfi", cfg, runs=1)
+
+    def test_deterministic_given_seed(self):
+        cfg = SimConfig(num_gpus=4, offered_load=0.8, seed=9)
+        r1 = batched.run_batched("ff", cfg, runs=2)
+        r2 = batched.run_batched("ff", cfg, runs=2)
+        assert r1["acceptance_rate"] == r2["acceptance_rate"]
+        assert r1["frag_severity"] == r2["frag_severity"]

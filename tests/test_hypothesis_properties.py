@@ -1,0 +1,92 @@
+"""Hypothesis property tests for the fragmentation metric, the MFI kernels
+and the jitted cluster scheduler.
+
+Module-level skip-guarded: ``hypothesis`` is an optional dev dependency
+(``requirements-dev.txt`` / the ``dev`` extra) — tier-1 collects cleanly
+without it, and these properties run wherever it is installed (CI installs
+it).  The deterministic (exhaustive / fixed-seed) variants of these checks
+live in the corresponding always-on test modules.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import cluster as jcluster
+from repro.core import fragmentation, mig, schedulers
+from repro.kernels.fragscore import ops as frag_ops
+
+
+def _occ(*slices):
+    x = np.zeros(mig.NUM_MEM_SLICES, dtype=np.int32)
+    for s in slices:
+        x[s] = 1
+    return x
+
+
+class TestFragmentationProperties:
+    @given(st.lists(st.integers(0, 7), min_size=0, max_size=8))
+    @settings(max_examples=200, deadline=None)
+    def test_jnp_matches_numpy(self, slices):
+        occ = _occ(*slices)[None, :]
+        for metric in fragmentation.METRIC_VARIANTS:
+            ref = fragmentation.fragmentation_scores(occ, metric)
+            got = np.asarray(jcluster.frag_scores(jnp.asarray(occ), metric))
+            np.testing.assert_allclose(got, ref)
+
+    @given(st.lists(st.integers(0, 7), min_size=0, max_size=6))
+    @settings(max_examples=100, deadline=None)
+    def test_nonnegative_and_bounded(self, slices):
+        occ = _occ(*slices)
+        for metric in fragmentation.METRIC_VARIANTS:
+            f = fragmentation.fragmentation_score(occ, metric)
+            assert 0 <= f <= mig.PLACEMENT_MEM.sum()
+
+
+class TestMFIDeltaKernelProperties:
+    @given(st.integers(0, 255), st.integers(0, 5))
+    @settings(max_examples=80, deadline=None)
+    def test_single_gpu_property(self, bitmap, pid):
+        occ = np.array([[int(b) for b in f"{bitmap:08b}"]], np.int32)
+        delta = np.asarray(frag_ops.mfi_delta_f(jnp.asarray(occ), jnp.int32(pid)))[0]
+        prof = mig.PROFILES[pid]
+        for j, anchor in enumerate(prof.anchors):
+            window_free = occ[0, anchor : anchor + prof.mem].sum() == 0
+            if window_free:
+                expect = fragmentation.delta_f(occ[0], pid, anchor)
+                np.testing.assert_allclose(delta[j], expect, rtol=1e-6)
+            else:
+                assert delta[j] > 1e29
+
+
+class TestJaxSchedulerProperties:
+    @given(
+        st.lists(
+            st.tuples(st.integers(0, 5), st.integers(0, 5)), min_size=0, max_size=24
+        ),
+        st.integers(0, 5),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_mfi_select_parity(self, placements, req_pid):
+        cl = mig.ClusterState(6)
+        wid = 0
+        for pid, gpu in placements:
+            anchors = cl.gpus[gpu].feasible_anchors(pid)
+            if anchors:
+                cl.allocate(wid, pid, gpu, anchors[0])
+                wid += 1
+        occ = cl.occupancy_matrix()
+        d = jcluster.mfi_select(jnp.asarray(occ), jnp.int32(req_pid))
+        gpus, anchors, deltas = schedulers.mfi_candidates(occ, req_pid)
+        if len(gpus) == 0:
+            assert not bool(d.accepted)
+        else:
+            assert bool(d.accepted)
+            k = np.lexsort((anchors, gpus, deltas))[0]
+            assert (int(d.gpu), int(d.anchor)) == (int(gpus[k]), int(anchors[k]))
+            np.testing.assert_allclose(float(d.delta_f), deltas[k], rtol=1e-6)

@@ -1,14 +1,13 @@
 """Per-kernel allclose tests: Pallas (interpret=True) vs pure-jnp oracles.
 
 Shape/dtype sweeps as required: every kernel is compared against its
-``ref.py`` oracle over a grid of shapes and dtypes, plus hypothesis
-property tests on the scheduler kernels.
+``ref.py`` oracle over a grid of shapes and dtypes.  Hypothesis property
+tests on the scheduler kernels live in ``test_hypothesis_properties.py``
+(skip-guarded) so this module collects without the optional dev dependency.
 """
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 import jax.numpy as jnp
 
@@ -62,20 +61,6 @@ class TestMFIDeltaKernel:
             np.testing.assert_allclose(delta[g, col], d, rtol=1e-6)
             n_feasible += 1
         assert (delta < 1e29).sum() == n_feasible
-
-    @given(st.integers(0, 255), st.integers(0, 5))
-    @settings(max_examples=80, deadline=None)
-    def test_single_gpu_property(self, bitmap, pid):
-        occ = np.array([[int(b) for b in f"{bitmap:08b}"]], np.int32)
-        delta = np.asarray(frag_ops.mfi_delta_f(jnp.asarray(occ), jnp.int32(pid)))[0]
-        prof = mig.PROFILES[pid]
-        for j, anchor in enumerate(prof.anchors):
-            window_free = occ[0, anchor : anchor + prof.mem].sum() == 0
-            if window_free:
-                expect = frag_np.delta_f(occ[0], pid, anchor)
-                np.testing.assert_allclose(delta[j], expect, rtol=1e-6)
-            else:
-                assert delta[j] > 1e29
 
     def test_select_agrees_with_reference_scheduler(self):
         rng = np.random.default_rng(42)

@@ -45,6 +45,7 @@ class TestAdmission:
         assert s["accepted"] == 1 and s["active_gpus"] == 1
 
 
+@pytest.mark.slow
 class TestServingEngine:
     @pytest.fixture(scope="class")
     def setup(self):

@@ -102,10 +102,9 @@ class TestHLOAnalysis:
             import sys, json
             sys.path.insert(0, "src")
             import jax, jax.numpy as jnp
-            from jax.sharding import PartitionSpec as P
+            from jax.sharding import NamedSharding, PartitionSpec as P
             from repro.launch.hlo_analysis import analyze
-            mesh = jax.make_mesh((2,4), ("data","model"),
-                                 axis_types=(jax.sharding.AxisType.Auto,)*2)
+            mesh = jax.make_mesh((2, 4), ("data", "model"))
             def f(w, x):
                 def body(c, wi):
                     return jnp.tanh(c @ wi), None
@@ -113,8 +112,9 @@ class TestHLOAnalysis:
                 return y.sum()
             wspec = jax.ShapeDtypeStruct((6, 256, 256), jnp.float32)
             xspec = jax.ShapeDtypeStruct((64, 256), jnp.float32)
-            with jax.set_mesh(mesh):
-                comp = jax.jit(f, in_shardings=(P(None, "data", "model"), P("data", None))).lower(wspec, xspec).compile()
+            shardings = (NamedSharding(mesh, P(None, "data", "model")),
+                         NamedSharding(mesh, P("data", None)))
+            comp = jax.jit(f, in_shardings=shardings).lower(wspec, xspec).compile()
             a = analyze(comp.as_text())
             print(json.dumps({"flops": a.flops, "coll": a.collective_bytes}))
         """)

@@ -57,6 +57,7 @@ class TestSimulator:
         assert arrived > 0
         assert r.allocated_workloads + r.rejects_by_profile.sum() == arrived
 
+    @pytest.mark.slow
     def test_mfi_beats_spreading_baselines_under_load(self):
         """Core paper claim, small-scale: MFI acceptance >= RR and WF-BI."""
         cfg = SimConfig(num_gpus=16, offered_load=0.9, seed=11)

@@ -25,6 +25,7 @@ def _batch(cfg, rng):
     return batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ASSIGNED)
 def test_smoke_forward_and_train_step(arch):
     cfg = SMOKES[arch]
