@@ -8,11 +8,17 @@ script sees) and *steady-state* (what any sweep beyond one point sees:
 the compiled program is reused across loads, distributions and seeds,
 only shapes recompile).  The headline speedup is the steady-state number;
 the acceptance bar is >= 10x on CPU.
+
+``--smoke`` shrinks the point (M=16, 8 replicas) so CI can track the perf
+trajectory per-PR in ~a minute; ``--json PATH`` dumps the metrics for the
+workflow artifact.  Smoke mode records the numbers without enforcing the
+10x bar (tiny clusters under-utilize the batched engine by design).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 from repro.sim import SimConfig, run_many
@@ -43,7 +49,10 @@ def bench_point(policy: str, cfg: SimConfig, runs: int, py_runs: int):
 
 
 def main(runs: int = 64, num_gpus: int = 100, load: float = 0.85,
-         policy: str = "mfi", py_runs: int = 3):
+         policy: str = "mfi", py_runs: int = 3, smoke: bool = False,
+         json_path: str | None = None):
+    if smoke:
+        runs, num_gpus, py_runs = min(runs, 8), min(num_gpus, 16), min(py_runs, 2)
     cfg = SimConfig(
         num_gpus=num_gpus, distribution="uniform", offered_load=load, seed=0
     )
@@ -62,13 +71,21 @@ def main(runs: int = 64, num_gpus: int = 100, load: float = 0.85,
         f"# acceptance parity: python={r['acc_python']:.4f} "
         f"batched={r['acc_batched']:.4f}"
     )
-    ok = r["speedup_warm"] >= 10.0
+    ok = smoke or r["speedup_warm"] >= 10.0
     print(
         f"# replica-throughput speedup (steady-state) @ "
         f"(M={num_gpus}, runs={runs}, uniform, {load:.2f} load): "
         f"{r['speedup_warm']:.1f}x (cold incl. compile: {r['speedup_cold']:.1f}x) "
-        f"-> {'PASS' if ok else 'FAIL'} (>= 10x required)"
+        f"-> {'PASS' if ok else 'FAIL'}"
+        f"{' (smoke mode: recorded, not enforced)' if smoke else ' (>= 10x required)'}"
     )
+    if json_path:
+        payload = dict(
+            r, policy=policy, num_gpus=num_gpus, runs=runs, load=load, smoke=smoke
+        )
+        with open(json_path, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+        print(f"# wrote {json_path}")
     return r
 
 
@@ -79,8 +96,13 @@ if __name__ == "__main__":
     ap.add_argument("--load", type=float, default=0.85)
     ap.add_argument("--policy", default="mfi")
     ap.add_argument("--py-runs", type=int, default=3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized point (M=16, 8 replicas); records, never fails")
+    ap.add_argument("--json", dest="json_path", default=None,
+                    help="write metrics JSON here (workflow artifact)")
     args = ap.parse_args()
     main(
         runs=args.runs, num_gpus=args.num_gpus, load=args.load,
-        policy=args.policy, py_runs=args.py_runs,
+        policy=args.policy, py_runs=args.py_runs, smoke=args.smoke,
+        json_path=args.json_path,
     )

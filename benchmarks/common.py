@@ -25,13 +25,32 @@ def csv_row(name: str, us: float, derived: str = "") -> str:
 
 ENGINES = ("python", "batched")
 
+#: named fleet scenarios (--cluster flags also accept raw spec strings
+#: such as "a100-80:40,a100-40:40,h100-96:20")
+CLUSTERS = {
+    "homogeneous": None,
+    "mixed": "a100-80:50,a100-40:50",
+}
+
+
+def resolve_cluster(cluster, num_gpus: int):
+    """``--cluster`` value -> (ClusterSpec | None, effective num_gpus)."""
+    from repro.core import mig
+
+    text = CLUSTERS.get(cluster, cluster) if cluster else None
+    if text is None:
+        return None, num_gpus
+    spec = mig.ClusterSpec.parse(text)
+    return spec, spec.num_gpus
+
 
 def run_engine(engine: str, scheduler: str, cfg, runs: int):
     """Dispatch a Monte-Carlo sweep point to the chosen simulation engine.
 
-    ``batched`` covers the four stateless policies (mfi/ff/bf-bi/wf-bi) on
-    the steady protocol; anything else (rr, mfi-defrag, cumulative) falls
-    back to the Python reference loop so sweeps stay complete.
+    ``batched`` covers the five scan policies (mfi/ff/bf-bi/wf-bi/rr — RR's
+    cursor rides in the scan state) on the steady protocol, homogeneous or
+    mixed ``cfg.cluster_spec``; anything else (mfi-defrag, cumulative)
+    falls back to the Python reference loop so sweeps stay complete.
     """
     from repro.sim import run_many
     from repro.sim.batched import POLICIES, run_batched

@@ -7,7 +7,12 @@ FF/BF-BI pack but fragment.
 
 ``--engine batched`` (default ``python``) runs each sweep point through the
 batched JAX engine (:mod:`repro.sim.batched`) — same aggregates, one device
-program per point; RR falls back to the Python loop (stateful policy).
+program per point; mfi-defrag (if requested) falls back to the Python loop.
+
+``--cluster`` selects the fleet: ``homogeneous`` (the paper's A100-80GB
+fleet of ``--num-gpus``), the named ``mixed`` scenario (half A100-80GB,
+half A100-40GB), or any explicit spec string such as
+``a100-80:40,a100-40:40,h100-96:20``.
 """
 
 from __future__ import annotations
@@ -16,21 +21,22 @@ import argparse
 
 import numpy as np
 
-from benchmarks.common import ENGINES, run_engine
+from benchmarks.common import CLUSTERS, ENGINES, resolve_cluster, run_engine
 from repro.sim import SimConfig
 
 SCHEDULERS = ("ff", "rr", "bf-bi", "wf-bi", "mfi")
 
 
 def run(runs: int = 30, num_gpus: int = 100, loads=(0.5, 0.7, 0.85, 1.0),
-        seed: int = 0, engine: str = "python"):
+        seed: int = 0, engine: str = "python", cluster: str | None = None):
+    spec, num_gpus = resolve_cluster(cluster, num_gpus)
     rows = []
     results = {}
     for load in loads:
         for name in SCHEDULERS:
             cfg = SimConfig(
                 num_gpus=num_gpus, distribution="uniform",
-                offered_load=load, seed=seed,
+                offered_load=load, seed=seed, cluster_spec=spec,
             )
             r = run_engine(engine, name, cfg, runs=runs)
             results[(name, load)] = r
@@ -42,9 +48,9 @@ def run(runs: int = 30, num_gpus: int = 100, loads=(0.5, 0.7, 0.85, 1.0),
     return rows, results
 
 
-def main(runs: int = 30, engine: str = "python"):
+def main(runs: int = 30, engine: str = "python", cluster: str | None = None):
     print("table,scheduler,load,acceptance,allocated,utilization,active_gpus,frag")
-    rows, results = run(runs=runs, engine=engine)
+    rows, results = run(runs=runs, engine=engine, cluster=cluster)
     for row in rows:
         print(row)
     # headline check at heavy load
@@ -59,5 +65,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--runs", type=int, default=30)
     ap.add_argument("--engine", choices=ENGINES, default="python")
+    ap.add_argument(
+        "--cluster", default=None,
+        help=f"named scenario {sorted(CLUSTERS)} or spec string 'a100-80:50,a100-40:50'",
+    )
     args = ap.parse_args()
-    main(runs=args.runs, engine=args.engine)
+    main(runs=args.runs, engine=args.engine, cluster=args.cluster)

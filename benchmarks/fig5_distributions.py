@@ -2,15 +2,16 @@
 MIG-profile distributions of Table II.
 
 ``--engine batched`` (default ``python``) runs each sweep point through the
-batched JAX engine (:mod:`repro.sim.batched`); RR falls back to the Python
-loop (stateful policy).
+batched JAX engine (:mod:`repro.sim.batched`; all five policies, RR's
+cursor rides in the scan state).  ``--cluster`` selects the fleet (see
+:mod:`benchmarks.fig4_load_sweep`).
 """
 
 from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import ENGINES, run_engine
+from benchmarks.common import CLUSTERS, ENGINES, resolve_cluster, run_engine
 from repro.sim import SimConfig
 from repro.sim.distributions import DISTRIBUTIONS
 
@@ -18,12 +19,14 @@ SCHEDULERS = ("ff", "rr", "bf-bi", "wf-bi", "mfi")
 
 
 def run(runs: int = 30, num_gpus: int = 100, load: float = 0.85, seed: int = 0,
-        engine: str = "python"):
+        engine: str = "python", cluster: str | None = None):
+    spec, num_gpus = resolve_cluster(cluster, num_gpus)
     rows, results = [], {}
     for dist in DISTRIBUTIONS:
         for name in SCHEDULERS:
             cfg = SimConfig(
-                num_gpus=num_gpus, distribution=dist, offered_load=load, seed=seed
+                num_gpus=num_gpus, distribution=dist, offered_load=load,
+                seed=seed, cluster_spec=spec,
             )
             r = run_engine(engine, name, cfg, runs=runs)
             results[(name, dist)] = r
@@ -35,9 +38,9 @@ def run(runs: int = 30, num_gpus: int = 100, load: float = 0.85, seed: int = 0,
     return rows, results
 
 
-def main(runs: int = 30, engine: str = "python"):
+def main(runs: int = 30, engine: str = "python", cluster: str | None = None):
     print("table,scheduler,distribution,acceptance,allocated,utilization,active_gpus,frag")
-    rows, results = run(runs=runs, engine=engine)
+    rows, results = run(runs=runs, engine=engine, cluster=cluster)
     for row in rows:
         print(row)
     for dist in DISTRIBUTIONS:
@@ -51,5 +54,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--runs", type=int, default=30)
     ap.add_argument("--engine", choices=ENGINES, default="python")
+    ap.add_argument(
+        "--cluster", default=None,
+        help=f"named scenario {sorted(CLUSTERS)} or spec string 'a100-80:50,a100-40:50'",
+    )
     args = ap.parse_args()
-    main(runs=args.runs, engine=args.engine)
+    main(runs=args.runs, engine=args.engine, cluster=args.cluster)

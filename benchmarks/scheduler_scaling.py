@@ -1,11 +1,13 @@
 """Scheduler decision latency vs cluster size (paper §V complexity claim:
 O(kM) per decision) — numpy reference vs jitted JAX vs Pallas kernel path,
-plus the batched engine's single-decision path (``--engine batched`` limits
-the sweep to it; default ``python`` times everything)."""
+plus the batched engine's single-decision path on both a homogeneous and a
+mixed half-A100-80/half-A100-40 fleet (``--engine batched`` limits the
+sweep to the batched paths; default ``python`` times everything)."""
 
 from __future__ import annotations
 
 import argparse
+import functools
 
 import numpy as np
 import jax
@@ -52,6 +54,14 @@ def main(engine: str = "python"):
         g = jax.jit(lambda o, p: policy_select(o, p, "mfi"))
         us = time_fn(lambda: jax.block_until_ready(g(occ, pid)), warmup=2, iters=10)
         print(f"scaling,batched-select,{m},{us:.1f},{1e6/us:.0f}")
+
+        # same path on a mixed fleet (stacked tables + model-index gather)
+        spec = mig.ClusterSpec(
+            ((mig.A100_80GB, m // 2), (mig.A100_40GB, m - m // 2))
+        )
+        h = jax.jit(functools.partial(policy_select, policy="mfi", spec=spec))
+        us = time_fn(lambda: jax.block_until_ready(h(occ, pid)), warmup=2, iters=10)
+        print(f"scaling,batched-select-mixed,{m},{us:.1f},{1e6/us:.0f}")
 
 
 if __name__ == "__main__":

@@ -4,7 +4,10 @@
 
 (The paper uses 500 runs; 30-100 gives the same ordering with tight CIs.
 ``--engine batched`` runs fig4/fig5 sweep points through the batched JAX
-engine — paper-scale 500-replica sweeps become practical on CPU.)
+engine — paper-scale 500-replica sweeps become practical on CPU.
+``--cluster mixed`` re-runs the evaluation on a heterogeneous
+half-A100-80GB / half-A100-40GB fleet — a beyond-paper scenario; any
+explicit spec string like ``a100-80:40,a100-40:40,h100-96:20`` works too.)
 """
 
 import argparse
@@ -14,18 +17,24 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--runs", type=int, default=50)
     ap.add_argument("--engine", choices=("python", "batched"), default="python")
+    ap.add_argument(
+        "--cluster", default=None,
+        help="fleet scenario for fig4/fig5: 'homogeneous' (default), "
+        "'mixed', or a spec string 'a100-80:50,a100-40:50'",
+    )
     args = ap.parse_args()
 
     from benchmarks import fig4_load_sweep, fig5_distributions, fig6_fragscore
 
+    fleet = args.cluster or "homogeneous"
     print("=" * 70)
-    print("Fig. 4 — load sweep, uniform distribution")
+    print(f"Fig. 4 — load sweep, uniform distribution ({fleet} fleet)")
     print("=" * 70)
-    fig4_load_sweep.main(runs=args.runs, engine=args.engine)
+    fig4_load_sweep.main(runs=args.runs, engine=args.engine, cluster=args.cluster)
     print("=" * 70)
-    print("Fig. 5 — four distributions at 85% load")
+    print(f"Fig. 5 — four distributions at 85% load ({fleet} fleet)")
     print("=" * 70)
-    fig5_distributions.main(runs=args.runs, engine=args.engine)
+    fig5_distributions.main(runs=args.runs, engine=args.engine, cluster=args.cluster)
     print("=" * 70)
     print("Fig. 6 — fragmentation severity")
     print("=" * 70)

@@ -1,13 +1,19 @@
 """Paper core: MIG model, fragmentation metric (Alg. 1), MFI scheduler (Alg. 2)."""
 
 from repro.core.mig import (  # noqa: F401
+    A100_40GB,
+    A100_80GB,
+    DEVICE_MODELS,
+    H100_96GB,
     NUM_MEM_SLICES,
     NUM_PROFILES,
     NUM_SM_SLICES,
     PROFILE_BY_NAME,
     PROFILE_NAMES,
     PROFILES,
+    ClusterSpec,
     ClusterState,
+    DeviceModel,
     GPUState,
     MIGProfile,
 )
@@ -16,6 +22,7 @@ from repro.core.fragmentation import (  # noqa: F401
     delta_f,
     fragmentation_score,
     fragmentation_scores,
+    spec_fragmentation_scores,
 )
 from repro.core.schedulers import (  # noqa: F401
     MFI,

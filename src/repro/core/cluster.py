@@ -26,19 +26,42 @@ from repro.core import mig
 MAX_ANCHORS = max(p.num_placements for p in mig.PROFILES)  # 7
 
 
-def _np_profile_tables() -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Per-profile padded anchor tables.
+class DeviceTables(NamedTuple):
+    """One device model's placement tables as jnp constants.
+
+    Shapes (N = flattened placements, A = padded anchor count, S = slices):
+      ``placement_masks (N, S)`` / ``placement_mem (N,)`` — flattened table;
+      ``profile_masks (P, A, S)`` / ``profile_anchors (P, A)`` /
+      ``profile_valid (P, A)`` — per-class padded anchor views.
+    """
+
+    placement_masks: jax.Array
+    placement_mem: jax.Array
+    profile_masks: jax.Array
+    profile_anchors: jax.Array
+    profile_valid: jax.Array
+
+    @property
+    def num_mem_slices(self) -> int:
+        return self.placement_masks.shape[1]
+
+
+def _np_profile_tables(
+    model: mig.DeviceModel, max_anchors: int = None
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-profile padded anchor tables of one device model.
 
     Returns:
-      masks:   (P, A_max, 8) int32 — placement window bitmask (0 where padded)
+      masks:   (P, A_max, S) int32 — placement window bitmask (0 where padded)
       anchors: (P, A_max)    int32 — anchor index (-1 where padded)
       valid:   (P, A_max)    bool  — anchor validity
     """
     P = mig.NUM_PROFILES
-    masks = np.zeros((P, MAX_ANCHORS, mig.NUM_MEM_SLICES), dtype=np.int32)
-    anchors = np.full((P, MAX_ANCHORS), -1, dtype=np.int32)
-    valid = np.zeros((P, MAX_ANCHORS), dtype=bool)
-    for pid, prof in enumerate(mig.PROFILES):
+    A = max_anchors if max_anchors is not None else model.max_anchors
+    masks = np.zeros((P, A, model.num_mem_slices), dtype=np.int32)
+    anchors = np.full((P, A), -1, dtype=np.int32)
+    valid = np.zeros((P, A), dtype=bool)
+    for pid, prof in enumerate(model.profiles):
         for j, a in enumerate(prof.anchors):
             masks[pid, j, a : a + prof.mem] = 1
             anchors[pid, j] = a
@@ -46,9 +69,25 @@ def _np_profile_tables() -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     return masks, anchors, valid
 
 
-_PROFILE_MASKS_NP, _PROFILE_ANCHORS_NP, _PROFILE_VALID_NP = _np_profile_tables()
+@functools.lru_cache(maxsize=None)
+def tables_for(model: mig.DeviceModel, max_anchors: int = None) -> DeviceTables:
+    """Build (and cache) the jnp placement tables of a device model."""
+    masks, anchors, valid = _np_profile_tables(model, max_anchors)
+    return DeviceTables(
+        placement_masks=jnp.asarray(model.placement_masks, dtype=jnp.float32),
+        placement_mem=jnp.asarray(model.placement_mem, dtype=jnp.float32),
+        profile_masks=jnp.asarray(masks),
+        profile_anchors=jnp.asarray(anchors),
+        profile_valid=jnp.asarray(valid),
+    )
 
-# Constant tables (host numpy; closed over by jitted fns as literals).
+
+_PROFILE_MASKS_NP, _PROFILE_ANCHORS_NP, _PROFILE_VALID_NP = _np_profile_tables(
+    mig.A100_80GB
+)
+
+# Constant A100-80GB tables (host numpy; closed over by jitted fns as
+# literals) — the defaults whenever no ``tables`` argument is passed.
 PLACEMENT_MASKS = jnp.asarray(mig.PLACEMENT_MASKS, dtype=jnp.float32)  # (18, 8)
 PLACEMENT_MEM = jnp.asarray(mig.PLACEMENT_MEM, dtype=jnp.float32)  # (18,)
 PROFILE_MASKS = jnp.asarray(_PROFILE_MASKS_NP)  # (P, 7, 8)
@@ -56,19 +95,30 @@ PROFILE_ANCHORS = jnp.asarray(_PROFILE_ANCHORS_NP)  # (P, 7)
 PROFILE_VALID = jnp.asarray(_PROFILE_VALID_NP)  # (P, 7)
 PROFILE_MEM = jnp.asarray(mig.PROFILE_MEM)  # (P,)
 
+_DEFAULT_TABLES = DeviceTables(
+    placement_masks=PLACEMENT_MASKS,
+    placement_mem=PLACEMENT_MEM,
+    profile_masks=PROFILE_MASKS,
+    profile_anchors=PROFILE_ANCHORS,
+    profile_valid=PROFILE_VALID,
+)
 
-def frag_scores(occ: jax.Array, metric: str = "blocked") -> jax.Array:
-    """F(m) for every GPU.  occ: (M, 8) int — returns (M,) float32."""
+
+def frag_scores(
+    occ: jax.Array, metric: str = "blocked", tables: DeviceTables = None
+) -> jax.Array:
+    """F(m) for every same-model GPU.  occ: (M, S) int — returns (M,) float32."""
+    t = _DEFAULT_TABLES if tables is None else tables
     occf = occ.astype(jnp.float32)
-    occ_in_window = occf @ PLACEMENT_MASKS.T  # (M, 18)
-    size = PLACEMENT_MEM[None, :]
+    occ_in_window = occf @ t.placement_masks.T  # (M, N)
+    size = t.placement_mem[None, :]
     if metric == "blocked":
         counted = occ_in_window > 0
     elif metric == "partial":
         counted = (occ_in_window > 0) & (occ_in_window < size)
     else:
         raise ValueError(f"unknown metric {metric!r}")
-    free = mig.NUM_MEM_SLICES - occf.sum(axis=1, keepdims=True)  # (M, 1)
+    free = t.num_mem_slices - occf.sum(axis=1, keepdims=True)  # (M, 1)
     eligible = size <= free
     return jnp.sum(jnp.where(counted & eligible, size, 0.0), axis=1)
 
@@ -80,50 +130,65 @@ class MFIDecision(NamedTuple):
     delta_f: jax.Array  # float32 ΔF of the chosen placement (0 when rejected)
 
 
-def placement_feasibility(occ: jax.Array, profile_id: jax.Array) -> jax.Array:
+def placement_feasibility(
+    occ: jax.Array, profile_id: jax.Array, tables: DeviceTables = None
+) -> jax.Array:
     """(M, A) bool — anchors of ``profile_id`` whose window is fully free.
 
-    Columns follow ``PROFILE_ANCHORS[profile_id]`` (ascending anchor order);
-    padded anchor columns are always infeasible.
+    Columns follow ``tables.profile_anchors[profile_id]`` (ascending anchor
+    order); padded anchor columns are always infeasible.
     """
-    masks = PROFILE_MASKS[profile_id]  # (A, 8) int32
-    valid = PROFILE_VALID[profile_id]  # (A,)
+    t = _DEFAULT_TABLES if tables is None else tables
+    masks = t.profile_masks[profile_id]  # (A, S) int32
+    valid = t.profile_valid[profile_id]  # (A,)
     occf = occ.astype(jnp.float32)
     overlap = occf @ masks.T.astype(jnp.float32)  # (M, A)
     return (overlap == 0) & valid[None, :]
 
 
 def placement_delta_f(
-    occ: jax.Array, profile_id: jax.Array, metric: str = "blocked", frag_fn=None
+    occ: jax.Array,
+    profile_id: jax.Array,
+    metric: str = "blocked",
+    frag_fn=None,
+    tables: DeviceTables = None,
 ) -> jax.Array:
     """(M, A) float32 — ΔF of every dry-run placement of ``profile_id``.
 
-    ``frag_fn`` maps an (N, 8) occupancy to (N,) scores; defaults to the
+    ``frag_fn`` maps an (N, S) occupancy to (N,) scores; defaults to the
     pure-jnp :func:`frag_scores` (the Pallas ``fragscore`` kernel is a
     drop-in — see :mod:`repro.kernels.fragscore.ops`).
     """
+    t = _DEFAULT_TABLES if tables is None else tables
     if frag_fn is None:
-        frag_fn = functools.partial(frag_scores, metric=metric)
-    masks = PROFILE_MASKS[profile_id]  # (A, 8) int32
+        frag_fn = functools.partial(frag_scores, metric=metric, tables=tables)
+    masks = t.profile_masks[profile_id]  # (A, S) int32
     f_before = frag_fn(occ)  # (M,)
-    hypo = jnp.minimum(occ[:, None, :] + masks[None, :, :], 1)  # (M, A, 8)
-    f_after = frag_fn(hypo.reshape(-1, mig.NUM_MEM_SLICES)).reshape(
+    hypo = jnp.minimum(occ[:, None, :] + masks[None, :, :], 1)  # (M, A, S)
+    f_after = frag_fn(hypo.reshape(-1, t.num_mem_slices)).reshape(
         occ.shape[0], -1
     )  # (M, A)
     return f_after - f_before[:, None]
 
 
 @functools.partial(jax.jit, static_argnames=("metric",))
-def mfi_select(occ: jax.Array, profile_id: jax.Array, metric: str = "blocked") -> MFIDecision:
+def mfi_select(
+    occ: jax.Array,
+    profile_id: jax.Array,
+    metric: str = "blocked",
+    tables: DeviceTables = None,
+) -> MFIDecision:
     """Algorithm 2's argmin over all feasible (GPU, anchor) dry-runs.
 
     Args:
-      occ: (M, 8) int32 cluster occupancy.
+      occ: (M, S) int32 occupancy of same-model GPUs (``tables`` selects the
+        model; default A100-80GB).
       profile_id: scalar int32 (traced — one jit serves all profiles).
     """
-    anchors = PROFILE_ANCHORS[profile_id]  # (A,)
-    feasible = placement_feasibility(occ, profile_id)
-    delta = placement_delta_f(occ, profile_id, metric)
+    t = _DEFAULT_TABLES if tables is None else tables
+    anchors = t.profile_anchors[profile_id]  # (A,)
+    feasible = placement_feasibility(occ, profile_id, tables)
+    delta = placement_delta_f(occ, profile_id, metric, tables=tables)
 
     big = jnp.float32(1e9)
     scored = jnp.where(feasible, delta, big)
@@ -138,12 +203,16 @@ def mfi_select(occ: jax.Array, profile_id: jax.Array, metric: str = "blocked") -
 
 @functools.partial(jax.jit, static_argnames=("metric",))
 def mfi_allocate(
-    occ: jax.Array, profile_id: jax.Array, metric: str = "blocked"
+    occ: jax.Array,
+    profile_id: jax.Array,
+    metric: str = "blocked",
+    tables: DeviceTables = None,
 ) -> Tuple[jax.Array, MFIDecision]:
     """Select AND commit: returns (new_occ, decision).  Pure/jittable."""
-    d = mfi_select(occ, profile_id, metric)
-    masks = PROFILE_MASKS[profile_id]  # (A, 8)
-    aidx = jnp.argmax(PROFILE_ANCHORS[profile_id] == d.anchor)
+    t = _DEFAULT_TABLES if tables is None else tables
+    d = mfi_select(occ, profile_id, metric, tables)
+    masks = t.profile_masks[profile_id]  # (A, S)
+    aidx = jnp.argmax(t.profile_anchors[profile_id] == d.anchor)
     mask = masks[aidx] * d.accepted.astype(jnp.int32)  # zero mask when rejected
     row = jnp.where(d.accepted, d.gpu, 0)
     new_occ = occ.at[row].set(jnp.minimum(occ[row] + mask, 1))
@@ -151,8 +220,15 @@ def mfi_allocate(
 
 
 @jax.jit
-def release(occ: jax.Array, gpu: jax.Array, profile_id: jax.Array, anchor: jax.Array) -> jax.Array:
+def release(
+    occ: jax.Array,
+    gpu: jax.Array,
+    profile_id: jax.Array,
+    anchor: jax.Array,
+    tables: DeviceTables = None,
+) -> jax.Array:
     """Free a previously committed placement (jittable)."""
-    aidx = jnp.argmax(PROFILE_ANCHORS[profile_id] == anchor)
-    mask = PROFILE_MASKS[profile_id][aidx]
+    t = _DEFAULT_TABLES if tables is None else tables
+    aidx = jnp.argmax(t.profile_anchors[profile_id] == anchor)
+    mask = t.profile_masks[profile_id][aidx]
     return occ.at[gpu].set(jnp.maximum(occ[gpu] - mask, 0))

@@ -22,7 +22,7 @@ memory-slice count ``r^mem``.
 
 from __future__ import annotations
 
-from typing import Union
+from typing import Optional, Union
 
 import numpy as np
 
@@ -39,33 +39,45 @@ def _validate_metric(metric: str) -> None:
 def fragmentation_score(
     occupancy: Union[np.ndarray, "mig.GPUState"],
     metric: str = "blocked",
+    model: Optional["mig.DeviceModel"] = None,
 ) -> float:
     """Fragmentation score F(m) of a single GPU (Algorithm 1)."""
     if isinstance(occupancy, mig.GPUState):
+        model = occupancy.model if model is None else model
         occupancy = occupancy.occupancy
     return float(
-        fragmentation_scores(occupancy[None, :].astype(np.int32), metric)[0]
+        fragmentation_scores(occupancy[None, :].astype(np.int32), metric, model)[0]
     )
 
 
-def fragmentation_scores(occupancy: np.ndarray, metric: str = "blocked") -> np.ndarray:
-    """Vectorized F(m) over a cluster occupancy matrix.
+def fragmentation_scores(
+    occupancy: np.ndarray,
+    metric: str = "blocked",
+    model: Optional["mig.DeviceModel"] = None,
+) -> np.ndarray:
+    """Vectorized F(m) over the occupancy matrix of same-model GPUs.
 
     Args:
-      occupancy: (M, 8) 0/1 int array.
+      occupancy: (M, S) 0/1 int array, S = the model's memory-slice count.
       metric: "blocked" (Algorithm-1-literal, default) or "partial" (worked-example).
+      model: device model whose placement table scores the windows
+        (default: the paper's A100-80GB).
 
     Returns:
       (M,) float64 fragmentation scores.
     """
     _validate_metric(metric)
+    if model is None:
+        model = mig.A100_80GB
     occ = np.asarray(occupancy, dtype=np.int32)
-    if occ.ndim != 2 or occ.shape[1] != mig.NUM_MEM_SLICES:
-        raise ValueError(f"occupancy must be (M, {mig.NUM_MEM_SLICES}), got {occ.shape}")
+    if occ.ndim != 2 or occ.shape[1] != model.num_mem_slices:
+        raise ValueError(
+            f"occupancy must be (M, {model.num_mem_slices}), got {occ.shape}"
+        )
 
     # occupied-slice count inside each placement window: (M, NUM_PLACEMENTS)
-    occ_in_window = occ @ mig.PLACEMENT_MASKS.T
-    window_size = mig.PLACEMENT_MEM[None, :]
+    occ_in_window = occ @ model.placement_masks.T
+    window_size = model.placement_mem[None, :]
 
     if metric == "partial":
         counted = (occ_in_window > 0) & (occ_in_window < window_size)
@@ -73,16 +85,42 @@ def fragmentation_scores(occupancy: np.ndarray, metric: str = "blocked") -> np.n
         counted = occ_in_window > 0
 
     # eligibility: profile must still fit by raw free-slice count
-    free = mig.NUM_MEM_SLICES - occ.sum(axis=1, keepdims=True)  # (M, 1)
-    eligible = mig.PLACEMENT_MEM[None, :] <= free  # (M, NUM_PLACEMENTS)
+    free = model.num_mem_slices - occ.sum(axis=1, keepdims=True)  # (M, 1)
+    eligible = window_size <= free  # (M, NUM_PLACEMENTS)
 
-    weights = mig.PLACEMENT_MEM[None, :].astype(np.float64)
+    weights = window_size.astype(np.float64)
     return ((counted & eligible) * weights).sum(axis=1)
 
 
-def cluster_fragmentation(occupancy: np.ndarray, metric: str = "blocked") -> float:
+def spec_fragmentation_scores(
+    occupancy: np.ndarray,
+    spec: "mig.ClusterSpec",
+    metric: str = "blocked",
+) -> np.ndarray:
+    """F(m) per GPU of a (possibly mixed) cluster, each against its own model.
+
+    Args:
+      occupancy: (spec.num_gpus, spec.num_mem_slices) bitmap — narrower
+        models read their leading columns (the rest are zero-padding).
+    """
+    occ = np.asarray(occupancy, dtype=np.int32)
+    out = np.zeros(spec.num_gpus, dtype=np.float64)
+    for model, rows in spec.model_groups():
+        out[rows] = fragmentation_scores(
+            occ[rows][:, : model.num_mem_slices], metric, model
+        )
+    return out
+
+
+def cluster_fragmentation(
+    occupancy: np.ndarray,
+    metric: str = "blocked",
+    spec: Optional["mig.ClusterSpec"] = None,
+) -> float:
     """Average fragmentation score across the cluster (paper's severity metric)."""
-    return float(fragmentation_scores(occupancy, metric).mean())
+    if spec is None:
+        return float(fragmentation_scores(occupancy, metric).mean())
+    return float(spec_fragmentation_scores(occupancy, spec, metric).mean())
 
 
 def delta_f(
@@ -90,21 +128,24 @@ def delta_f(
     profile_id: int,
     anchor: int,
     metric: str = "blocked",
+    model: Optional["mig.DeviceModel"] = None,
 ) -> float:
     """ΔF of hypothetically placing ``profile_id``@``anchor`` on one GPU.
 
     Args:
-      occupancy: (8,) occupancy of a single GPU; the placement must be feasible.
+      occupancy: (S,) occupancy of a single GPU; the placement must be feasible.
     """
+    if model is None:
+        model = mig.A100_80GB
     occ = np.asarray(occupancy, dtype=np.int32)
-    prof = mig.PROFILES[profile_id]
+    prof = model.profiles[profile_id]
     if anchor not in prof.anchors:
         raise ValueError(f"anchor {anchor} illegal for {prof.name}")
     window = occ[anchor : anchor + prof.mem]
     if window.any():
         raise ValueError("infeasible dry-run placement")
-    before = fragmentation_score(occ, metric)
+    before = fragmentation_score(occ, metric, model)
     hypo = occ.copy()
     hypo[anchor : anchor + prof.mem] = 1
-    after = fragmentation_score(hypo, metric)
+    after = fragmentation_score(hypo, metric, model)
     return after - before

@@ -1,9 +1,18 @@
 """MIG hardware model: profiles, placement indexes, GPU and cluster state.
 
-Models an A100-80GB-style GPU as 8 memory slices (the unit of occupancy) and
-7 SM slices (tracked for the utilization metric).  Placement legality follows
-NVIDIA's placement-index table (paper Table I): a profile anchored at memory
-slice ``i`` occupies the contiguous memory-slice window ``[i, i + mem - 1]``.
+Requests arrive as one of the paper's six Table-I demand classes (named
+after their A100-80GB realization, e.g. ``2g.20gb`` = 2 SM slices + 20 GiB).
+A :class:`DeviceModel` describes how each class is realized on one GPU
+generation: its own placement table (legal anchor windows per class), its
+slice-memory size, and possibly *no* realization at all (an 80 GiB demand
+cannot fit an A100-40GB).  Placement legality follows NVIDIA's
+placement-index tables: a profile anchored at memory slice ``i`` occupies
+the contiguous memory-slice window ``[i, i + mem - 1]``.
+
+A :class:`ClusterSpec` is an ordered list of ``(model, count)`` pairs; the
+paper's homogeneous A100 fleet is the trivial one-model spec and is the
+default everywhere, so all module-level table aliases (``PLACEMENT_MASKS``,
+``PROFILE_MEM``, ...) remain the A100-80GB tables.
 
 The module is pure-python/numpy (the reference control plane); the vectorized
 JAX cluster lives in :mod:`repro.core.cluster` and the Pallas kernels in
@@ -13,6 +22,7 @@ JAX cluster lives in :mod:`repro.core.cluster` and the Pallas kernels in
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -23,7 +33,12 @@ NUM_SM_SLICES = 7
 
 @dataclasses.dataclass(frozen=True)
 class MIGProfile:
-    """A MIG profile (e.g. ``2g.20gb``): compute + memory slice demand."""
+    """A MIG profile (e.g. ``2g.20gb``): compute + memory slice demand.
+
+    ``anchors`` may be empty: the demand class has no realization on the
+    device model carrying this entry (e.g. 80 GiB on an A100-40GB) and is
+    rejected there by construction.
+    """
 
     name: str
     compute: int  # SM slices (utilization accounting)
@@ -55,42 +70,248 @@ PROFILE_NAMES: Tuple[str, ...] = tuple(p.name for p in PROFILES)
 NUM_PROFILES = len(PROFILES)
 
 # ---------------------------------------------------------------------------
-# Flattened placement table: every legal (profile, anchor) pair is one row.
+# Device models: per-generation placement tables for the same demand classes.
 # ---------------------------------------------------------------------------
 
 
-def _build_placements():
-    rows = []
-    for pid, prof in enumerate(PROFILES):
-        for anchor in prof.anchors:
-            mask = np.zeros(NUM_MEM_SLICES, dtype=np.int32)
-            mask[anchor : anchor + prof.mem] = 1
-            rows.append((pid, anchor, mask))
-    pids = np.array([r[0] for r in rows], dtype=np.int32)
-    anchors = np.array([r[1] for r in rows], dtype=np.int32)
-    masks = np.stack([r[2] for r in rows])  # (NUM_PLACEMENTS, 8)
-    return pids, anchors, masks
+@dataclasses.dataclass(frozen=True)
+class DeviceModel:
+    """One GPU generation/SKU: how each demand class lands on its slices.
+
+    ``profiles[pid]`` is the local realization of canonical demand class
+    ``pid`` (indexed exactly like :data:`PROFILES`); an entry with empty
+    ``anchors`` means the class cannot be placed on this model.  The derived
+    flattened placement table (every legal (class, anchor) pair is one row)
+    is cached per instance; instances are frozen/hashable so they double as
+    cache and jit keys.
+    """
+
+    name: str
+    slice_gib: int  # memory per slice (GiB) — documentation/capacity planning
+    profiles: Tuple[MIGProfile, ...]
+    num_mem_slices: int = NUM_MEM_SLICES
+    num_sm_slices: int = NUM_SM_SLICES
+
+    def __post_init__(self):
+        if len(self.profiles) != len(PROFILES):
+            raise ValueError(
+                f"{self.name}: need one realization per demand class "
+                f"({len(PROFILES)}), got {len(self.profiles)}"
+            )
+        for p in self.profiles:
+            for a in p.anchors:
+                if a + p.mem > self.num_mem_slices:
+                    raise ValueError(f"{self.name}/{p.name}@{a} out of bounds")
+
+    # -- flattened placement table (one row per legal (class, anchor)) ------
+    @functools.cached_property
+    def _placements(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        rows = []
+        for pid, prof in enumerate(self.profiles):
+            for anchor in prof.anchors:
+                mask = np.zeros(self.num_mem_slices, dtype=np.int32)
+                mask[anchor : anchor + prof.mem] = 1
+                rows.append((pid, anchor, mask))
+        pids = np.array([r[0] for r in rows], dtype=np.int32)
+        anchors = np.array([r[1] for r in rows], dtype=np.int32)
+        masks = (
+            np.stack([r[2] for r in rows])
+            if rows
+            else np.zeros((0, self.num_mem_slices), dtype=np.int32)
+        )
+        return pids, anchors, masks
+
+    @property
+    def placement_profile_id(self) -> np.ndarray:
+        return self._placements[0]
+
+    @property
+    def placement_anchor(self) -> np.ndarray:
+        return self._placements[1]
+
+    @property
+    def placement_masks(self) -> np.ndarray:
+        return self._placements[2]
+
+    @functools.cached_property
+    def placement_mem(self) -> np.ndarray:
+        return np.array(
+            [self.profiles[pid].mem for pid in self.placement_profile_id],
+            dtype=np.int32,
+        )
+
+    @property
+    def num_placements(self) -> int:
+        return self.placement_masks.shape[0]
+
+    @functools.cached_property
+    def max_anchors(self) -> int:
+        return max(1, max(p.num_placements for p in self.profiles))
+
+    @functools.cached_property
+    def profile_mem(self) -> np.ndarray:
+        return np.array([p.mem for p in self.profiles], dtype=np.int32)
+
+    @functools.cached_property
+    def profile_compute(self) -> np.ndarray:
+        return np.array([p.compute for p in self.profiles], dtype=np.int32)
+
+    @functools.cached_property
+    def _profile_placement_slices(self) -> Tuple[slice, ...]:
+        out, off = [], 0
+        for p in self.profiles:
+            out.append(slice(off, off + p.num_placements))
+            off += p.num_placements
+        return tuple(out)
+
+    def profile_placement_rows(self, pid: int) -> slice:
+        """Rows of this model's placement table belonging to class ``pid``."""
+        return self._profile_placement_slices[pid]
+
+    def placeable(self, pid: int) -> bool:
+        return bool(self.profiles[pid].anchors)
 
 
-PLACEMENT_PROFILE_ID, PLACEMENT_ANCHOR, PLACEMENT_MASKS = _build_placements()
-NUM_PLACEMENTS = PLACEMENT_MASKS.shape[0]  # 18 for the A100 table
-PLACEMENT_MEM = np.array(
-    [PROFILES[pid].mem for pid in PLACEMENT_PROFILE_ID], dtype=np.int32
+#: The paper's device (canonical classes ARE their realizations).
+A100_80GB = DeviceModel(name="a100-80gb", slice_gib=10, profiles=PROFILES)
+
+#: A100-40GB: 8 × 5 GiB slices.  The same demand classes need twice the
+#: slices (NVIDIA table: 1g.5gb / 2g.10gb / 3g.20gb / 4g.20gb / 7g.40gb),
+#: so 20 GiB demands occupy a half-GPU window, 40 GiB demands the full GPU,
+#: and the 80 GiB class has no realization at all.
+A100_40GB = DeviceModel(
+    name="a100-40gb",
+    slice_gib=5,
+    profiles=(
+        MIGProfile("n/a.80gb", compute=7, mem=7, anchors=()),   # cannot fit
+        MIGProfile("7g.40gb", compute=7, mem=7, anchors=(0,)),
+        MIGProfile("7g.40gb", compute=7, mem=7, anchors=(0,)),
+        MIGProfile("3g.20gb", compute=3, mem=4, anchors=(0, 4)),
+        MIGProfile("3g.20gb", compute=3, mem=4, anchors=(0, 4)),
+        MIGProfile("2g.10gb", compute=2, mem=2, anchors=(0, 2, 4)),
+    ),
 )
-PROFILE_MEM = np.array([p.mem for p in PROFILES], dtype=np.int32)
-PROFILE_COMPUTE = np.array([p.compute for p in PROFILES], dtype=np.int32)
 
-# slice-offset ranges of each profile inside the flattened placement table
-_PROFILE_PLACEMENT_SLICES: List[slice] = []
-_off = 0
-for _p in PROFILES:
-    _PROFILE_PLACEMENT_SLICES.append(slice(_off, _off + _p.num_placements))
-    _off += _p.num_placements
+#: H100-96GB: 8 × 12 GiB slices — A100 placement geometry, roomier slices.
+H100_96GB = DeviceModel(
+    name="h100-96gb",
+    slice_gib=12,
+    profiles=(
+        MIGProfile("7g.96gb", compute=7, mem=7, anchors=(0,)),
+        MIGProfile("4g.48gb", compute=4, mem=4, anchors=(0,)),
+        MIGProfile("3g.48gb", compute=3, mem=4, anchors=(0, 4)),
+        MIGProfile("2g.24gb", compute=2, mem=2, anchors=(0, 2, 4)),
+        MIGProfile("1g.24gb", compute=1, mem=2, anchors=(0, 2, 4, 6)),
+        MIGProfile("1g.12gb", compute=1, mem=1, anchors=(0, 1, 2, 3, 4, 5, 6)),
+    ),
+)
+
+DEVICE_MODELS: Dict[str, DeviceModel] = {
+    "a100-80": A100_80GB,
+    "a100-80gb": A100_80GB,
+    "a100-40": A100_40GB,
+    "a100-40gb": A100_40GB,
+    "h100-96": H100_96GB,
+    "h100-96gb": H100_96GB,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """An ordered mixed fleet: ``((model, count), ...)``.
+
+    GPU ids are assigned contiguously in entry order; the paper's setup is
+    the one-model spec ``ClusterSpec.homogeneous(A100_80GB, M)``.
+    """
+
+    entries: Tuple[Tuple[DeviceModel, int], ...]
+
+    def __post_init__(self):
+        if not self.entries:
+            raise ValueError("ClusterSpec needs at least one (model, count)")
+        for model, count in self.entries:
+            if count <= 0:
+                raise ValueError(f"{model.name}: count must be positive")
+
+    @classmethod
+    def homogeneous(cls, model: DeviceModel, num_gpus: int) -> "ClusterSpec":
+        return cls(entries=((model, num_gpus),))
+
+    @classmethod
+    def parse(cls, text: str) -> "ClusterSpec":
+        """``"a100-80:50,a100-40:50"`` -> ClusterSpec (see DEVICE_MODELS)."""
+        entries = []
+        for part in text.split(","):
+            name, _, count = part.strip().partition(":")
+            if name not in DEVICE_MODELS:
+                raise ValueError(
+                    f"unknown device model {name!r}; options "
+                    f"{sorted(set(DEVICE_MODELS))}"
+                )
+            entries.append((DEVICE_MODELS[name], int(count) if count else 1))
+        return cls(entries=tuple(entries))
+
+    @functools.cached_property
+    def num_gpus(self) -> int:
+        return sum(count for _, count in self.entries)
+
+    @functools.cached_property
+    def models(self) -> Tuple[DeviceModel, ...]:
+        """Distinct models in first-appearance order."""
+        seen: List[DeviceModel] = []
+        for model, _ in self.entries:
+            if model not in seen:
+                seen.append(model)
+        return tuple(seen)
+
+    @functools.cached_property
+    def model_index(self) -> np.ndarray:
+        """(num_gpus,) int32 — index into :attr:`models` per GPU."""
+        idx = {m: k for k, m in enumerate(self.models)}
+        return np.concatenate(
+            [np.full(count, idx[model], np.int32) for model, count in self.entries]
+        )
+
+    def model_of(self, gpu_id: int) -> DeviceModel:
+        return self.models[self.model_index[gpu_id]]
+
+    @property
+    def is_homogeneous(self) -> bool:
+        return len(self.models) == 1
+
+    @functools.cached_property
+    def num_mem_slices(self) -> int:
+        """Common occupancy-bitmap width (max slice count over models)."""
+        return max(m.num_mem_slices for m in self.models)
+
+    @functools.cached_property
+    def total_mem_slices(self) -> int:
+        return sum(m.num_mem_slices * count for m, count in self.entries)
+
+    def model_groups(self) -> List[Tuple[DeviceModel, np.ndarray]]:
+        """Per distinct model: (model, int array of its GPU ids)."""
+        return [
+            (m, np.flatnonzero(self.model_index == k))
+            for k, m in enumerate(self.models)
+        ]
+
+
+# ---------------------------------------------------------------------------
+# Flattened A100-80GB placement table (module-level aliases, back-compat).
+# ---------------------------------------------------------------------------
+
+PLACEMENT_PROFILE_ID = A100_80GB.placement_profile_id
+PLACEMENT_ANCHOR = A100_80GB.placement_anchor
+PLACEMENT_MASKS = A100_80GB.placement_masks
+NUM_PLACEMENTS = A100_80GB.num_placements  # 18 for the A100 table
+PLACEMENT_MEM = A100_80GB.placement_mem
+PROFILE_MEM = A100_80GB.profile_mem
+PROFILE_COMPUTE = A100_80GB.profile_compute
 
 
 def profile_placement_rows(pid: int) -> slice:
-    """Rows of the placement table belonging to profile ``pid``."""
-    return _PROFILE_PLACEMENT_SLICES[pid]
+    """Rows of the A100-80GB placement table belonging to profile ``pid``."""
+    return A100_80GB.profile_placement_rows(pid)
 
 
 # ---------------------------------------------------------------------------
@@ -108,17 +329,18 @@ class Allocation:
 
 
 class GPUState:
-    """Occupancy state of one MIG-capable GPU."""
+    """Occupancy state of one MIG-capable GPU of a given device model."""
 
-    def __init__(self, gpu_id: int = 0):
+    def __init__(self, gpu_id: int = 0, model: DeviceModel = A100_80GB):
         self.gpu_id = gpu_id
-        self.occupancy = np.zeros(NUM_MEM_SLICES, dtype=np.int32)
+        self.model = model
+        self.occupancy = np.zeros(model.num_mem_slices, dtype=np.int32)
         self.allocations: Dict[int, Allocation] = {}
 
     # -- queries ------------------------------------------------------------
     @property
     def free_slices(self) -> int:
-        return int(NUM_MEM_SLICES - self.occupancy.sum())
+        return int(self.model.num_mem_slices - self.occupancy.sum())
 
     @property
     def used_mem_slices(self) -> int:
@@ -127,7 +349,10 @@ class GPUState:
     @property
     def used_compute_slices(self) -> int:
         return int(
-            sum(PROFILES[a.profile_id].compute for a in self.allocations.values())
+            sum(
+                self.model.profiles[a.profile_id].compute
+                for a in self.allocations.values()
+            )
         )
 
     @property
@@ -136,7 +361,7 @@ class GPUState:
 
     def feasible_anchors(self, profile_id: int) -> List[int]:
         """Anchors where ``profile_id`` can be placed right now."""
-        prof = PROFILES[profile_id]
+        prof = self.model.profiles[profile_id]
         out = []
         for anchor in prof.anchors:
             if not self.occupancy[anchor : anchor + prof.mem].any():
@@ -148,12 +373,12 @@ class GPUState:
 
     # -- mutation -----------------------------------------------------------
     def allocate(self, workload_id: int, profile_id: int, anchor: int) -> None:
-        prof = PROFILES[profile_id]
+        prof = self.model.profiles[profile_id]
         window = self.occupancy[anchor : anchor + prof.mem]
         if anchor not in prof.anchors:
             raise ValueError(
                 f"anchor {anchor} illegal for profile {prof.name} "
-                f"(legal: {prof.anchors})"
+                f"on {self.model.name} (legal: {prof.anchors})"
             )
         if window.any():
             raise ValueError(
@@ -165,15 +390,26 @@ class GPUState:
 
     def release(self, workload_id: int) -> None:
         alloc = self.allocations.pop(workload_id)
-        prof = PROFILES[alloc.profile_id]
+        prof = self.model.profiles[alloc.profile_id]
         self.occupancy[alloc.anchor : alloc.anchor + prof.mem] = 0
 
 
 class ClusterState:
-    """A homogeneous MIG GPU cluster."""
+    """A MIG GPU cluster — homogeneous by default, mixed via ``spec``."""
 
-    def __init__(self, num_gpus: int):
-        self.gpus = [GPUState(i) for i in range(num_gpus)]
+    def __init__(self, num_gpus: Optional[int] = None, spec: Optional[ClusterSpec] = None):
+        if spec is None:
+            if num_gpus is None:
+                raise ValueError("need num_gpus or spec")
+            spec = ClusterSpec.homogeneous(A100_80GB, num_gpus)
+        elif num_gpus is not None and num_gpus != spec.num_gpus:
+            raise ValueError(
+                f"num_gpus={num_gpus} contradicts spec ({spec.num_gpus} GPUs)"
+            )
+        self.spec = spec
+        self.gpus = [
+            GPUState(i, spec.model_of(i)) for i in range(spec.num_gpus)
+        ]
         self._placement_of: Dict[int, int] = {}  # workload_id -> gpu_id
 
     def __len__(self) -> int:
@@ -184,8 +420,16 @@ class ClusterState:
         return len(self.gpus)
 
     def occupancy_matrix(self) -> np.ndarray:
-        """(M, 8) int32 occupancy bitmap of the whole cluster."""
-        return np.stack([g.occupancy for g in self.gpus])
+        """(M, S) int32 occupancy bitmap, S = ``spec.num_mem_slices``.
+
+        GPUs of models with fewer slices are zero-padded on the right (their
+        extra columns can never be occupied).
+        """
+        s = self.spec.num_mem_slices
+        out = np.zeros((self.num_gpus, s), dtype=np.int32)
+        for i, g in enumerate(self.gpus):
+            out[i, : g.occupancy.shape[0]] = g.occupancy
+        return out
 
     def allocate(self, workload_id: int, profile_id: int, gpu_id: int, anchor: int):
         self.gpus[gpu_id].allocate(workload_id, profile_id, anchor)
@@ -213,4 +457,4 @@ class ClusterState:
 
     @property
     def total_mem_slices(self) -> int:
-        return NUM_MEM_SLICES * self.num_gpus
+        return self.spec.total_mem_slices

@@ -88,11 +88,11 @@ class BestFitBestIndex(Scheduler):
 
     def select(self, cluster, profile_id):
         best: Optional[Tuple[int, int, int]] = None  # (free_after, gpu_id, anchor)
-        mem = mig.PROFILES[profile_id].mem
         for gpu in cluster.gpus:
             anchor = _first_anchor(gpu, profile_id, best_index=True)
             if anchor is None:
                 continue
+            mem = gpu.model.profiles[profile_id].mem
             key = (gpu.free_slices - mem, gpu.gpu_id)
             if best is None or key < best[:2]:
                 best = (key[0], key[1], anchor)
@@ -106,11 +106,11 @@ class WorstFitBestIndex(Scheduler):
 
     def select(self, cluster, profile_id):
         best: Optional[Tuple[int, int, int]] = None  # (-free_after, gpu_id, anchor)
-        mem = mig.PROFILES[profile_id].mem
         for gpu in cluster.gpus:
             anchor = _first_anchor(gpu, profile_id, best_index=True)
             if anchor is None:
                 continue
+            mem = gpu.model.profiles[profile_id].mem
             key = (-(gpu.free_slices - mem), gpu.gpu_id)
             if best is None or key < best[:2]:
                 best = (key[0], key[1], anchor)
@@ -128,31 +128,46 @@ class MFI(Scheduler):
     name = "mfi"
 
     def select(self, cluster, profile_id):
-        occ = cluster.occupancy_matrix()  # (M, 8)
-        gpu_ids, anchors, deltas = mfi_candidates(occ, profile_id, self.metric)
+        occ = cluster.occupancy_matrix()  # (M, S)
+        gpu_ids, anchors, deltas = [], [], []
+        for model, rows in cluster.spec.model_groups():
+            g, a, d = mfi_candidates(
+                occ[rows][:, : model.num_mem_slices], profile_id, self.metric, model
+            )
+            gpu_ids.append(rows[g])  # local -> global GPU ids
+            anchors.append(a)
+            deltas.append(d)
+        gpu_ids = np.concatenate(gpu_ids)
         if len(gpu_ids) == 0:
             return None
+        anchors = np.concatenate(anchors)
+        deltas = np.concatenate(deltas)
         k = int(np.lexsort((anchors, gpu_ids, deltas))[0])
         return (int(gpu_ids[k]), int(anchors[k]))
 
 
 def mfi_candidates(
-    occupancy: np.ndarray, profile_id: int, metric: str = "blocked"
+    occupancy: np.ndarray,
+    profile_id: int,
+    metric: str = "blocked",
+    model: Optional[mig.DeviceModel] = None,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Vectorized MFI inner loop (numpy reference for the Pallas kernel).
 
     Returns (gpu_ids, anchors, delta_f) arrays over all *feasible* dry-run
-    placements of ``profile_id`` across the cluster.
+    placements of ``profile_id`` across same-model GPUs (default A100-80GB;
+    mixed clusters call this once per model group).
     """
+    if model is None:
+        model = mig.A100_80GB
     occ = np.asarray(occupancy, dtype=np.int32)
     m = occ.shape[0]
-    prof = mig.PROFILES[profile_id]
-    rows = mig.profile_placement_rows(profile_id)
-    masks = mig.PLACEMENT_MASKS[rows]  # (A, 8)
-    anchors = mig.PLACEMENT_ANCHOR[rows]  # (A,)
+    rows = model.profile_placement_rows(profile_id)
+    masks = model.placement_masks[rows]  # (A, S)
+    anchors = model.placement_anchor[rows]  # (A,)
     a = masks.shape[0]
 
-    # feasibility: window fully free
+    # feasibility: window fully free (classes with no realization have A=0)
     overlap = occ @ masks.T  # (M, A)
     feasible = overlap == 0
 
@@ -160,11 +175,11 @@ def mfi_candidates(
         empty = np.empty(0, dtype=np.int64)
         return empty, empty, np.empty(0)
 
-    f_before = fragmentation.fragmentation_scores(occ, metric)  # (M,)
-    # hypothetical occupancy for every (gpu, anchor): (M, A, 8)
+    f_before = fragmentation.fragmentation_scores(occ, metric, model)  # (M,)
+    # hypothetical occupancy for every (gpu, anchor): (M, A, S)
     hypo = np.minimum(occ[:, None, :] + masks[None, :, :], 1)
     f_after = fragmentation.fragmentation_scores(
-        hypo.reshape(m * a, mig.NUM_MEM_SLICES), metric
+        hypo.reshape(m * a, model.num_mem_slices), metric, model
     ).reshape(m, a)
     delta = f_after - f_before[:, None]
 
@@ -208,20 +223,23 @@ class MFIDefrag(MFI):
                 if tried >= self.max_candidates:
                     break
                 tried += 1
-                prof = mig.PROFILES[alloc.profile_id]
+                prof = gpu.model.profiles[alloc.profile_id]
                 # hypothetically remove the victim
                 gpu.occupancy[alloc.anchor : alloc.anchor + prof.mem] = 0
                 req_sel = super().select(cluster, profile_id)
                 if req_sel is not None:
                     rg, ra = req_sel
-                    rp = mig.PROFILES[profile_id]
+                    rp = cluster.gpus[rg].model.profiles[profile_id]
                     cluster.gpus[rg].occupancy[ra : ra + rp.mem] = 1
                     new_sel = super().select(cluster, alloc.profile_id)
                     if new_sel is not None:
                         ng, na = new_sel
+                        nprof = cluster.gpus[ng].model.profiles[alloc.profile_id]
                         occ = cluster.occupancy_matrix().copy()
-                        occ[ng, na : na + prof.mem] = 1
-                        total = fragmentation.fragmentation_scores(occ, self.metric).sum()
+                        occ[ng, na : na + nprof.mem] = 1
+                        total = fragmentation.spec_fragmentation_scores(
+                            occ, cluster.spec, self.metric
+                        ).sum()
                         cand = (total, wid, (ng, na), req_sel)
                         if best is None or cand[0] < best[0]:
                             best = cand

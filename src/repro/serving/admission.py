@@ -46,10 +46,23 @@ class Placement:
 
 
 class AdmissionController:
-    """Places serving workloads on the MIG cluster via a scheduling policy."""
+    """Places serving workloads on the MIG cluster via a scheduling policy.
 
-    def __init__(self, num_gpus: int, policy: str = "mfi", metric: str = "blocked"):
-        self.cluster = mig.ClusterState(num_gpus)
+    ``cluster_spec`` selects a (possibly mixed) fleet; the default is the
+    paper's homogeneous A100-80GB cluster of ``num_gpus`` GPUs.  Workloads
+    keep declaring canonical profile names — each GPU's device model
+    realizes the demand with its own placement table (an 80 GiB demand is
+    simply infeasible on every A100-40GB, for example).
+    """
+
+    def __init__(
+        self,
+        num_gpus: Optional[int] = None,
+        policy: str = "mfi",
+        metric: str = "blocked",
+        cluster_spec: Optional[mig.ClusterSpec] = None,
+    ):
+        self.cluster = mig.ClusterState(num_gpus, spec=cluster_spec)
         self.scheduler: Scheduler = make_scheduler(policy, metric)
         self.placements: Dict[int, Placement] = {}
         self.accepted = 0
@@ -87,6 +100,8 @@ class AdmissionController:
             "active_gpus": self.cluster.active_gpus,
             "used_slices": self.cluster.used_mem_slices,
             "frag_severity": fragmentation.cluster_fragmentation(
-                self.cluster.occupancy_matrix(), self.scheduler.metric
+                self.cluster.occupancy_matrix(),
+                self.scheduler.metric,
+                spec=self.cluster.spec,
             ),
         }

@@ -6,8 +6,12 @@ Two engines simulate the same load model (see ``docs/SIMULATOR.md``):
   a time (both ``steady`` and ``cumulative`` protocols);
 * :mod:`repro.sim.batched` — the batched JAX engine: R replicas × T slots
   as one ``lax.scan`` over a vmapped replica axis (``steady`` only,
-  policies MFI/FF/BF-BI/WF-BI), ≥10× replica throughput on CPU and the
+  policies MFI/FF/BF-BI/WF-BI/RR), ≥10× replica throughput on CPU and the
   engine every large scenario sweep should use.
+
+Both engines accept a heterogeneous ``SimConfig.cluster_spec``
+(:class:`repro.core.mig.ClusterSpec`); the default is the paper's
+homogeneous A100-80GB fleet.
 """
 
 from repro.sim.distributions import DISTRIBUTIONS, sample_profiles  # noqa: F401

@@ -16,21 +16,34 @@ Event stream
     window membership) is precomputed host-side, so the device step is pure
     tensor algebra with no clock arithmetic.
 
+Heterogeneous fleets
+    A :class:`repro.core.mig.ClusterSpec` (``SimConfig.cluster_spec``) may
+    mix device models.  All per-model placement tables are stacked into one
+    :class:`SpecTables` pytree — ``(K, N, ...)`` arrays padded to a common
+    placement count ``N`` and anchor count ``A`` — and a static ``(M,)``
+    model-index array ``midx`` gathers each GPU's tables inside the scan
+    step.  The MFI ΔF table becomes a per-model gather plus one batched
+    matmul (``einsum('mn,man->ma')``), so the scan stays fully jittable;
+    the paper's homogeneous setup is the trivial ``K = 1`` spec and
+    reproduces the previous engine bit-for-bit.
+
 Replica state (fixed-capacity struct-of-arrays pytree)
-    * ``occ (M, 8) int32`` — cluster occupancy bitmap (materialized only
+    * ``occ (M, S) int32`` — cluster occupancy bitmap (materialized only
       when the Pallas-kernel scoring path needs it; otherwise ``base``
       carries the full information);
-    * ``base (M, 18) float32`` — occupied-slice count per placement window,
-      ``occ @ Wᵀ``.  Window counts are *linear* in occupancy, so ``base``
-      is maintained incrementally (row add on commit, row subtract on
-      release) and every fragmentation quantity — F(m), the full MFI ΔF
-      table, feasibility — derives from it without per-arrival matmuls
-      over hypothetical occupancies;
+    * ``base (M, N) float32`` — occupied-slice count per placement window
+      of each GPU's own model, ``occ @ W[midx]ᵀ``.  Window counts are
+      *linear* in occupancy, so ``base`` is maintained incrementally (row
+      add on commit, row subtract on release) and every fragmentation
+      quantity — F(m), the full MFI ΔF table, feasibility — derives from
+      it without per-arrival matmuls over hypothetical occupancies;
     * ``free (M,) int32`` / ``f (M,) float32`` — free-slice counts and
       per-GPU fragmentation scores, recomputed only for rows a drain or
       commit touched;
+    * ``rr () int32`` — RoundRobin cursor (next GPU to try first); carried
+      through the scan so RR is an ordinary batched policy;
     * an expiry ring buffer ``ring_gpu (K+2, E) int32`` /
-      ``ring_mask (K+2, E, 8) int32`` keyed by end slot modulo
+      ``ring_mask (K+2, E, S) int32`` keyed by end slot modulo
       ``K = T + 1``: row ``e % K`` holds the (gpu, placement-window) rows
       of workloads expiring at slot ``e``.  Durations are drawn from
       ``[1, T]``, so an end slot is strictly less than one ring revolution
@@ -40,35 +53,40 @@ Replica state (fixed-capacity struct-of-arrays pytree)
       arrivals), so inserts never collide; row ``K + 1`` is a write-only
       trash row for padding lanes.
 
-Policies — **MFI, FF, BF-BI and WF-BI as pure-``jnp`` selection rules**
+Policies — **MFI, FF, BF-BI, WF-BI and RR as pure-``jnp`` selection rules**
 over the same feasibility/ΔF tensors :func:`repro.core.cluster.mfi_select`
 computes (MFI: argmin ΔF with (gpu, anchor) tie-break; FF: first feasible;
 BF-BI/WF-BI: argmin/argmax post-allocation free slices with best-index
-anchors), selected by a static ``policy`` argument.  Acceptance,
-utilization, active-GPU and fragmentation-severity metrics accumulate
-inside the scan; :func:`run_batched` returns the same aggregate dict as
+anchors; RR: first feasible GPU in cursor rotation), selected by a static
+``policy`` argument.  Acceptance, utilization, active-GPU and
+fragmentation-severity metrics accumulate inside the scan;
+:func:`run_batched` returns the same aggregate dict as
 :func:`repro.sim.simulator.run_many`.
 
-Parity guarantees vs the Python reference (``tests/test_batched_sim.py``):
+Parity guarantees vs the Python reference (``tests/test_batched_sim.py``,
+``tests/test_heterogeneous.py``):
 
-* single-step decisions of all four policies match their
+* single-step decisions of all five policies match their
   ``Scheduler.select`` counterparts *exactly* (including rejects and
   tie-breaks — every score involved is integer-valued, hence exact in
-  float32);
+  float32), on homogeneous and mixed specs;
 * whole-run acceptance rates agree within Monte-Carlo tolerance (the two
   engines consume their RNG streams differently, so trajectories are
-  statistically — not bitwise — identical).
+  statistically — not bitwise — identical); driving the Python schedulers
+  over the *same* presampled event stream matches decision-for-decision
+  (:func:`repro.sim.replay.host_decisions`).
 
 On TPU, per-GPU fragmentation rescoring (the rows each drain/commit
 touches, which feed both MFI and the severity metric) routes through the
-Pallas ``fragscore`` kernel (``interpret=False``); on CPU the
+Pallas ``fragscore`` kernel (``interpret=False``) — homogeneous specs only
+(the kernel bakes in one placement table); on CPU and on mixed fleets the
 ``base``-derived pure-jnp scoring is used.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Dict, NamedTuple, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -79,33 +97,86 @@ from repro.core import mig
 from repro.sim import distributions
 from repro.sim.simulator import SAMPLE_EVERY, SimConfig, steady_params
 
-POLICIES = ("mfi", "ff", "bf-bi", "wf-bi")
+POLICIES = ("mfi", "ff", "bf-bi", "wf-bi", "rr")
 
 _BIG = jnp.float32(1e9)
 
-# Constant tables.  W (18, 8) placement windows, V (18,) window sizes;
-# per-profile padded anchor views of the flattened placement table.
-_W = jnp.asarray(mig.PLACEMENT_MASKS, dtype=jnp.float32)  # (18, 8)
-_V = jnp.asarray(mig.PLACEMENT_MEM, dtype=jnp.float32)  # (18,)
+
+# ---------------------------------------------------------------------------
+# Stacked per-model placement tables
+# ---------------------------------------------------------------------------
 
 
-def _np_profile_rows() -> np.ndarray:
-    """(P, A_max) int32 — placement-table row of each profile anchor (0-padded)."""
-    rows = np.zeros((mig.NUM_PROFILES, jcluster.MAX_ANCHORS), dtype=np.int32)
-    for pid in range(mig.NUM_PROFILES):
-        s = mig.profile_placement_rows(pid)
-        n = s.stop - s.start
-        rows[pid, :n] = np.arange(s.start, s.stop)
-    return rows
+class SpecTables(NamedTuple):
+    """Per-model placement tables of a ClusterSpec, stacked and padded.
+
+    Axis glossary: ``K`` distinct models, ``N`` common (padded) placement
+    count, ``A`` common (padded) anchor count, ``P`` demand classes,
+    ``S`` memory slices.  Padded placement rows have all-zero windows and
+    ``V = 0`` so they never count toward any score; padded anchor columns
+    are marked invalid in ``profile_valid``.
+    """
+
+    W: jax.Array               # (K, N, S) float32 — placement windows
+    V: jax.Array               # (K, N) float32 — window sizes (0 where padded)
+    slices: jax.Array          # (K,) int32 — memory slices per model
+    profile_rows: jax.Array    # (K, P, A) int32 — row into W/V per anchor
+    profile_masks: jax.Array   # (K, P, A, S) int32 — anchor window bitmask
+    profile_anchors: jax.Array  # (K, P, A) int32 — anchor index (-1 pad)
+    profile_valid: jax.Array   # (K, P, A) bool — anchor validity
+    profile_mem: jax.Array     # (K, P) float32 — slice demand per class
+    maskwin: jax.Array         # (K, P, A, N) float32 — slices each anchor adds per window
+    maskpos: jax.Array         # (K, P, A, N) float32 — (maskwin > 0)
 
 
-_PROFILE_ROWS = jnp.asarray(_np_profile_rows())  # (P, A_max)
-# occupied-slice count each profile anchor adds to every placement window
-_MASKWIN = jnp.asarray(
-    jcluster._PROFILE_MASKS_NP.astype(np.float32)
-    @ np.asarray(mig.PLACEMENT_MASKS, dtype=np.float32).T
-)  # (P, A_max, 18)
-_MASKPOS = (_MASKWIN > 0).astype(jnp.float32)  # (P, A_max, 18)
+@functools.lru_cache(maxsize=None)
+def spec_tables(spec: mig.ClusterSpec) -> SpecTables:
+    """Build (and cache) the stacked device tables of a cluster spec."""
+    models = spec.models
+    K = len(models)
+    P = mig.NUM_PROFILES
+    N = max(m.num_placements for m in models)
+    A = max(m.max_anchors for m in models)
+    S = spec.num_mem_slices
+
+    W = np.zeros((K, N, S), np.float32)
+    V = np.zeros((K, N), np.float32)
+    slices = np.array([m.num_mem_slices for m in models], np.int32)
+    rows_t = np.zeros((K, P, A), np.int32)
+    masks_t = np.zeros((K, P, A, S), np.int32)
+    anchors_t = np.full((K, P, A), -1, np.int32)
+    valid_t = np.zeros((K, P, A), bool)
+    mem_t = np.zeros((K, P), np.float32)
+    for k, m in enumerate(models):
+        n = m.num_placements
+        W[k, :n, : m.num_mem_slices] = m.placement_masks
+        V[k, :n] = m.placement_mem
+        pm, pa, pv = jcluster._np_profile_tables(m, max_anchors=A)
+        masks_t[k, :, :, : m.num_mem_slices] = pm
+        anchors_t[k] = pa
+        valid_t[k] = pv
+        mem_t[k] = m.profile_mem
+        for pid in range(P):
+            s = m.profile_placement_rows(pid)
+            rows_t[k, pid, : s.stop - s.start] = np.arange(s.start, s.stop)
+    # occupied-slice count each profile anchor adds to every placement window
+    maskwin = np.einsum("kpas,kns->kpan", masks_t.astype(np.float32), W)
+    return SpecTables(
+        W=jnp.asarray(W),
+        V=jnp.asarray(V),
+        slices=jnp.asarray(slices),
+        profile_rows=jnp.asarray(rows_t),
+        profile_masks=jnp.asarray(masks_t),
+        profile_anchors=jnp.asarray(anchors_t),
+        profile_valid=jnp.asarray(valid_t),
+        profile_mem=jnp.asarray(mem_t),
+        maskwin=jnp.asarray(maskwin),
+        maskpos=jnp.asarray((maskwin > 0).astype(np.float32)),
+    )
+
+
+def _default_spec(num_gpus: int) -> mig.ClusterSpec:
+    return mig.ClusterSpec.homogeneous(mig.A100_80GB, num_gpus)
 
 
 # ---------------------------------------------------------------------------
@@ -113,59 +184,70 @@ _MASKPOS = (_MASKWIN > 0).astype(jnp.float32)  # (P, A_max, 18)
 # ---------------------------------------------------------------------------
 
 
-def _frag_from_base(base: jax.Array, free: jax.Array, metric: str) -> jax.Array:
-    """F(m) for every GPU from window counts ``base (M, 18)``: (M,) float32."""
+def _frag_from_base(base: jax.Array, free: jax.Array, metric: str, v: jax.Array) -> jax.Array:
+    """F(m) per GPU from window counts ``base (M, N)`` and per-GPU window
+    sizes ``v (M, N)`` (= ``V[midx]``): (M,) float32."""
     if metric == "partial":
-        counted = (base > 0) & (base < _V[None, :])
+        counted = (base > 0) & (base < v)
     else:  # blocked
         counted = base > 0
-    eligible = _V[None, :] <= free[:, None].astype(jnp.float32)
-    return jnp.sum(jnp.where(counted & eligible, _V[None, :], 0.0), axis=-1)
+    eligible = v <= free[..., None].astype(jnp.float32)
+    return jnp.sum(jnp.where(counted & eligible, v, 0.0), axis=-1)
 
 
 def _delta_from_base(
     base: jax.Array,
     free: jax.Array,
-    pid: jax.Array,
     metric: str,
-    f_before: jax.Array = None,
+    v: jax.Array,
+    mw: jax.Array,
+    mp: jax.Array,
+    mem_g: jax.Array,
+    f_before: jax.Array,
 ) -> jax.Array:
-    """ΔF of every anchor dry-run of ``pid``: (M, A) float32.
+    """ΔF of every anchor dry-run of the request: (M, A) float32.
 
-    Window counts after placement are ``base + MASKWIN[pid, a]`` (exact for
-    feasible placements — the window is disjoint from current occupancy),
-    so for the "blocked" metric the counted-predicate decomposes as
-    ``(base > 0) | (maskwin > 0)`` and the whole (M, A) table reduces to
-    one (M, 18) × (18, A) matmul; "partial" needs the dense (M, A, 18)
-    elementwise form.  All scores are integer-valued — exact in float32.
+    ``v (M, N)``, ``mw/mp (M, A, N)`` and ``mem_g (M,)`` are the per-GPU
+    gathers ``V[midx]``, ``maskwin/maskpos[midx, pid]`` and
+    ``profile_mem[midx, pid]``.  Window counts after placement are
+    ``base + mw`` (exact for feasible placements — the window is disjoint
+    from current occupancy), so for the "blocked" metric the
+    counted-predicate decomposes as ``(base > 0) | (mw > 0)`` and the whole
+    (M, A) table reduces to one batched (M, N) × (M, N, A) matmul;
+    "partial" needs the dense (M, A, N) elementwise form.  All scores are
+    integer-valued — exact in float32.
     """
-    v = _V[None, :]
     freef = free.astype(jnp.float32)
-    if f_before is None:
-        f_before = _frag_from_base(base, free, metric)  # (M,)
-    free_after = freef - jcluster.PROFILE_MEM[pid]  # (M,) — same for every anchor
-    elig = v <= free_after[:, None]  # (M, 18)
+    free_after = freef - mem_g  # (M,) — same for every anchor
+    elig = v <= free_after[:, None]  # (M, N)
     if metric == "partial":
-        ba = base[:, None, :] + _MASKWIN[pid][None, :, :]  # (M, A, 18)
-        counted = (ba > 0) & (ba < v[None, :, :])
+        ba = base[:, None, :] + mw  # (M, A, N)
+        counted = (ba > 0) & (ba < v[:, None, :])
         f_after = jnp.sum(
-            jnp.where(counted & elig[:, None, :], _V[None, None, :], 0.0), axis=-1
+            jnp.where(counted & elig[:, None, :], v[:, None, :], 0.0), axis=-1
         )
-    else:  # blocked: counted_after = (base > 0) | (maskwin > 0)
-        cb = base > 0  # (M, 18)
+    else:  # blocked: counted_after = (base > 0) | (mw > 0)
+        cb = base > 0  # (M, N)
         s_occ = jnp.sum(jnp.where(cb & elig, v, 0.0), axis=-1)  # (M,)
-        cross = jnp.where(~cb & elig, v, 0.0) @ _MASKPOS[pid].T  # (M, A)
+        cross = jnp.einsum("mn,man->ma", jnp.where(~cb & elig, v, 0.0), mp)  # (M, A)
         f_after = s_occ[:, None] + cross
     return f_after - f_before[:, None]
 
 
-def make_frag_fn(metric: str = "blocked", use_kernel: bool = False):
-    """(N, 8) occupancy -> (N,) F scores; Pallas kernel when ``use_kernel``."""
+def make_frag_fn(
+    metric: str = "blocked",
+    use_kernel: bool = False,
+    model: mig.DeviceModel = mig.A100_80GB,
+):
+    """(N, S) occupancy -> (N,) F scores; Pallas kernel when ``use_kernel``."""
     if use_kernel:
         from repro.kernels.fragscore import fragscore as _k
 
-        return lambda occ: _k.fragscore(occ, _W, _V, metric=metric, interpret=False)
-    return functools.partial(jcluster.frag_scores, metric=metric)
+        w = jnp.asarray(model.placement_masks, dtype=jnp.float32)
+        v = jnp.asarray(model.placement_mem, dtype=jnp.float32)
+        return lambda occ: _k.fragscore(occ, w, v, metric=metric, interpret=False)
+    tables = jcluster.tables_for(model)
+    return functools.partial(jcluster.frag_scores, metric=metric, tables=tables)
 
 
 # ---------------------------------------------------------------------------
@@ -173,16 +255,15 @@ def make_frag_fn(metric: str = "blocked", use_kernel: bool = False):
 # ---------------------------------------------------------------------------
 
 
-def _select_mfi(base, free, f, feasible, pid, metric):
+def _select_mfi(feasible, free, f, mem_g, delta, cursor):
     """Argmin ΔF over all feasible (GPU, anchor); ties (gpu, anchor) lex."""
-    delta = _delta_from_base(base, free, pid, metric, f_before=f)
     flat = jnp.where(feasible, delta, _BIG).reshape(-1)
     k = jnp.argmin(flat)
     a = feasible.shape[1]
     return k // a, k % a, flat[k] < _BIG
 
 
-def _select_ff(base, free, f, feasible, pid, metric):
+def _select_ff(feasible, free, f, mem_g, delta, cursor):
     """First feasible (GPU, anchor) in ascending (gpu, anchor) order."""
     flat = feasible.reshape(-1)
     k = jnp.argmax(flat)
@@ -196,27 +277,64 @@ def _best_anchor(feasible_row):
     return a - 1 - jnp.argmax(feasible_row[::-1])
 
 
-def _select_bf(base, free, f, feasible, pid, metric):
+def _select_bf(feasible, free, f, mem_g, delta, cursor):
     """Fewest post-allocation free slices, ties by gpu id; best index."""
     any_feas = feasible.any(axis=1)
-    g = jnp.argmin(jnp.where(any_feas, free.astype(jnp.float32), _BIG))
+    score = free.astype(jnp.float32) - mem_g  # free slices after placement
+    g = jnp.argmin(jnp.where(any_feas, score, _BIG))
     return g, _best_anchor(feasible[g]), any_feas.any()
 
 
-def _select_wf(base, free, f, feasible, pid, metric):
+def _select_wf(feasible, free, f, mem_g, delta, cursor):
     """Most post-allocation free slices, ties by gpu id; best index."""
     any_feas = feasible.any(axis=1)
-    g = jnp.argmin(jnp.where(any_feas, -free.astype(jnp.float32), _BIG))
+    score = -(free.astype(jnp.float32) - mem_g)
+    g = jnp.argmin(jnp.where(any_feas, score, _BIG))
     return g, _best_anchor(feasible[g]), any_feas.any()
 
 
-_SELECT = {"mfi": _select_mfi, "ff": _select_ff, "bf-bi": _select_bf, "wf-bi": _select_wf}
+def _select_rr(feasible, free, f, mem_g, delta, cursor):
+    """First feasible GPU in the cursor rotation; first available index."""
+    m = feasible.shape[0]
+    any_feas = feasible.any(axis=1)
+    prio = jnp.mod(jnp.arange(m, dtype=jnp.int32) - cursor, m)  # rotation rank
+    g = jnp.argmin(jnp.where(any_feas, prio.astype(jnp.float32), _BIG))
+    return g, jnp.argmax(feasible[g]), any_feas.any()
 
 
-def _feasibility(base: jax.Array, pid: jax.Array) -> jax.Array:
-    """(M, A) bool — anchors of ``pid`` whose window has zero occupied slices."""
-    overlap = jnp.take(base, _PROFILE_ROWS[pid], axis=1)  # (M, A)
-    return (overlap == 0) & jcluster.PROFILE_VALID[pid][None, :]
+_SELECT = {
+    "mfi": _select_mfi,
+    "ff": _select_ff,
+    "bf-bi": _select_bf,
+    "wf-bi": _select_wf,
+    "rr": _select_rr,
+}
+
+
+def _feasibility(base: jax.Array, rows: jax.Array, valid: jax.Array) -> jax.Array:
+    """(M, A) bool — anchors whose window has zero occupied slices.
+
+    ``rows (M, A)`` / ``valid (M, A)`` are the per-GPU gathers
+    ``profile_rows[midx, pid]`` / ``profile_valid[midx, pid]``.
+    """
+    overlap = jnp.take_along_axis(base, rows, axis=1)  # (M, A)
+    return (overlap == 0) & valid
+
+
+def _select(policy, base, free, f, metric, tables, midx, vg, pid, cursor):
+    """Shared decision path: returns (gpu, aidx, ok) for one request."""
+    rows = tables.profile_rows[midx, pid]  # (M, A)
+    valid = tables.profile_valid[midx, pid]  # (M, A)
+    mem_g = tables.profile_mem[midx, pid]  # (M,)
+    feasible = _feasibility(base, rows, valid)
+    if policy == "mfi":  # only MFI needs the ΔF table
+        delta = _delta_from_base(
+            base, free, metric, vg,
+            tables.maskwin[midx, pid], tables.maskpos[midx, pid], mem_g, f,
+        )
+    else:
+        delta = None
+    return _SELECT[policy](feasible, free, f, mem_g, delta, cursor)
 
 
 def policy_select(
@@ -224,20 +342,30 @@ def policy_select(
     profile_id: jax.Array,
     policy: str,
     metric: str = "blocked",
+    spec: Optional[mig.ClusterSpec] = None,
+    cursor: int = 0,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One placement decision on a raw occupancy: ``(gpu, anchor, accepted)``.
 
     Runs the same selection rule as the scan step (via the derived
     ``base``/``free`` state) and exactly matches the corresponding Python
     ``Scheduler.select`` — including rejects — for all :data:`POLICIES`.
+    ``spec`` defaults to a homogeneous A100-80GB fleet of ``occ.shape[0]``
+    GPUs; ``cursor`` is RR's rotation start (``RoundRobin._next``).
     """
+    spec = spec if spec is not None else _default_spec(int(occ.shape[0]))
+    tables = spec_tables(spec)
+    midx = jnp.asarray(spec.model_index)
     occf = occ.astype(jnp.float32)
-    base = occf @ _W.T  # (M, 18)
-    free = (mig.NUM_MEM_SLICES - occ.sum(axis=1)).astype(jnp.int32)
-    f = _frag_from_base(base, free, metric)
-    feasible = _feasibility(base, profile_id)
-    gpu, aidx, ok = _SELECT[policy](base, free, f, feasible, profile_id, metric)
-    anchor = jnp.where(ok, jcluster.PROFILE_ANCHORS[profile_id][aidx], -1)
+    base = jnp.einsum("ms,mns->mn", occf, tables.W[midx])  # (M, N)
+    free = tables.slices[midx] - occ.sum(axis=1).astype(jnp.int32)
+    vg = tables.V[midx]
+    f = _frag_from_base(base, free, metric, vg)
+    gpu, aidx, ok = _select(
+        policy, base, free, f, metric, tables, midx,
+        vg, profile_id, jnp.int32(cursor),
+    )
+    anchor = jnp.where(ok, tables.profile_anchors[midx[gpu], profile_id, aidx], -1)
     return (
         jnp.where(ok, gpu, -1).astype(jnp.int32),
         anchor.astype(jnp.int32),
@@ -251,12 +379,13 @@ def policy_select(
 
 
 class ReplicaState(NamedTuple):
-    occ: jax.Array        # (M, 8) int32 — None when occupancy isn't tracked
-    base: jax.Array       # (M, 18) float32 — occ @ Wᵀ, kept incrementally
+    occ: jax.Array        # (M, S) int32 — None when occupancy isn't tracked
+    base: jax.Array       # (M, N) float32 — occ @ W[midx]ᵀ, kept incrementally
     free: jax.Array       # (M,) int32
     f: jax.Array          # (M,) float32 — per-GPU F score, kept incrementally
+    rr: jax.Array         # () int32 — RoundRobin cursor
     ring_gpu: jax.Array   # (K+2, E) int32 — expiry ring, keyed end_slot % K
-    ring_mask: jax.Array  # (K+2, E, 8) int32
+    ring_mask: jax.Array  # (K+2, E, S) int32
 
 
 class EventStream(NamedTuple):
@@ -295,74 +424,87 @@ class EventTrace(NamedTuple):
 
 
 def _init_state(
-    num_gpus: int, ring_rows: int, ring_cols: int, track_occ: bool
+    tables: SpecTables,
+    midx: jax.Array,
+    ring_rows: int,
+    ring_cols: int,
+    track_occ: bool,
 ) -> ReplicaState:
+    num_gpus = midx.shape[0]
+    s = tables.W.shape[2]
+    n = tables.W.shape[1]
     return ReplicaState(
-        occ=(
-            jnp.zeros((num_gpus, mig.NUM_MEM_SLICES), jnp.int32)
-            if track_occ
-            else None
-        ),
-        base=jnp.zeros((num_gpus, mig.NUM_PLACEMENTS), jnp.float32),
-        free=jnp.full((num_gpus,), mig.NUM_MEM_SLICES, jnp.int32),
+        occ=jnp.zeros((num_gpus, s), jnp.int32) if track_occ else None,
+        base=jnp.zeros((num_gpus, n), jnp.float32),
+        free=tables.slices[midx].astype(jnp.int32),
         f=jnp.zeros((num_gpus,), jnp.float32),
+        rr=jnp.int32(0),
         ring_gpu=jnp.zeros((ring_rows, ring_cols), jnp.int32),
-        ring_mask=jnp.zeros(
-            (ring_rows, ring_cols, mig.NUM_MEM_SLICES), jnp.int32
-        ),
+        ring_mask=jnp.zeros((ring_rows, ring_cols, s), jnp.int32),
     )
 
 
-def _event_step(st: ReplicaState, x, *, policy, metric, frag_fn):
+def _event_step(st: ReplicaState, x, *, policy, metric, frag_fn, tables, midx, vg):
     pid, exp_row, exp_col, drain_row, new_slot = x
 
     # 1. slot-boundary metrics (state == end of slot t-1); reduced host-side
     frag = st.f.mean()
     free_sum = st.free.sum()
-    active = (st.free < mig.NUM_MEM_SLICES).sum()
+    active = (st.free < tables.slices[midx]).sum()
 
     # 2. drain this slot's expiry-ring row (first event of the slot only)
     ns = new_slot.astype(jnp.int32)
     rel_gpu = st.ring_gpu[drain_row]  # (E,)
-    rel_mask = st.ring_mask[drain_row] * ns  # (E, 8)
+    rel_mask = st.ring_mask[drain_row] * ns  # (E, S)
     occ = None if st.occ is None else st.occ.at[rel_gpu].add(-rel_mask)
-    base = st.base.at[rel_gpu].add(-(rel_mask.astype(jnp.float32) @ _W.T))
+    rel_win = jnp.einsum(
+        "es,ens->en", rel_mask.astype(jnp.float32), tables.W[midx[rel_gpu]]
+    )  # (E, N) — window counts each release frees, per its GPU's model
+    base = st.base.at[rel_gpu].add(-rel_win)
     free = st.free.at[rel_gpu].add(rel_mask.sum(axis=1))
     # rescore exactly the touched rows — through the Pallas kernel when it
     # is routed in (occ is materialized then), else from the window counts
     f = st.f.at[rel_gpu].set(
         frag_fn(occ[rel_gpu])
         if frag_fn is not None
-        else _frag_from_base(base[rel_gpu], free[rel_gpu], metric)
+        else _frag_from_base(base[rel_gpu], free[rel_gpu], metric, vg[rel_gpu])
     )
     ring_mask = st.ring_mask.at[drain_row].set(st.ring_mask[drain_row] * (1 - ns))
 
     # 3. place (or reject) the arrival; pid == -1 lanes are no-ops
     valid = pid >= 0
     pid_c = jnp.maximum(pid, 0)
-    feasible = _feasibility(base, pid_c)
-    gpu, aidx, ok = _SELECT[policy](base, free, f, feasible, pid_c, metric)
+    gpu, aidx, ok = _select(
+        policy, base, free, f, metric, tables, midx, vg, pid_c, st.rr
+    )
     ok = ok & valid
 
     oki = ok.astype(jnp.int32)
-    mask = jcluster.PROFILE_MASKS[pid_c, aidx] * oki  # (8,)
-    mwin = _MASKWIN[pid_c, aidx] * oki  # (18,)
     gpu_c = jnp.where(ok, gpu, 0).astype(jnp.int32)
+    kg = midx[gpu_c]  # chosen GPU's model index
+    mask = tables.profile_masks[kg, pid_c, aidx] * oki  # (S,)
+    mwin = tables.maskwin[kg, pid_c, aidx] * oki.astype(jnp.float32)  # (N,)
     occ = None if occ is None else occ.at[gpu_c].add(mask)
     base = base.at[gpu_c].add(mwin)
     free = free.at[gpu_c].add(-mask.sum())
     f = f.at[gpu_c].set(
         frag_fn(occ[gpu_c][None])[0]
         if frag_fn is not None
-        else _frag_from_base(base[gpu_c][None], free[gpu_c][None], metric)[0]
+        else _frag_from_base(
+            base[gpu_c][None], free[gpu_c][None], metric, vg[gpu_c][None]
+        )[0]
     )
+    rr = st.rr
+    if policy == "rr":  # advance the cursor past the chosen GPU on accept
+        rr = jnp.where(ok, (gpu_c + 1) % midx.shape[0], rr).astype(jnp.int32)
     ring_gpu = st.ring_gpu.at[exp_row, exp_col].set(
         jnp.where(ok, gpu_c, st.ring_gpu[exp_row, exp_col])
     )
     ring_mask = ring_mask.at[exp_row, exp_col].add(mask)
 
     st = ReplicaState(
-        occ=occ, base=base, free=free, f=f, ring_gpu=ring_gpu, ring_mask=ring_mask
+        occ=occ, base=base, free=free, f=f, rr=rr,
+        ring_gpu=ring_gpu, ring_mask=ring_mask,
     )
     trace = EventTrace(
         ok=ok,
@@ -378,7 +520,8 @@ def _event_step(st: ReplicaState, x, *, policy, metric, frag_fn):
 @functools.partial(
     jax.jit,
     static_argnames=(
-        "policy", "metric", "num_gpus", "ring_rows", "ring_cols", "use_kernel"
+        "policy", "metric", "num_gpus", "ring_rows", "ring_cols",
+        "use_kernel", "kernel_model",
     ),
 )
 def _simulate(
@@ -390,16 +533,31 @@ def _simulate(
     ring_rows: int,
     ring_cols: int,
     use_kernel: bool,
+    kernel_model: Optional[mig.DeviceModel] = None,
+    midx: Optional[jax.Array] = None,
+    tables: Optional[SpecTables] = None,
 ) -> Tuple[ReplicaState, EventTrace]:
     runs = events.pid.shape[1]
-    frag_fn = make_frag_fn(metric, True) if use_kernel else None
+    if tables is None:  # homogeneous A100-80GB default
+        spec = _default_spec(num_gpus)
+        tables = spec_tables(spec)
+        midx = jnp.asarray(spec.model_index)
+    frag_fn = (
+        make_frag_fn(metric, True, kernel_model or mig.A100_80GB)
+        if use_kernel
+        else None
+    )
+    vg = tables.V[midx]  # (M, N) per-GPU window sizes, gathered once
     step = jax.vmap(
-        functools.partial(_event_step, policy=policy, metric=metric, frag_fn=frag_fn),
+        functools.partial(
+            _event_step, policy=policy, metric=metric, frag_fn=frag_fn,
+            tables=tables, midx=midx, vg=vg,
+        ),
         in_axes=(0, 0),
     )
     init = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (runs,) + x.shape),
-        _init_state(num_gpus, ring_rows, ring_cols, track_occ=use_kernel),
+        _init_state(tables, midx, ring_rows, ring_cols, track_occ=use_kernel),
     )
     # sample/measuring are host-side reduction flags — never shipped to the scan
     xs = (events.pid, events.exp_row, events.exp_col, events.drain_row, events.new_slot)
@@ -507,14 +665,21 @@ def run_batched(
     Drop-in for :func:`repro.sim.simulator.run_many` on the steady protocol
     (same aggregate keys); ``policy`` must be one of :data:`POLICIES`.
     ``use_kernel`` routes fragmentation-severity sampling through the
-    Pallas ``fragscore`` kernel (default: only on TPU).
+    Pallas ``fragscore`` kernel (default: only on TPU; homogeneous specs
+    only — the kernel bakes in one model's placement table).
     """
     if policy not in POLICIES:
         raise ValueError(f"unknown batched policy {policy!r}; options {POLICIES}")
     if cfg.protocol != "steady":
         raise ValueError("run_batched implements the steady protocol only")
+    spec = cfg.spec()
     if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu"
+        use_kernel = jax.default_backend() == "tpu" and spec.is_homogeneous
+    if use_kernel and not spec.is_homogeneous:
+        raise ValueError(
+            "use_kernel requires a homogeneous ClusterSpec (the Pallas "
+            "fragscore kernel bakes in a single placement table)"
+        )
 
     events, _, ring_rows, ring_cols = presample_arrivals(cfg, runs)
     _, trace = jax.device_get(
@@ -526,16 +691,24 @@ def run_batched(
             ring_rows=ring_rows,
             ring_cols=ring_cols,
             use_kernel=use_kernel,
+            kernel_model=spec.models[0] if use_kernel else None,
+            midx=jnp.asarray(spec.model_index),
+            tables=spec_tables(spec),
         )
     )
-    return aggregate(events, trace, cfg.num_gpus, runs)
+    return aggregate(events, trace, spec, runs)
 
 
 def aggregate(
-    events: EventStream, trace: EventTrace, num_gpus: int, runs: int
+    events: EventStream, trace: EventTrace, spec, runs: int
 ) -> Dict[str, float]:
-    """Reduce per-event traces against host-known flags to ``run_many`` keys."""
-    cap = float(num_gpus * mig.NUM_MEM_SLICES)
+    """Reduce per-event traces against host-known flags to ``run_many`` keys.
+
+    ``spec`` is the ClusterSpec (or an int GPU count, back-compat).
+    """
+    if isinstance(spec, int):
+        spec = _default_spec(spec)
+    cap = float(spec.total_mem_slices)
     ok = np.asarray(trace.ok)
     meas = events.measuring
     samp = events.sample

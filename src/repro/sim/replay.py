@@ -7,10 +7,18 @@ replica is reproducible in plain numpy.  :func:`replay` re-executes the
 commits and releases and asserts the scheduling invariants the engine must
 uphold:
 
-* an accepted placement uses a *legal Table-I anchor* for its profile;
+* an accepted placement uses a *legal placement-table anchor* for its
+  profile **on the model of the chosen GPU** (Table I on the A100-80GB,
+  the model's own table on mixed fleets);
 * it never *double-books* a memory slice (its window is fully free);
 * a *release after expiry restores the exact pre-allocation occupancy*
   (the window is fully occupied right before release and fully free after).
+
+:func:`host_decisions` additionally drives the *Python* schedulers over the
+same presampled event stream, producing a decision trace that must match
+the device trace decision-for-decision (the engines are exact-parity per
+step, and the stream fixes the arrival process) — the strongest
+cross-engine check we have, and it works on any ClusterSpec.
 
 Tests use this to cross-check the device scan against an independent
 host implementation; it is also handy for debugging new policies.
@@ -18,12 +26,20 @@ host implementation; it is also handy for debugging new policies.
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
 from repro.core import mig
+from repro.core.schedulers import make_scheduler
 from repro.sim.batched import EventMeta, EventStream, EventTrace
+
+
+def _spec_or_default(spec: Optional[mig.ClusterSpec], num_gpus: int) -> mig.ClusterSpec:
+    if spec is None:
+        return mig.ClusterSpec.homogeneous(mig.A100_80GB, num_gpus)
+    assert spec.num_gpus == num_gpus
+    return spec
 
 
 def _walk(
@@ -32,12 +48,14 @@ def _walk(
     trace: EventTrace,
     num_gpus: int,
     check: bool,
+    spec: Optional[mig.ClusterSpec] = None,
 ):
-    """Shared event walk: returns (final_occ (R, M, 8), alive sets per replica).
+    """Shared event walk: returns (final_occ (R, M, S), alive sets per replica).
 
     Each alive entry is ``(end_slot, gpu, anchor, mem)`` for a workload
     still allocated when the stream ends.
     """
+    spec = _spec_or_default(spec, num_gpus)
     e_max, runs = np.asarray(events.pid).shape
     pid = np.asarray(events.pid)
     new_slot = np.asarray(events.new_slot)
@@ -47,7 +65,7 @@ def _walk(
     slot = np.asarray(meta.slot)
     end = np.asarray(meta.end)
 
-    final = np.zeros((runs, num_gpus, mig.NUM_MEM_SLICES), dtype=np.int32)
+    final = np.zeros((runs, num_gpus, spec.num_mem_slices), dtype=np.int32)
     alive_sets = []
     for r in range(runs):
         occ = final[r]
@@ -67,12 +85,12 @@ def _walk(
             p = pid[e, r]
             if p < 0 or not ok[e, r]:
                 continue
-            prof = mig.PROFILES[p]
             g, j = int(gpu[e, r]), int(aidx[e, r])
+            prof = spec.model_of(g).profiles[p]
             if check:
                 assert 0 <= j < prof.num_placements, (
                     f"replica {r} event {e}: anchor index {j} illegal for "
-                    f"profile {prof.name}"
+                    f"profile {prof.name} on {spec.model_of(g).name}"
                 )
             anchor = prof.anchors[j]
             if check:
@@ -92,13 +110,15 @@ def replay(
     trace: EventTrace,
     num_gpus: int,
     check: bool = True,
+    spec: Optional[mig.ClusterSpec] = None,
 ) -> np.ndarray:
-    """Re-execute a decision trace on host; returns final occupancy (R, M, 8).
+    """Re-execute a decision trace on host; returns final occupancy (R, M, S).
 
     With ``check=True`` (default), raises ``AssertionError`` on any
     invariant violation (illegal anchor, double-booking, inexact release).
+    ``spec`` selects the fleet (default: homogeneous A100-80GB).
     """
-    final, _ = _walk(events, meta, trace, num_gpus, check)
+    final, _ = _walk(events, meta, trace, num_gpus, check, spec)
     return final
 
 
@@ -107,6 +127,7 @@ def drain_all(
     meta: EventMeta,
     trace: EventTrace,
     num_gpus: int,
+    spec: Optional[mig.ClusterSpec] = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
     """Replay, then release every still-active workload.
 
@@ -114,10 +135,64 @@ def drain_all(
     if and only if every release restores its exact allocation window —
     the end-to-end form of the release-restores-occupancy invariant.
     """
-    final, alive_sets = _walk(events, meta, trace, num_gpus, check=True)
+    final, alive_sets = _walk(events, meta, trace, num_gpus, check=True, spec=spec)
     drained = final.copy()
     for r, alive in enumerate(alive_sets):
         for _, g, a, m in alive:
             assert (drained[r, g, a : a + m] == 1).all()
             drained[r, g, a : a + m] = 0
     return final, drained
+
+
+def host_decisions(
+    events: EventStream,
+    meta: EventMeta,
+    policy: str,
+    num_gpus: int,
+    metric: str = "blocked",
+    spec: Optional[mig.ClusterSpec] = None,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Drive the *Python* scheduler over a presampled event stream.
+
+    Returns ``(ok, gpu, anchor)`` arrays shaped like the stream
+    (``(E_max, R)``): the reference decision for every arrival, produced by
+    :class:`repro.core.schedulers` on a :class:`repro.core.mig.ClusterState`
+    with the same arrivals, durations and release schedule the batched
+    engine consumed.  Since single-step selection is exact-parity, the
+    device trace must agree element-for-element (``ok`` everywhere; ``gpu``
+    and ``anchor`` wherever accepted).
+    """
+    spec = _spec_or_default(spec, num_gpus)
+    e_max, runs = np.asarray(events.pid).shape
+    pid = np.asarray(events.pid)
+    new_slot = np.asarray(events.new_slot)
+    slot = np.asarray(meta.slot)
+    end = np.asarray(meta.end)
+
+    ok = np.zeros((e_max, runs), dtype=bool)
+    gpu = np.full((e_max, runs), -1, dtype=np.int32)
+    anchor = np.full((e_max, runs), -1, dtype=np.int32)
+    for r in range(runs):
+        cluster = mig.ClusterState(spec=spec)
+        scheduler = make_scheduler(policy, metric)
+        alive = []  # (end_slot, workload_id)
+        for e in range(e_max):
+            if new_slot[e, r]:
+                t = slot[e, r]
+                for tend, wid in [w for w in alive if w[0] <= t]:
+                    cluster.release(wid)
+                alive = [w for w in alive if w[0] > t]
+            p = int(pid[e, r])
+            if p < 0:
+                continue
+            sel = scheduler.select(cluster, p)
+            if sel is None:
+                continue
+            g, a = sel
+            wid = e  # unique per replica stream
+            cluster.allocate(wid, p, g, a)
+            alive.append((int(end[e, r]), wid))
+            ok[e, r] = True
+            gpu[e, r] = g
+            anchor[e, r] = a
+    return ok, gpu, anchor

@@ -43,6 +43,9 @@ class SimConfig:
     protocol: str = "steady"  # "steady" | "cumulative"
     metric: str = "blocked"   # fragmentation variant (MFI driver + severity metric)
     seed: int = 0
+    # heterogeneous fleets: a ClusterSpec overrides num_gpus (the paper's
+    # homogeneous A100-80GB setup is the default one-model spec)
+    cluster_spec: Optional[mig.ClusterSpec] = None
     # steady protocol:
     offered_load: float = 0.85  # fraction of slice capacity offered concurrently
     warmup_horizons: int = 3    # warmup = this * T slots
@@ -50,6 +53,16 @@ class SimConfig:
     # cumulative protocol:
     max_demand: float = 1.0
     demand_grid: Sequence[float] = tuple(np.round(np.arange(0.05, 1.001, 0.05), 3))
+
+    def __post_init__(self):
+        if self.cluster_spec is not None:
+            self.num_gpus = self.cluster_spec.num_gpus
+
+    def spec(self) -> mig.ClusterSpec:
+        """The cluster spec (defaulting to the paper's homogeneous fleet)."""
+        if self.cluster_spec is not None:
+            return self.cluster_spec
+        return mig.ClusterSpec.homogeneous(mig.A100_80GB, self.num_gpus)
 
 
 @dataclasses.dataclass
@@ -66,9 +79,8 @@ class SimResult:
     traces: Optional[Dict[str, np.ndarray]] = None
 
 
-def _saturation_horizon(num_gpus: int, dist: str) -> int:
-    cap = num_gpus * mig.NUM_MEM_SLICES
-    return int(np.ceil(cap / distributions.mean_mem_demand(dist)))
+def _saturation_horizon(capacity: int, dist: str) -> int:
+    return int(np.ceil(capacity / distributions.mean_mem_demand(dist)))
 
 
 #: slots between metric samples in the steady measurement window
@@ -80,11 +92,15 @@ def steady_params(cfg: SimConfig) -> Tuple[int, int, int, float]:
 
     Both the Python reference loop and the batched JAX engine
     (:mod:`repro.sim.batched`) derive their load model from here so the two
-    simulate the *same* arrival process by construction.
+    simulate the *same* arrival process by construction.  Capacity is the
+    spec's total slice count; the per-request slice demand is normalized by
+    the *canonical* (A100-80GB) class sizes, so offered load retains the
+    paper's meaning on the homogeneous fleet and remains a consistent,
+    model-independent knob on mixed fleets.
     """
-    cap = cfg.num_gpus * mig.NUM_MEM_SLICES
+    cap = cfg.spec().total_mem_slices
     mean_mem = distributions.mean_mem_demand(cfg.distribution)
-    T = _saturation_horizon(cfg.num_gpus, cfg.distribution)
+    T = _saturation_horizon(cap, cfg.distribution)
     mean_dur = (1 + T) / 2
     rate = cfg.offered_load * cap / (mean_dur * mean_mem)
     return T, cfg.warmup_horizons * T, cfg.measure_horizons * T, rate
@@ -101,10 +117,11 @@ def run_simulation(scheduler: Scheduler, cfg: SimConfig, seed: Optional[int] = N
 def _run_steady(scheduler: Scheduler, cfg: SimConfig, seed: int) -> SimResult:
     rng = np.random.default_rng(seed)
     scheduler.reset()
-    cap = cfg.num_gpus * mig.NUM_MEM_SLICES
+    spec = cfg.spec()
+    cap = spec.total_mem_slices
     T, warm, meas, rate = steady_params(cfg)
 
-    cluster = mig.ClusterState(cfg.num_gpus)
+    cluster = mig.ClusterState(spec=spec)
     expiry: List = []
     wid = 0
     arr = acc = 0
@@ -145,7 +162,7 @@ def _run_steady(scheduler: Scheduler, cfg: SimConfig, seed: int) -> SimResult:
             util_s += cluster.used_mem_slices / cap
             gpus_s += cluster.active_gpus
             frag_s += fragmentation.cluster_fragmentation(
-                cluster.occupancy_matrix(), cfg.metric
+                cluster.occupancy_matrix(), cfg.metric, spec=spec
             )
             nsamp += 1
 
@@ -163,15 +180,16 @@ def _run_steady(scheduler: Scheduler, cfg: SimConfig, seed: int) -> SimResult:
 def _run_cumulative(scheduler: Scheduler, cfg: SimConfig, seed: int) -> SimResult:
     rng = np.random.default_rng(seed)
     scheduler.reset()
-    cap = cfg.num_gpus * mig.NUM_MEM_SLICES
+    spec = cfg.spec()
+    cap = spec.total_mem_slices
     mean_mem = distributions.mean_mem_demand(cfg.distribution)
-    T = _saturation_horizon(cfg.num_gpus, cfg.distribution)
+    T = _saturation_horizon(cap, cfg.distribution)
     n = int(np.ceil(cfg.max_demand * cap / mean_mem)) + 20
 
     profiles = distributions.sample_profiles(cfg.distribution, n, rng)
     durations = rng.integers(1, T + 1, size=n)
 
-    cluster = mig.ClusterState(cfg.num_gpus)
+    cluster = mig.ClusterState(spec=spec)
     expiry: List = []
     grid = np.asarray(cfg.demand_grid, dtype=np.float64)
     G = len(grid)
@@ -208,7 +226,7 @@ def _run_cumulative(scheduler: Scheduler, cfg: SimConfig, seed: int) -> SimResul
             traces["active_gpus"][gi] = cluster.active_gpus
             traces["utilization"][gi] = cluster.used_mem_slices / cap
             traces["frag_severity"][gi] = fragmentation.cluster_fragmentation(
-                cluster.occupancy_matrix(), cfg.metric
+                cluster.occupancy_matrix(), cfg.metric, spec=spec
             )
             gi += 1
         if frac >= cfg.max_demand and gi >= G:
@@ -224,7 +242,7 @@ def _run_cumulative(scheduler: Scheduler, cfg: SimConfig, seed: int) -> SimResul
         active_gpus=float(cluster.active_gpus),
         utilization=cluster.used_mem_slices / cap,
         frag_severity=fragmentation.cluster_fragmentation(
-            cluster.occupancy_matrix(), cfg.metric
+            cluster.occupancy_matrix(), cfg.metric, spec=spec
         ),
         rejects_by_profile=rejects,
         arrivals_by_profile=arrivals,

@@ -30,6 +30,7 @@ PY_SCHEDULERS = {
     "ff": schedulers.FirstFit,
     "bf-bi": schedulers.BestFitBestIndex,
     "wf-bi": schedulers.WorstFitBestIndex,
+    "rr": schedulers.RoundRobin,  # fresh cursor == policy_select cursor=0
 }
 
 
@@ -184,7 +185,26 @@ class TestTrajectoryInvariants:
 class TestAPI:
     def test_unknown_policy_raises(self):
         with pytest.raises(ValueError, match="unknown batched policy"):
-            batched.run_batched("rr", SimConfig(num_gpus=2), runs=1)
+            batched.run_batched("mfi-defrag", SimConfig(num_gpus=2), runs=1)
+
+    def test_rr_cursor_advances_like_python(self):
+        """RR is stateful: the cursor carried through consecutive decisions
+        must track the Python scheduler's ``_next`` exactly."""
+        cl = mig.ClusterState(3)
+        rr = schedulers.RoundRobin()
+        cursor = 0
+        for step in range(5):
+            ref = rr.select(cl, PID["1g.10gb"])
+            occ = jnp.asarray(cl.occupancy_matrix())
+            g, a, ok = batched.policy_select(
+                occ, jnp.int32(PID["1g.10gb"]), "rr", cursor=cursor
+            )
+            got = (int(g), int(a)) if bool(ok) else None
+            assert got == ref
+            if ref is not None:
+                cl.allocate(100 + step, PID["1g.10gb"], *ref)
+                cursor = (ref[0] + 1) % cl.num_gpus
+            assert cursor == rr._next
 
     def test_cumulative_protocol_raises(self):
         cfg = SimConfig(num_gpus=2, protocol="cumulative")

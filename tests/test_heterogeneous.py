@@ -1,0 +1,265 @@
+"""Heterogeneous-cluster substrate tests: DeviceModel / ClusterSpec parity.
+
+Three layers of guarantees:
+
+* **device models are well-formed** — each model's placement table stays in
+  bounds and maps every demand class either to legal windows or to an
+  explicit no-realization entry;
+* **bit-for-bit homogeneity** — the explicit one-model A100-80GB spec
+  reproduces the legacy (spec-free) results exactly, for the Python loop,
+  the batched engine, and the single-decision paths;
+* **mixed-fleet parity** — on an A100-80GB/A100-40GB spec the Python and
+  batched engines agree decision-for-decision on the *same* presampled
+  event stream (hence on acceptance counts per seed), and the batched
+  trajectory passes the replay invariants against per-model tables.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fragmentation, mig, schedulers
+from repro.sim import SimConfig, run_many, run_simulation
+from repro.sim import batched, replay
+from repro.core.schedulers import make_scheduler
+
+MIXED = mig.ClusterSpec(((mig.A100_80GB, 3), (mig.A100_40GB, 3)))
+
+PY_SCHEDULERS = {
+    "mfi": schedulers.MFI,
+    "ff": schedulers.FirstFit,
+    "bf-bi": schedulers.BestFitBestIndex,
+    "wf-bi": schedulers.WorstFitBestIndex,
+    "rr": schedulers.RoundRobin,
+}
+
+
+def _sim(policy, cfg, spec, runs):
+    events, meta, rr, rc = batched.presample_arrivals(cfg, runs=runs)
+    final, trace = jax.device_get(
+        batched._simulate(
+            jax.tree.map(jnp.asarray, events),
+            policy=policy,
+            metric=cfg.metric,
+            num_gpus=cfg.num_gpus,
+            ring_rows=rr,
+            ring_cols=rc,
+            use_kernel=False,
+            midx=jnp.asarray(spec.model_index),
+            tables=batched.spec_tables(spec),
+        )
+    )
+    return events, meta, trace, final
+
+
+class TestDeviceModels:
+    def test_registry_and_parse(self):
+        spec = mig.ClusterSpec.parse("a100-80:2,a100-40:1,h100-96:1")
+        assert spec.num_gpus == 4
+        assert [m.name for m in spec.models] == [
+            "a100-80gb", "a100-40gb", "h100-96gb",
+        ]
+        np.testing.assert_array_equal(spec.model_index, [0, 0, 1, 2])
+        with pytest.raises(ValueError, match="unknown device model"):
+            mig.ClusterSpec.parse("v100:4")
+
+    def test_tables_in_bounds(self):
+        for model in (mig.A100_80GB, mig.A100_40GB, mig.H100_96GB):
+            for prof in model.profiles:
+                for a in prof.anchors:
+                    assert a + prof.mem <= model.num_mem_slices
+            masks = model.placement_masks
+            np.testing.assert_array_equal(masks.sum(axis=1), model.placement_mem)
+
+    def test_a100_80_is_canonical(self):
+        assert mig.A100_80GB.profiles == mig.PROFILES
+        np.testing.assert_array_equal(
+            mig.A100_80GB.placement_masks, mig.PLACEMENT_MASKS
+        )
+        assert mig.A100_80GB.num_placements == mig.NUM_PLACEMENTS
+
+    def test_a100_40_realizations(self):
+        m = mig.A100_40GB
+        assert not m.placeable(0)  # 80 GiB demand cannot fit a 40 GiB GPU
+        # 40 GiB demands need the whole GPU; 20 GiB a half; 10 GiB a quarter
+        assert [p.mem for p in m.profiles] == [7, 7, 7, 4, 4, 2]
+        assert m.num_placements == 9
+
+    def test_unplaceable_class_rejected_everywhere(self):
+        cl = mig.ClusterState(spec=mig.ClusterSpec.homogeneous(mig.A100_40GB, 3))
+        for name in schedulers.SCHEDULERS:
+            assert make_scheduler(name).select(cl, 0) is None
+
+    def test_cross_model_allocation_tracks_model_table(self):
+        cl = mig.ClusterState(spec=MIXED)
+        # class 4 (1g.20gb demand): 2 slices on A100-80, 4 slices on A100-40
+        cl.allocate(1, 4, 0, 0)
+        cl.allocate(2, 4, 3, 0)
+        assert cl.gpus[0].used_mem_slices == 2
+        assert cl.gpus[3].used_mem_slices == 4
+        with pytest.raises(ValueError, match="illegal"):
+            cl.allocate(3, 4, 3, 2)  # anchor 2 is legal on A100-80 only
+
+
+class TestHomogeneousBitForBit:
+    """The one-model spec must reproduce the legacy results exactly."""
+
+    def test_python_engine(self):
+        cfg_a = SimConfig(num_gpus=5, offered_load=0.85, seed=7)
+        cfg_b = SimConfig(
+            cluster_spec=mig.ClusterSpec.homogeneous(mig.A100_80GB, 5),
+            offered_load=0.85, seed=7,
+        )
+        for policy in ("mfi", "rr"):
+            ra = run_simulation(make_scheduler(policy), cfg_a)
+            rb = run_simulation(make_scheduler(policy), cfg_b)
+            assert ra.acceptance_rate == rb.acceptance_rate
+            assert ra.frag_severity == rb.frag_severity
+            assert ra.utilization == rb.utilization
+
+    def test_batched_engine(self):
+        cfg_a = SimConfig(num_gpus=5, offered_load=0.85, seed=7)
+        cfg_b = SimConfig(
+            cluster_spec=mig.ClusterSpec.homogeneous(mig.A100_80GB, 5),
+            offered_load=0.85, seed=7,
+        )
+        for policy in ("mfi", "rr"):
+            ra = batched.run_batched(policy, cfg_a, runs=4)
+            rb = batched.run_batched(policy, cfg_b, runs=4)
+            for k in ra:
+                np.testing.assert_array_equal(np.asarray(ra[k]), np.asarray(rb[k]))
+
+    def test_single_decisions(self):
+        rng = np.random.default_rng(3)
+        spec = mig.ClusterSpec.homogeneous(mig.A100_80GB, 4)
+        for _ in range(25):
+            occ = (rng.random((4, 8)) < 0.4).astype(np.int32)
+            pid = int(rng.integers(0, mig.NUM_PROFILES))
+            for policy in batched.POLICIES:
+                legacy = batched.policy_select(jnp.asarray(occ), jnp.int32(pid), policy)
+                spec_d = batched.policy_select(
+                    jnp.asarray(occ), jnp.int32(pid), policy, spec=spec
+                )
+                assert tuple(map(int, legacy)) == tuple(map(int, spec_d))
+
+
+class TestMixedParity:
+    """Python vs batched on a mixed two-model spec."""
+
+    def test_single_step_decisions_match(self):
+        rng = np.random.default_rng(11)
+        checked = 0
+        for _ in range(60):
+            cl = mig.ClusterState(spec=MIXED)
+            wid = 0
+            for g in range(cl.num_gpus):
+                for pid in rng.permutation(mig.NUM_PROFILES):
+                    if rng.random() < 0.5:
+                        anchors = cl.gpus[g].feasible_anchors(int(pid))
+                        if anchors:
+                            cl.allocate(wid, int(pid), g, int(rng.choice(anchors)))
+                            wid += 1
+            occ = cl.occupancy_matrix()
+            pid = int(rng.integers(0, mig.NUM_PROFILES))
+            for name, cls in PY_SCHEDULERS.items():
+                ref = cls().select(cl, pid)
+                g, a, ok = batched.policy_select(
+                    jnp.asarray(occ), jnp.int32(pid), name, spec=MIXED
+                )
+                got = (int(g), int(a)) if bool(ok) else None
+                assert got == ref, f"{name}: pid={pid} python={ref} batched={got}"
+                checked += 1
+        assert checked >= 50 * len(PY_SCHEDULERS)
+
+    @pytest.mark.parametrize("policy", ("mfi", "ff", "rr"))
+    def test_same_stream_acceptance_counts_match(self, policy):
+        """Exact per-seed agreement: the Python schedulers driven over the
+        batched engine's own event stream accept the same arrivals."""
+        for seed in (0, 1):
+            cfg = SimConfig(cluster_spec=MIXED, offered_load=0.9, seed=seed)
+            events, meta, trace, _ = _sim(policy, cfg, MIXED, runs=2)
+            ok_ref, gpu_ref, anc_ref = replay.host_decisions(
+                events, meta, policy, cfg.num_gpus, spec=MIXED
+            )
+            ok_dev = np.asarray(trace.ok)
+            np.testing.assert_array_equal(ok_dev, ok_ref)
+            assert ok_dev.sum() == ok_ref.sum()  # acceptance counts per seed
+            # accepted placements land on the same GPU
+            np.testing.assert_array_equal(
+                np.asarray(trace.gpu)[ok_dev], gpu_ref[ok_ref]
+            )
+
+    @pytest.mark.parametrize("policy", batched.POLICIES)
+    def test_replay_invariants_on_mixed_spec(self, policy):
+        cfg = SimConfig(cluster_spec=MIXED, offered_load=1.1, seed=5)
+        events, meta, trace, final = _sim(policy, cfg, MIXED, runs=2)
+        occ = replay.replay(events, meta, trace, cfg.num_gpus, spec=MIXED)
+        # device window-count state equals the reconstruction per model
+        tables = jax.device_get(batched.spec_tables(MIXED))
+        w = tables.W[MIXED.model_index]  # (M, N, S)
+        expect = np.einsum("rms,mns->rmn", occ.astype(np.float32), w)
+        np.testing.assert_allclose(final.base, expect)
+        _, drained = replay.drain_all(events, meta, trace, cfg.num_gpus, spec=MIXED)
+        np.testing.assert_array_equal(drained, 0)
+
+    @pytest.mark.slow
+    def test_aggregate_parity_monte_carlo(self):
+        cfg = SimConfig(
+            cluster_spec=mig.ClusterSpec(
+                ((mig.A100_80GB, 4), (mig.A100_40GB, 4))
+            ),
+            offered_load=0.85,
+            seed=0,
+        )
+        rb = batched.run_batched("mfi", cfg, runs=24)
+        rp = run_many("mfi", cfg, runs=24)
+        assert abs(rb["acceptance_rate"] - rp["acceptance_rate"]) < 0.06
+        assert abs(rb["utilization"] - rp["utilization"]) < 0.08
+
+
+class TestMixedBehaviour:
+    def test_big_class_rejected_once_a100_80s_full(self):
+        cl = mig.ClusterState(spec=MIXED)
+        sched = make_scheduler("mfi")
+        for wid in range(3):
+            sel = sched.select(cl, 0)  # 80 GiB demand
+            assert sel is not None and sel[0] < 3  # only A100-80GB GPUs
+            cl.allocate(wid, 0, *sel)
+        assert sched.select(cl, 0) is None  # A100-40s can never take it
+        assert sched.select(cl, 5) is not None  # small demand still fits
+
+    def test_spec_fragmentation_scores_use_own_tables(self):
+        occ = np.zeros((6, 8), np.int32)
+        occ[:, 0] = 1  # one occupied slice everywhere
+        scores = fragmentation.spec_fragmentation_scores(occ, MIXED)
+        # same bitmap, different placement tables -> different scores
+        assert scores[0] == scores[1] == scores[2]
+        assert scores[3] == scores[4] == scores[5]
+        assert scores[0] != scores[3]
+
+    def test_serving_admission_on_mixed_spec(self):
+        from repro.serving import AdmissionController
+
+        ac = AdmissionController(policy="mfi", cluster_spec=MIXED)
+        p = ac.admit(1, "7g.80gb")
+        assert p is not None and p.gpu < 3
+        p2 = ac.admit(2, "1g.10gb")
+        assert p2 is not None
+        s = ac.stats()
+        assert s["accepted"] == 2
+        ac.release(1)
+        ac.release(2)
+        assert ac.cluster.used_mem_slices == 0
+
+    def test_h100_spec_runs_end_to_end(self):
+        cfg = SimConfig(
+            cluster_spec=mig.ClusterSpec.homogeneous(mig.H100_96GB, 4),
+            offered_load=0.8,
+            seed=2,
+        )
+        rb = batched.run_batched("mfi", cfg, runs=2)
+        rp = run_many("mfi", cfg, runs=2)
+        assert 0.0 < rb["acceptance_rate"] <= 1.0
+        assert 0.0 < rp["acceptance_rate"] <= 1.0
