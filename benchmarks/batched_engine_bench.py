@@ -12,7 +12,12 @@ the acceptance bar is >= 10x on CPU.
 ``--smoke`` shrinks the point (M=16, 8 replicas) so CI can track the perf
 trajectory per-PR in ~a minute; ``--json PATH`` dumps the metrics for the
 workflow artifact.  Smoke mode records the numbers without enforcing the
-10x bar (tiny clusters under-utilize the batched engine by design).
+10x bar (tiny clusters under-utilize the batched engine by design), and
+additionally sweeps **every registered batched-capable policy**
+(``repro.core.policy.list_policies(engine="batched")``) for warm per-policy
+throughput — so the uploaded artifact tracks the perf trajectory of each
+policy, including ones registered after this benchmark was written
+(``--sweep``/``--no-sweep`` overrides).
 """
 
 from __future__ import annotations
@@ -21,8 +26,24 @@ import argparse
 import json
 import time
 
+from repro.core.policy import list_policies
 from repro.sim import SimConfig, run_many
 from repro.sim.batched import run_batched
+
+
+def sweep_policies(cfg: SimConfig, runs: int):
+    """Warm replica throughput of every registered batched-capable policy."""
+    out = {}
+    for policy in list_policies(engine="batched"):
+        run_batched(policy, cfg, runs=runs)  # compile + warm the cache
+        t0 = time.perf_counter()
+        r = run_batched(policy, cfg, runs=runs)
+        dt = time.perf_counter() - t0
+        out[policy] = {
+            "warm_rps": runs / dt,
+            "acceptance_rate": float(r["acceptance_rate"]),
+        }
+    return out
 
 
 def bench_point(policy: str, cfg: SimConfig, runs: int, py_runs: int):
@@ -50,9 +71,11 @@ def bench_point(policy: str, cfg: SimConfig, runs: int, py_runs: int):
 
 def main(runs: int = 64, num_gpus: int = 100, load: float = 0.85,
          policy: str = "mfi", py_runs: int = 3, smoke: bool = False,
-         json_path: str | None = None):
+         json_path: str | None = None, sweep: bool | None = None):
     if smoke:
         runs, num_gpus, py_runs = min(runs, 8), min(num_gpus, 16), min(py_runs, 2)
+    if sweep is None:
+        sweep = smoke  # CI artifact tracks all batched-capable policies
     cfg = SimConfig(
         num_gpus=num_gpus, distribution="uniform", offered_load=load, seed=0
     )
@@ -79,10 +102,21 @@ def main(runs: int = 64, num_gpus: int = 100, load: float = 0.85,
         f"-> {'PASS' if ok else 'FAIL'}"
         f"{' (smoke mode: recorded, not enforced)' if smoke else ' (>= 10x required)'}"
     )
+    per_policy = None
+    if sweep:
+        per_policy = sweep_policies(cfg, runs)
+        print("table,engine,policy,num_gpus,runs,replicas_per_sec,acceptance")
+        for name, p in per_policy.items():
+            print(
+                f"sweep,batched,{name},{num_gpus},{runs},"
+                f"{p['warm_rps']:.2f},{p['acceptance_rate']:.4f}"
+            )
     if json_path:
         payload = dict(
             r, policy=policy, num_gpus=num_gpus, runs=runs, load=load, smoke=smoke
         )
+        if per_policy is not None:
+            payload["policies"] = per_policy
         with open(json_path, "w") as fh:
             json.dump(payload, fh, indent=2, sort_keys=True)
         print(f"# wrote {json_path}")
@@ -100,9 +134,13 @@ if __name__ == "__main__":
                     help="CI-sized point (M=16, 8 replicas); records, never fails")
     ap.add_argument("--json", dest="json_path", default=None,
                     help="write metrics JSON here (workflow artifact)")
+    ap.add_argument("--sweep", dest="sweep", action="store_true", default=None,
+                    help="per-policy warm throughput over every registered "
+                         "batched-capable policy (default: on in smoke mode)")
+    ap.add_argument("--no-sweep", dest="sweep", action="store_false")
     args = ap.parse_args()
     main(
         runs=args.runs, num_gpus=args.num_gpus, load=args.load,
         policy=args.policy, py_runs=args.py_runs, smoke=args.smoke,
-        json_path=args.json_path,
+        json_path=args.json_path, sweep=args.sweep,
     )

@@ -25,12 +25,38 @@ def csv_row(name: str, us: float, derived: str = "") -> str:
 
 ENGINES = ("python", "batched")
 
+#: the paper's evaluation set (Figs. 4-6); ``--policies`` accepts any
+#: registered policy name (see ``repro.core.policy.list_policies``)
+PAPER_POLICIES = ("ff", "rr", "bf-bi", "wf-bi", "mfi")
+
 #: named fleet scenarios (--cluster flags also accept raw spec strings
-#: such as "a100-80:40,a100-40:40,h100-96:20")
+#: such as "a100-80:40,a100-40:40,h100-96:20").  The ``mixed`` scenario is
+#: a four-model fleet — both A100 SKUs plus both H100 SKUs — so every
+#: sweep exercises the registry's per-model placement tables end to end.
 CLUSTERS = {
     "homogeneous": None,
-    "mixed": "a100-80:50,a100-40:50",
+    "mixed": "a100-80:30,a100-40:30,h100-96:20,h100-80:20",
 }
+
+
+def resolve_policies(arg, default=PAPER_POLICIES):
+    """``--policies`` value -> validated tuple of registered policy names.
+
+    ``None``/empty keeps the paper set; ``"all"`` expands to every
+    registered policy; otherwise a comma-separated list.  Unknown names
+    raise through the registry's single validation path.
+    """
+    from repro.core.policy import list_policies, resolve
+
+    if not arg:
+        names = tuple(default)
+    elif arg == "all":
+        names = list_policies()
+    else:
+        names = tuple(p.strip() for p in arg.split(",") if p.strip())
+    for name in names:
+        resolve(name)
+    return names
 
 
 def resolve_cluster(cluster, num_gpus: int):
@@ -44,23 +70,27 @@ def resolve_cluster(cluster, num_gpus: int):
     return spec, spec.num_gpus
 
 
-def run_engine(engine: str, scheduler: str, cfg, runs: int):
+def run_engine(engine: str, scheduler, cfg, runs: int):
     """Dispatch a Monte-Carlo sweep point to the chosen simulation engine.
 
-    ``batched`` covers the five scan policies (mfi/ff/bf-bi/wf-bi/rr — RR's
-    cursor rides in the scan state) on the steady protocol, homogeneous or
-    mixed ``cfg.cluster_spec``; anything else (mfi-defrag, cumulative)
-    falls back to the Python reference loop so sweeps stay complete.
+    ``scheduler`` is any registered policy name (or ad-hoc ``PolicySpec``);
+    the policy registry decides batched capability.  ``batched`` runs every
+    batched-capable policy on the steady protocol, homogeneous or mixed
+    ``cfg.cluster_spec``; anything else (defrag policies, the cumulative
+    protocol) falls back to the Python reference loop so sweeps stay
+    complete.
     """
+    from repro.core.policy import resolve
     from repro.sim import run_many
-    from repro.sim.batched import POLICIES, run_batched
+    from repro.sim.batched import run_batched
 
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; options {ENGINES}")
+    spec = resolve(scheduler)
     if (
         engine == "batched"
-        and scheduler in POLICIES
+        and spec.supports("batched")
         and cfg.protocol == "steady"
     ):
-        return run_batched(scheduler, cfg, runs=runs)
-    return run_many(scheduler, cfg, runs=runs)
+        return run_batched(spec, cfg, runs=runs)
+    return run_many(spec, cfg, runs=runs)

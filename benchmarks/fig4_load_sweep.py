@@ -21,19 +21,28 @@ import argparse
 
 import numpy as np
 
-from benchmarks.common import CLUSTERS, ENGINES, resolve_cluster, run_engine
+from benchmarks.common import (
+    CLUSTERS,
+    ENGINES,
+    PAPER_POLICIES,
+    resolve_cluster,
+    resolve_policies,
+    run_engine,
+)
 from repro.sim import SimConfig
 
-SCHEDULERS = ("ff", "rr", "bf-bi", "wf-bi", "mfi")
+SCHEDULERS = PAPER_POLICIES
 
 
 def run(runs: int = 30, num_gpus: int = 100, loads=(0.5, 0.7, 0.85, 1.0),
-        seed: int = 0, engine: str = "python", cluster: str | None = None):
+        seed: int = 0, engine: str = "python", cluster: str | None = None,
+        policies: str | None = None):
     spec, num_gpus = resolve_cluster(cluster, num_gpus)
+    names = resolve_policies(policies)
     rows = []
     results = {}
     for load in loads:
-        for name in SCHEDULERS:
+        for name in names:
             cfg = SimConfig(
                 num_gpus=num_gpus, distribution="uniform",
                 offered_load=load, seed=seed, cluster_spec=spec,
@@ -48,17 +57,20 @@ def run(runs: int = 30, num_gpus: int = 100, loads=(0.5, 0.7, 0.85, 1.0),
     return rows, results
 
 
-def main(runs: int = 30, engine: str = "python", cluster: str | None = None):
+def main(runs: int = 30, engine: str = "python", cluster: str | None = None,
+         policies: str | None = None):
     print("table,scheduler,load,acceptance,allocated,utilization,active_gpus,frag")
-    rows, results = run(runs=runs, engine=engine, cluster=cluster)
+    rows, results = run(runs=runs, engine=engine, cluster=cluster, policies=policies)
     for row in rows:
         print(row)
     # headline check at heavy load
     heavy = 0.85
-    mfi = results[("mfi", heavy)]["allocated_workloads"]
-    base = np.mean([results[(s, heavy)]["allocated_workloads"] for s in SCHEDULERS if s != "mfi"])
-    print(f"# MFI vs baseline-mean allocated @ {heavy:.0%}: {100*(mfi/base-1):+.1f}% "
-          f"(paper claims ~+10% in heavy load)")
+    names = resolve_policies(policies)
+    if "mfi" in names and len(names) > 1:
+        mfi = results[("mfi", heavy)]["allocated_workloads"]
+        base = np.mean([results[(s, heavy)]["allocated_workloads"] for s in names if s != "mfi"])
+        print(f"# MFI vs baseline-mean allocated @ {heavy:.0%}: {100*(mfi/base-1):+.1f}% "
+              f"(paper claims ~+10% in heavy load)")
 
 
 if __name__ == "__main__":
@@ -69,5 +81,10 @@ if __name__ == "__main__":
         "--cluster", default=None,
         help=f"named scenario {sorted(CLUSTERS)} or spec string 'a100-80:50,a100-40:50'",
     )
+    ap.add_argument(
+        "--policies", default=None,
+        help="comma list of registered policies, or 'all' (default: paper set)",
+    )
     args = ap.parse_args()
-    main(runs=args.runs, engine=args.engine, cluster=args.cluster)
+    main(runs=args.runs, engine=args.engine, cluster=args.cluster,
+         policies=args.policies)

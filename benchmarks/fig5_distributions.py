@@ -11,19 +11,28 @@ from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import CLUSTERS, ENGINES, resolve_cluster, run_engine
+from benchmarks.common import (
+    CLUSTERS,
+    ENGINES,
+    PAPER_POLICIES,
+    resolve_cluster,
+    resolve_policies,
+    run_engine,
+)
 from repro.sim import SimConfig
 from repro.sim.distributions import DISTRIBUTIONS
 
-SCHEDULERS = ("ff", "rr", "bf-bi", "wf-bi", "mfi")
+SCHEDULERS = PAPER_POLICIES
 
 
 def run(runs: int = 30, num_gpus: int = 100, load: float = 0.85, seed: int = 0,
-        engine: str = "python", cluster: str | None = None):
+        engine: str = "python", cluster: str | None = None,
+        policies: str | None = None):
     spec, num_gpus = resolve_cluster(cluster, num_gpus)
+    names = resolve_policies(policies)
     rows, results = [], {}
     for dist in DISTRIBUTIONS:
-        for name in SCHEDULERS:
+        for name in names:
             cfg = SimConfig(
                 num_gpus=num_gpus, distribution=dist, offered_load=load,
                 seed=seed, cluster_spec=spec,
@@ -38,16 +47,18 @@ def run(runs: int = 30, num_gpus: int = 100, load: float = 0.85, seed: int = 0,
     return rows, results
 
 
-def main(runs: int = 30, engine: str = "python", cluster: str | None = None):
+def main(runs: int = 30, engine: str = "python", cluster: str | None = None,
+         policies: str | None = None):
     print("table,scheduler,distribution,acceptance,allocated,utilization,active_gpus,frag")
-    rows, results = run(runs=runs, engine=engine, cluster=cluster)
+    rows, results = run(runs=runs, engine=engine, cluster=cluster, policies=policies)
     for row in rows:
         print(row)
+    names = resolve_policies(policies)
     for dist in DISTRIBUTIONS:
-        accs = {s: results[(s, dist)]["acceptance_rate"] for s in SCHEDULERS}
+        accs = {s: results[(s, dist)]["acceptance_rate"] for s in names}
         best = max(accs, key=accs.get)
-        print(f"# {dist}: best acceptance = {best} ({accs[best]:.4f}); "
-              f"mfi = {accs['mfi']:.4f}")
+        mfi_note = f"; mfi = {accs['mfi']:.4f}" if "mfi" in accs else ""
+        print(f"# {dist}: best acceptance = {best} ({accs[best]:.4f}){mfi_note}")
 
 
 if __name__ == "__main__":
@@ -58,5 +69,10 @@ if __name__ == "__main__":
         "--cluster", default=None,
         help=f"named scenario {sorted(CLUSTERS)} or spec string 'a100-80:50,a100-40:50'",
     )
+    ap.add_argument(
+        "--policies", default=None,
+        help="comma list of registered policies, or 'all' (default: paper set)",
+    )
     args = ap.parse_args()
-    main(runs=args.runs, engine=args.engine, cluster=args.cluster)
+    main(runs=args.runs, engine=args.engine, cluster=args.cluster,
+         policies=args.policies)

@@ -4,10 +4,11 @@ corresponds to the lowest fragmentation severity."""
 
 from __future__ import annotations
 
+from benchmarks.common import PAPER_POLICIES
 from repro.sim import SimConfig, run_many
 from repro.sim.distributions import DISTRIBUTIONS
 
-SCHEDULERS = ("ff", "rr", "bf-bi", "wf-bi", "mfi")
+SCHEDULERS = PAPER_POLICIES
 
 
 def run(runs: int = 30, num_gpus: int = 100, load: float = 0.85, seed: int = 0):

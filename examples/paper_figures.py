@@ -5,9 +5,10 @@
 (The paper uses 500 runs; 30-100 gives the same ordering with tight CIs.
 ``--engine batched`` runs fig4/fig5 sweep points through the batched JAX
 engine — paper-scale 500-replica sweeps become practical on CPU.
-``--cluster mixed`` re-runs the evaluation on a heterogeneous
-half-A100-80GB / half-A100-40GB fleet — a beyond-paper scenario; any
-explicit spec string like ``a100-80:40,a100-40:40,h100-96:20`` works too.)
+``--cluster mixed`` re-runs the evaluation on a heterogeneous four-model
+fleet — A100-80GB/A100-40GB/H100-96GB/H100-80GB, a beyond-paper scenario;
+any explicit spec string like ``a100-80:40,a100-40:40,h100-96:20`` works
+too.)
 """
 
 import argparse

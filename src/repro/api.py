@@ -1,0 +1,87 @@
+"""Public policy-and-simulation facade.
+
+One import surface for the declarative policy layer (see
+``docs/POLICIES.md``):
+
+    from repro import api
+
+    # run a registered policy through either engine
+    api.simulate("mfi", engine="batched", runs=64, num_gpus=50)
+
+    # define + register a custom policy once, run it everywhere
+    spec = api.PolicySpec(
+        name="pack-new-gen",
+        keys=("model-group", "free-slices", "gpu", "-anchor"),
+        description="prefer newest device model, then pack tightly",
+    )
+    api.register_policy(spec)
+    api.simulate("pack-new-gen", engine="batched", runs=64)
+    sched = api.make_policy("pack-new-gen")   # host Scheduler object
+
+Every entry point validates through the registry's single path
+(:func:`repro.core.policy.resolve`), so unknown policies and
+policy/engine mismatches raise the same helpful error everywhere.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.core.policy import (  # noqa: F401  (re-exported API)
+    ENGINES,
+    KEY_VOCABULARY,
+    PolicyLike,
+    PolicySpec,
+    get_policy,
+    list_policies,
+    policy_engines,
+    register_policy,
+    resolve,
+    unregister_policy,
+)
+from repro.core.schedulers import Scheduler, compile_policy, make_scheduler
+
+
+def make_policy(policy: PolicyLike, metric: str = "blocked") -> Scheduler:
+    """Compile a registered policy name (or ad-hoc spec) for the host
+    engine — alias of :func:`repro.core.schedulers.make_scheduler`."""
+    return make_scheduler(policy, metric=metric)
+
+
+def simulate(
+    policy: PolicyLike = "mfi",
+    cfg=None,
+    *,
+    engine: str = "python",
+    runs: int = 100,
+    use_kernel: Optional[bool] = None,
+    **cfg_kwargs,
+) -> Dict[str, float]:
+    """Monte-Carlo evaluate one policy on one configuration point.
+
+    Args:
+      policy: registered policy name or an ad-hoc :class:`PolicySpec`.
+      cfg: a :class:`repro.sim.SimConfig`; built from ``cfg_kwargs``
+        (``num_gpus``, ``offered_load``, ``distribution``,
+        ``cluster_spec``, ...) when omitted.
+      engine: ``"python"`` (reference loop; every policy, both protocols)
+        or ``"batched"`` (single-XLA-program scan; batched-capable
+        policies, steady protocol).
+      runs: replicas to average (the paper uses 500).
+      use_kernel: batched engine only — route fragmentation scoring
+        through the Pallas kernel (default: auto, TPU + homogeneous spec).
+
+    Returns the same aggregate dict as :func:`repro.sim.run_many` /
+    :func:`repro.sim.batched.run_batched`.
+    """
+    from repro.sim import SimConfig, run_many
+    from repro.sim.batched import run_batched
+
+    spec = resolve(policy, engine=engine)  # one validation path
+    if cfg is None:
+        cfg = SimConfig(**cfg_kwargs)
+    elif cfg_kwargs:
+        raise ValueError("pass either cfg or SimConfig kwargs, not both")
+    if engine == "batched":
+        return run_batched(spec, cfg, runs=runs, use_kernel=use_kernel)
+    return run_many(spec, cfg, runs=runs)

@@ -4,6 +4,7 @@ from repro.core.mig import (  # noqa: F401
     A100_40GB,
     A100_80GB,
     DEVICE_MODELS,
+    H100_80GB,
     H100_96GB,
     NUM_MEM_SLICES,
     NUM_PROFILES,
@@ -24,14 +25,26 @@ from repro.core.fragmentation import (  # noqa: F401
     fragmentation_scores,
     spec_fragmentation_scores,
 )
+from repro.core.policy import (  # noqa: F401
+    KEY_VOCABULARY,
+    PolicySpec,
+    get_policy,
+    list_policies,
+    policy_engines,
+    register_policy,
+    unregister_policy,
+)
 from repro.core.schedulers import (  # noqa: F401
     MFI,
     SCHEDULERS,
     BestFitBestIndex,
     FirstFit,
+    MFIDefrag,
     RoundRobin,
     Scheduler,
+    SpecScheduler,
     WorstFitBestIndex,
+    compile_policy,
     make_scheduler,
     mfi_candidates,
 )

@@ -206,6 +206,13 @@ H100_96GB = DeviceModel(
     ),
 )
 
+#: H100-80GB: 8 × 10 GiB slices.  NVIDIA's H100-80GB placement-index table
+#: matches the A100-80GB one for the six canonical demand classes, so the
+#: canonical classes are their own realizations — same geometry as the
+#: paper's device, distinct SKU (cost/power-aware policies can tell them
+#: apart via the ``model-group`` scoring key).
+H100_80GB = DeviceModel(name="h100-80gb", slice_gib=10, profiles=PROFILES)
+
 DEVICE_MODELS: Dict[str, DeviceModel] = {
     "a100-80": A100_80GB,
     "a100-80gb": A100_80GB,
@@ -213,6 +220,8 @@ DEVICE_MODELS: Dict[str, DeviceModel] = {
     "a100-40gb": A100_40GB,
     "h100-96": H100_96GB,
     "h100-96gb": H100_96GB,
+    "h100-80": H100_80GB,
+    "h100-80gb": H100_80GB,
 }
 
 

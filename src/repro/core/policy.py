@@ -1,0 +1,317 @@
+"""Declarative policy layer: one :class:`PolicySpec`, two engine compilers.
+
+Every scheduling policy in this repo used to exist twice — as a Python
+``Scheduler`` subclass in :mod:`repro.core.schedulers` and again as a
+hand-vectorized selector in :mod:`repro.sim.batched` — with parity
+maintained by hand.  This module replaces both with a single *frozen,
+registrable description* of a policy:
+
+* a **feasibility filter** (today always "window-free": an anchor is a
+  candidate iff its placement window is fully free and the demand class has
+  a realization on the GPU's device model);
+* an optional **ΔF requirement** (``"frag-delta"`` among the keys — the
+  fragmentation-increment table of paper Algorithm 2 is computed only for
+  policies that ask for it);
+* an ordered list of **lexicographic scoring keys** drawn from a small
+  vocabulary (:data:`KEY_VOCABULARY`), each optionally prefixed with ``-``
+  to flip the tie-break direction.  The candidate minimizing the key tuple
+  wins; any remaining tie is broken by ascending ``(gpu, anchor)``.
+
+Both engines *compile* the same spec:
+
+* the host engine (:func:`repro.core.schedulers.compile_policy`) interprets
+  it into a ``Scheduler`` operating on a ``ClusterState``;
+* the batched engine (:mod:`repro.sim.batched`) lowers it to a vectorized
+  masked-refinement argmin inside the ``lax.scan`` event step.
+
+Because both consume the identical description, the two implementations
+cannot drift by construction — a newly registered policy is immediately
+available to ``make_scheduler`` / ``run_many`` / ``run_batched`` /
+``simulate`` and inherits the cross-engine parity test coverage for free
+(``tests/test_policy_api.py``).
+
+Key vocabulary
+    ==============  =========================================================
+    ``frag-delta``  ΔF of the dry-run placement (fragmentation increment,
+                    paper Alg. 2); requests the ΔF table from the engine
+    ``free-slices`` post-allocation free memory slices of the GPU
+                    (ascending = best-fit packing, ``-free-slices`` =
+                    worst-fit load balancing); per-model slice demand on
+                    mixed fleets
+    ``gpu``         GPU index (ascending = first-fit scan order)
+    ``anchor``      placement-anchor index (ascending = first available
+                    index; ``-anchor`` = the MIG-aware "Best Index" rule)
+    ``rr-distance`` rotation distance ``(gpu - cursor) mod M`` from the
+                    round-robin cursor; marks the policy *stateful* (the
+                    cursor advances past each accepted GPU)
+    ``model-group`` index of the GPU's device model in the spec's model
+                    list (mixed fleets: steer demand across generations)
+    ==============  =========================================================
+
+The six shipped policies (``mfi``, ``ff``, ``bf-bi``, ``wf-bi``, ``rr``,
+``mfi-defrag``) are registered here as specs; ``mfi-defrag`` additionally
+sets ``defrag=True`` (an opportunistic single-migration search on reject),
+which only the host engine implements — the registry tracks per-policy
+engine support and :func:`resolve` is the single validation path both
+engines raise through.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple, Union
+
+#: engines a policy may be compiled to
+ENGINES: Tuple[str, ...] = ("python", "batched")
+
+#: legal scoring-key bases (each may be prefixed with ``-`` to flip order)
+KEY_VOCABULARY: Tuple[str, ...] = (
+    "frag-delta",
+    "free-slices",
+    "gpu",
+    "anchor",
+    "rr-distance",
+    "model-group",
+)
+
+#: feasibility filters (currently the single built-in rule)
+FEASIBILITY_FILTERS: Tuple[str, ...] = ("window-free",)
+
+
+def key_base(key: str) -> str:
+    """Strip the optional ``-`` direction prefix off a scoring key."""
+    return key[1:] if key.startswith("-") else key
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicySpec:
+    """A frozen, registrable description of a placement policy.
+
+    A policy is: filter the feasible ``(gpu, anchor)`` dry-runs of the
+    request, score each with the ordered ``keys``, and commit the candidate
+    with the lexicographically smallest key tuple (remaining ties broken by
+    ascending ``(gpu, anchor)``).  Instances are hashable, so a spec doubles
+    as a jit static argument in the batched engine.
+
+    Attributes:
+      name: registry name (also the CLI / ``SimConfig`` policy string).
+      keys: ordered lexicographic scoring keys; bases must come from
+        :data:`KEY_VOCABULARY`, a ``-`` prefix flips the direction.
+      feasibility: candidate filter; ``"window-free"`` keeps anchors whose
+        placement window has zero occupied slices (and drops demand classes
+        with no realization on the GPU's model).
+      defrag: host-only extension — on reject, search for one running
+        workload whose migration makes the request feasible (the
+        beyond-paper ``mfi-defrag`` behaviour).  Policies with ``defrag``
+        cannot be lowered to the batched engine (migration needs a
+        host-side allocation table).
+      description: one-line human summary (shown by ``list_policies``
+        consumers and docs).
+    """
+
+    name: str
+    keys: Tuple[str, ...]
+    feasibility: str = "window-free"
+    defrag: bool = False
+    description: str = ""
+
+    def __post_init__(self):
+        if not self.name:
+            raise ValueError("PolicySpec needs a non-empty name")
+        if not isinstance(self.keys, tuple):
+            object.__setattr__(self, "keys", tuple(self.keys))
+        if not self.keys:
+            raise ValueError(f"policy {self.name!r}: needs at least one scoring key")
+        for key in self.keys:
+            if key_base(key) not in KEY_VOCABULARY:
+                raise ValueError(
+                    f"policy {self.name!r}: unknown scoring key {key!r}; "
+                    f"vocabulary: {KEY_VOCABULARY} (optionally '-'-prefixed)"
+                )
+        if self.feasibility not in FEASIBILITY_FILTERS:
+            raise ValueError(
+                f"policy {self.name!r}: unknown feasibility filter "
+                f"{self.feasibility!r}; options: {FEASIBILITY_FILTERS}"
+            )
+
+    # -- derived structure ---------------------------------------------------
+    @property
+    def requires_delta_f(self) -> bool:
+        """Whether any key consumes the ΔF (fragmentation-increment) table."""
+        return any(key_base(k) == "frag-delta" for k in self.keys)
+
+    @property
+    def stateful_cursor(self) -> bool:
+        """Whether the policy carries a round-robin rotation cursor."""
+        return any(key_base(k) == "rr-distance" for k in self.keys)
+
+    @property
+    def engines(self) -> Tuple[str, ...]:
+        """Engines this spec compiles to (defrag needs the host engine)."""
+        return ("python",) if self.defrag else ENGINES
+
+    def supports(self, engine: str) -> bool:
+        return engine in self.engines
+
+
+#: anything the public entry points accept where a policy is expected
+PolicyLike = Union[str, PolicySpec]
+
+
+# ---------------------------------------------------------------------------
+# Registry — the single source of truth for both engines
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, PolicySpec] = {}
+
+
+def register_policy(spec: PolicySpec, overwrite: bool = False) -> PolicySpec:
+    """Register ``spec`` under ``spec.name``; returns the spec.
+
+    Registered policies are immediately usable by both engines and every
+    entry point (``make_scheduler``, ``run_many``, ``run_batched``,
+    ``simulate``) and picked up by the registry-parametrized parity tests.
+    """
+    if not isinstance(spec, PolicySpec):
+        raise TypeError(f"register_policy expects a PolicySpec, got {type(spec)}")
+    if spec.name in _REGISTRY and not overwrite:
+        raise ValueError(
+            f"policy {spec.name!r} is already registered; "
+            "pass overwrite=True to replace it"
+        )
+    _REGISTRY[spec.name] = spec
+    return spec
+
+
+def unregister_policy(name: str) -> None:
+    """Remove a registered policy (built-ins included — use with care)."""
+    _REGISTRY.pop(name, None)
+
+
+def get_policy(name: str) -> PolicySpec:
+    """Look up a registered spec by name (the validating path is
+    :func:`resolve`)."""
+    return resolve(name)
+
+
+def list_policies(engine: Optional[str] = None) -> Tuple[str, ...]:
+    """Sorted names of registered policies, optionally engine-filtered."""
+    if engine is not None and engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; options: {ENGINES}")
+    return tuple(
+        sorted(
+            name
+            for name, spec in _REGISTRY.items()
+            if engine is None or spec.supports(engine)
+        )
+    )
+
+
+def policy_engines(name: str) -> Tuple[str, ...]:
+    """Engines supporting a registered policy."""
+    return resolve(name).engines
+
+
+def _catalog() -> str:
+    return ", ".join(
+        f"{name} ({'+'.join(_REGISTRY[name].engines)})"
+        for name in sorted(_REGISTRY)
+    )
+
+
+def resolve(policy: PolicyLike, engine: Optional[str] = None) -> PolicySpec:
+    """The one validation path: name-or-spec -> :class:`PolicySpec`.
+
+    Raises ``ValueError`` with a message naming every registered policy and
+    which engines support each — both on an unknown name and on a policy /
+    engine mismatch.  All entry points (``make_scheduler``, ``run_many``,
+    ``run_batched``, ``policy_select``, ``simulate``) route through here, so
+    the errors are consistent everywhere.
+    """
+    if engine is not None and engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; options: {ENGINES}")
+    if isinstance(policy, PolicySpec):
+        spec = policy  # ad-hoc (possibly unregistered) specs are welcome
+    else:
+        spec = _REGISTRY.get(policy)
+        if spec is None:
+            raise ValueError(
+                f"unknown policy {policy!r}; registered policies: {_catalog()}"
+            )
+    if engine is not None and not spec.supports(engine):
+        raise ValueError(
+            f"policy {spec.name!r} is not supported by the {engine!r} engine "
+            f"(supports: {'+'.join(spec.engines)}); policies supporting "
+            f"{engine!r}: {', '.join(list_policies(engine))}"
+        )
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# Built-in policies — the paper's MFI, its four baselines, and the
+# beyond-paper defrag variant, each as one declarative spec.
+# ---------------------------------------------------------------------------
+
+MFI_SPEC = register_policy(
+    PolicySpec(
+        name="mfi",
+        keys=("frag-delta", "gpu", "anchor"),
+        description=(
+            "Minimum Fragmentation Increment (paper Alg. 2): argmin ΔF over "
+            "all feasible dry-runs, ties by (gpu, anchor)"
+        ),
+    )
+)
+
+FF_SPEC = register_policy(
+    PolicySpec(
+        name="ff",
+        keys=("gpu", "anchor"),
+        description="First-Fit: first GPU with room, first available index",
+    )
+)
+
+RR_SPEC = register_policy(
+    PolicySpec(
+        name="rr",
+        keys=("rr-distance", "anchor"),
+        description=(
+            "Round-Robin: first feasible GPU in cursor rotation, first "
+            "available index; the cursor advances past each accepted GPU"
+        ),
+    )
+)
+
+BF_BI_SPEC = register_policy(
+    PolicySpec(
+        name="bf-bi",
+        keys=("free-slices", "gpu", "-anchor"),
+        description=(
+            "Best-Fit Best-Index: fewest post-allocation free slices, ties "
+            "by GPU id; highest feasible anchor (Best Index)"
+        ),
+    )
+)
+
+WF_BI_SPEC = register_policy(
+    PolicySpec(
+        name="wf-bi",
+        keys=("-free-slices", "gpu", "-anchor"),
+        description=(
+            "Worst-Fit Best-Index: most post-allocation free slices, ties "
+            "by GPU id; highest feasible anchor (Best Index)"
+        ),
+    )
+)
+
+MFI_DEFRAG_SPEC = register_policy(
+    PolicySpec(
+        name="mfi-defrag",
+        keys=("frag-delta", "gpu", "anchor"),
+        defrag=True,
+        description=(
+            "BEYOND-PAPER: MFI plus an opportunistic single-migration "
+            "defrag search on reject (host engine only)"
+        ),
+    )
+)

@@ -1,24 +1,33 @@
-"""Scheduling policies: MFI (Algorithm 2) and the paper's four baselines.
+"""Host-engine policy compiler: `PolicySpec` -> `Scheduler`.
+
+The policies themselves (MFI — paper Algorithm 2 — and the four baselines)
+are *declared* once in :mod:`repro.core.policy` as lexicographic
+:class:`~repro.core.policy.PolicySpec` key lists; this module interprets a
+spec against a :class:`repro.core.mig.ClusterState`.  The batched engine
+(:mod:`repro.sim.batched`) lowers the same specs to vectorized selection
+inside its scan step, so the two engines cannot drift by construction.
 
 All schedulers implement ``select(cluster, profile_id) -> (gpu_id, anchor)``
 or ``None`` (reject).  They never mutate the cluster; the caller commits.
 
-Anchor-selection policies (paper §VI):
-  * MIG-agnostic (FF, RR): "first available index" — ascending anchors.
+Anchor-selection policies (paper §VI) map onto the key vocabulary:
+  * MIG-agnostic (FF, RR): "first available index" — the ascending
+    ``anchor`` key.
   * MIG-aware "Best Index" (BF-BI, WF-BI), after [Turkkan et al. 2024]:
     prefer indexes that do not restrict profiles with fewer placement
     options — e.g. 1g.10gb goes to index 6 rather than 0, reserving the
-    {0..3} window for 4g.40gb.  Implemented as descending anchor order,
+    {0..3} window for 4g.40gb.  This is the descending ``-anchor`` key,
     which reproduces the paper's example preference.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
 from repro.core import fragmentation, mig
+from repro.core.policy import PolicyLike, PolicySpec, key_base, resolve
 
 Placement = Tuple[int, int]  # (gpu_id, anchor)
 
@@ -38,112 +47,120 @@ class Scheduler:
         pass
 
 
-def _first_anchor(gpu: mig.GPUState, profile_id: int, best_index: bool) -> Optional[int]:
-    anchors = gpu.feasible_anchors(profile_id)
-    if not anchors:
-        return None
-    return max(anchors) if best_index else min(anchors)
+class SpecScheduler(Scheduler):
+    """Interprets a :class:`PolicySpec` on the host cluster state.
 
-
-class FirstFit(Scheduler):
-    """MIG-agnostic: first GPU with enough resources, first available index."""
-
-    name = "ff"
-
-    def select(self, cluster, profile_id):
-        for gpu in cluster.gpus:
-            anchor = _first_anchor(gpu, profile_id, best_index=False)
-            if anchor is not None:
-                return (gpu.gpu_id, anchor)
-        return None
-
-
-class RoundRobin(Scheduler):
-    """MIG-agnostic: sequentially distribute over GPUs, first available index."""
-
-    name = "rr"
-
-    def __init__(self, metric: str = "blocked"):
-        super().__init__(metric)
-        self._next = 0
-
-    def reset(self):
-        self._next = 0
-
-    def select(self, cluster, profile_id):
-        n = cluster.num_gpus
-        for k in range(n):
-            gpu = cluster.gpus[(self._next + k) % n]
-            anchor = _first_anchor(gpu, profile_id, best_index=False)
-            if anchor is not None:
-                self._next = (gpu.gpu_id + 1) % n
-                return (gpu.gpu_id, anchor)
-        return None
-
-
-class BestFitBestIndex(Scheduler):
-    """MIG-aware bin packing: GPU minimizing post-allocation free slices."""
-
-    name = "bf-bi"
-
-    def select(self, cluster, profile_id):
-        best: Optional[Tuple[int, int, int]] = None  # (free_after, gpu_id, anchor)
-        for gpu in cluster.gpus:
-            anchor = _first_anchor(gpu, profile_id, best_index=True)
-            if anchor is None:
-                continue
-            mem = gpu.model.profiles[profile_id].mem
-            key = (gpu.free_slices - mem, gpu.gpu_id)
-            if best is None or key < best[:2]:
-                best = (key[0], key[1], anchor)
-        return None if best is None else (best[1], best[2])
-
-
-class WorstFitBestIndex(Scheduler):
-    """MIG-aware load balancing: GPU maximizing post-allocation free slices."""
-
-    name = "wf-bi"
-
-    def select(self, cluster, profile_id):
-        best: Optional[Tuple[int, int, int]] = None  # (-free_after, gpu_id, anchor)
-        for gpu in cluster.gpus:
-            anchor = _first_anchor(gpu, profile_id, best_index=True)
-            if anchor is None:
-                continue
-            mem = gpu.model.profiles[profile_id].mem
-            key = (-(gpu.free_slices - mem), gpu.gpu_id)
-            if best is None or key < best[:2]:
-                best = (key[0], key[1], anchor)
-        return None if best is None else (best[1], best[2])
-
-
-class MFI(Scheduler):
-    """Minimum Fragmentation Increment (paper Algorithm 2).
-
-    Greedy: dry-run the requested profile at every feasible (GPU, anchor)
-    and commit the placement with the minimum fragmentation-score increment
-    ΔF = F⁽ⁱ⁾(m) − F(m).  Ties broken by (gpu_id, anchor) for determinism.
+    Candidates are every feasible ``(gpu, anchor)`` dry-run of the request
+    (the spec's feasibility filter); the winner minimizes the spec's key
+    tuple lexicographically, with ascending ``(gpu, anchor)`` as the
+    implicit final tie-break — exactly the order the batched lowering's
+    first-flat-index argmin produces.
     """
 
-    name = "mfi"
+    def __init__(self, spec: PolicySpec, metric: str = "blocked"):
+        super().__init__(metric)
+        self.spec = spec
+        self.name = spec.name
+        self._next = 0  # rotation cursor (used by the "rr-distance" key)
+
+    def reset(self) -> None:
+        self._next = 0
+
+    # -- candidate enumeration ----------------------------------------------
+    def _candidates(self, cluster: mig.ClusterState, profile_id: int):
+        """Feasible dry-runs as ``(gpu_ids, anchors, deltas)`` arrays.
+
+        ΔF is computed only when the spec's keys ask for it; the loop is
+        vectorized per model group exactly like the Pallas-kernel oracle
+        (:func:`mfi_candidates`).
+        """
+        if self.spec.requires_delta_f:
+            occ = cluster.occupancy_matrix()
+            gpu_ids, anchors, deltas = [], [], []
+            for model, rows in cluster.spec.model_groups():
+                g, a, d = mfi_candidates(
+                    occ[rows][:, : model.num_mem_slices],
+                    profile_id,
+                    self.metric,
+                    model,
+                )
+                gpu_ids.append(rows[g])  # local -> global GPU ids
+                anchors.append(a)
+                deltas.append(d)
+            gpu_ids = np.concatenate(gpu_ids)
+            anchors = np.concatenate(anchors)
+            deltas = np.concatenate(deltas)
+        else:
+            pairs = [
+                (g.gpu_id, a)
+                for g in cluster.gpus
+                for a in g.feasible_anchors(profile_id)
+            ]
+            gpu_ids = np.array([p[0] for p in pairs], dtype=np.int64)
+            anchors = np.array([p[1] for p in pairs], dtype=np.int64)
+            deltas = np.zeros(len(pairs))
+        return gpu_ids, anchors, deltas
+
+    def _key_column(self, key, cluster, profile_id, gpus, anchors, deltas):
+        base = key_base(key)
+        if base == "frag-delta":
+            col = deltas
+        elif base == "free-slices":
+            col = np.array(
+                [
+                    cluster.gpus[g].free_slices
+                    - cluster.gpus[g].model.profiles[profile_id].mem
+                    for g in gpus
+                ],
+                dtype=np.float64,
+            )
+        elif base == "gpu":
+            col = gpus.astype(np.float64)
+        elif base == "anchor":
+            col = anchors.astype(np.float64)
+        elif base == "rr-distance":
+            col = ((gpus - self._next) % cluster.num_gpus).astype(np.float64)
+        elif base == "model-group":
+            col = cluster.spec.model_index[gpus].astype(np.float64)
+        else:  # unreachable: PolicySpec validates the vocabulary
+            raise ValueError(f"unknown scoring key {key!r}")
+        return -col if key.startswith("-") else col
+
+    def _pick(self, cluster, profile_id, gpus, anchors, deltas) -> Placement:
+        cols = [
+            self._key_column(k, cluster, profile_id, gpus, anchors, deltas)
+            for k in self.spec.keys
+        ]
+        # np.lexsort: last key is primary; (gpu, anchor) is the implicit
+        # least-significant tie-break shared with the batched lowering
+        k = int(np.lexsort((anchors, gpus) + tuple(reversed(cols)))[0])
+        return (int(gpus[k]), int(anchors[k]))
 
     def select(self, cluster, profile_id):
-        occ = cluster.occupancy_matrix()  # (M, S)
-        gpu_ids, anchors, deltas = [], [], []
-        for model, rows in cluster.spec.model_groups():
-            g, a, d = mfi_candidates(
-                occ[rows][:, : model.num_mem_slices], profile_id, self.metric, model
-            )
-            gpu_ids.append(rows[g])  # local -> global GPU ids
-            anchors.append(a)
-            deltas.append(d)
-        gpu_ids = np.concatenate(gpu_ids)
-        if len(gpu_ids) == 0:
-            return None
-        anchors = np.concatenate(anchors)
-        deltas = np.concatenate(deltas)
-        k = int(np.lexsort((anchors, gpu_ids, deltas))[0])
-        return (int(gpu_ids[k]), int(anchors[k]))
+        spec = self.spec
+        sel: Optional[Placement] = None
+        if not spec.requires_delta_f and key_base(spec.keys[0]) in ("gpu", "rr-distance"):
+            # gpu-major primary key: the winner lives on the first GPU (in
+            # scan order) with any feasible anchor — short-circuit like the
+            # classic First-Fit / Round-Robin loops did
+            m = cluster.num_gpus
+            start = self._next if key_base(spec.keys[0]) == "rr-distance" else 0
+            order = range(m) if not spec.keys[0].startswith("-") else range(m - 1, -1, -1)
+            for i in order:
+                g = (start + i) % m
+                feas = cluster.gpus[g].feasible_anchors(profile_id)
+                if feas:
+                    gp = np.full(len(feas), g, dtype=np.int64)
+                    an = np.asarray(feas, dtype=np.int64)
+                    sel = self._pick(cluster, profile_id, gp, an, np.zeros(len(feas)))
+                    break
+        else:
+            gpus, anchors, deltas = self._candidates(cluster, profile_id)
+            if len(gpus):
+                sel = self._pick(cluster, profile_id, gpus, anchors, deltas)
+        if sel is not None and spec.stateful_cursor:
+            self._next = (sel[0] + 1) % cluster.num_gpus
+        return sel
 
 
 def mfi_candidates(
@@ -187,7 +204,7 @@ def mfi_candidates(
     return gpu_idx, anchors[anchor_idx], delta[gpu_idx, anchor_idx]
 
 
-class MFIDefrag(MFI):
+class MFIDefrag(SpecScheduler):
     """BEYOND-PAPER extension: MFI + opportunistic single-migration defrag.
 
     The paper excludes rescheduling ("we are going to consider rescheduling
@@ -197,12 +214,18 @@ class MFIDefrag(MFI):
     the request feasible, choosing the migration that minimises the final
     cluster fragmentation sum.  The caller performs the migration via the
     ``pending_migration`` attribute ((workload_id, gpu, anchor) or None).
+
+    Host engine only (the registry entry sets ``defrag=True``): the search
+    needs the host-side allocation table and mutates/rolls back occupancy.
     """
 
-    name = "mfi-defrag"
-
-    def __init__(self, metric: str = "blocked", max_candidates: int = 64):
-        super().__init__(metric)
+    def __init__(
+        self,
+        metric: str = "blocked",
+        max_candidates: int = 64,
+        spec: Optional[PolicySpec] = None,
+    ):
+        super().__init__(spec if spec is not None else resolve("mfi-defrag"), metric)
         self.max_candidates = max_candidates
         self.pending_migration = None
         self.migrations = 0
@@ -254,6 +277,49 @@ class MFIDefrag(MFI):
         return req_sel
 
 
+def compile_policy(spec: PolicySpec, metric: str = "blocked") -> Scheduler:
+    """Host-engine compiler: spec -> ready-to-run ``Scheduler``."""
+    if spec.defrag:
+        return MFIDefrag(metric=metric, spec=spec)
+    return SpecScheduler(spec, metric=metric)
+
+
+def make_scheduler(policy: PolicyLike, metric: str = "blocked") -> Scheduler:
+    """Compile a registered policy name (or an ad-hoc spec) for the host
+    engine.  Unknown names raise through the registry's single validation
+    path (:func:`repro.core.policy.resolve`)."""
+    return compile_policy(resolve(policy, engine="python"), metric=metric)
+
+
+# ---------------------------------------------------------------------------
+# Backward-compatible class aliases — thin spec bindings, no select loops.
+# ---------------------------------------------------------------------------
+
+
+def _spec_alias(policy_name: str, doc: str) -> type:
+    class _Alias(SpecScheduler):
+        name = policy_name
+
+        def __init__(self, metric: str = "blocked"):
+            super().__init__(resolve(policy_name), metric)
+
+    _Alias.__name__ = _Alias.__qualname__ = policy_name.replace("-", "_").upper()
+    _Alias.__doc__ = doc
+    return _Alias
+
+
+MFI = _spec_alias("mfi", "Minimum Fragmentation Increment (paper Algorithm 2).")
+FirstFit = _spec_alias("ff", "MIG-agnostic: first GPU with room, first index.")
+RoundRobin = _spec_alias("rr", "MIG-agnostic: rotate over GPUs, first index.")
+BestFitBestIndex = _spec_alias(
+    "bf-bi", "MIG-aware bin packing: minimize post-allocation free slices."
+)
+WorstFitBestIndex = _spec_alias(
+    "wf-bi", "MIG-aware load balancing: maximize post-allocation free slices."
+)
+
+#: registered host-engine policies (name -> compiling callable); kept for
+#: backward compatibility — `repro.core.policy.list_policies()` is the API.
 SCHEDULERS: Dict[str, type] = {
     "ff": FirstFit,
     "rr": RoundRobin,
@@ -262,11 +328,3 @@ SCHEDULERS: Dict[str, type] = {
     "mfi": MFI,
     "mfi-defrag": MFIDefrag,
 }
-
-
-def make_scheduler(name: str, metric: str = "blocked") -> Scheduler:
-    try:
-        cls = SCHEDULERS[name]
-    except KeyError:
-        raise ValueError(f"unknown scheduler {name!r}; options: {sorted(SCHEDULERS)}")
-    return cls(metric=metric)

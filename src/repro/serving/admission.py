@@ -14,6 +14,7 @@ import dataclasses
 from typing import Dict, Optional, Tuple
 
 from repro.core import mig
+from repro.core.policy import PolicyLike
 from repro.core.schedulers import Scheduler, make_scheduler
 
 # model HBM footprint (GiB) -> smallest sufficient MIG profile
@@ -48,17 +49,21 @@ class Placement:
 class AdmissionController:
     """Places serving workloads on the MIG cluster via a scheduling policy.
 
-    ``cluster_spec`` selects a (possibly mixed) fleet; the default is the
-    paper's homogeneous A100-80GB cluster of ``num_gpus`` GPUs.  Workloads
-    keep declaring canonical profile names — each GPU's device model
-    realizes the demand with its own placement table (an 80 GiB demand is
-    simply infeasible on every A100-40GB, for example).
+    ``policy`` is any registered policy name or an ad-hoc
+    :class:`~repro.core.policy.PolicySpec` — compiled for the host engine
+    through the policy registry, so custom registered policies drive
+    admission exactly like the built-ins.  ``cluster_spec`` selects a
+    (possibly mixed) fleet; the default is the paper's homogeneous
+    A100-80GB cluster of ``num_gpus`` GPUs.  Workloads keep declaring
+    canonical profile names — each GPU's device model realizes the demand
+    with its own placement table (an 80 GiB demand is simply infeasible on
+    every A100-40GB, for example).
     """
 
     def __init__(
         self,
         num_gpus: Optional[int] = None,
-        policy: str = "mfi",
+        policy: PolicyLike = "mfi",
         metric: str = "blocked",
         cluster_spec: Optional[mig.ClusterSpec] = None,
     ):

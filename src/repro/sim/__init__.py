@@ -18,3 +18,4 @@ from repro.sim.distributions import DISTRIBUTIONS, sample_profiles  # noqa: F401
 from repro.sim.simulator import SimConfig, SimResult, run_simulation, run_many  # noqa: F401
 from repro.sim.batched import POLICIES as BATCHED_POLICIES  # noqa: F401
 from repro.sim.batched import policy_select, run_batched  # noqa: F401
+from repro.core.policy import PolicySpec, list_policies, register_policy  # noqa: F401

@@ -53,23 +53,27 @@ Replica state (fixed-capacity struct-of-arrays pytree)
       arrivals), so inserts never collide; row ``K + 1`` is a write-only
       trash row for padding lanes.
 
-Policies — **MFI, FF, BF-BI, WF-BI and RR as pure-``jnp`` selection rules**
-over the same feasibility/ΔF tensors :func:`repro.core.cluster.mfi_select`
-computes (MFI: argmin ΔF with (gpu, anchor) tie-break; FF: first feasible;
-BF-BI/WF-BI: argmin/argmax post-allocation free slices with best-index
-anchors; RR: first feasible GPU in cursor rotation), selected by a static
-``policy`` argument.  Acceptance, utilization, active-GPU and
-fragmentation-severity metrics accumulate inside the scan;
-:func:`run_batched` returns the same aggregate dict as
-:func:`repro.sim.simulator.run_many`.
+Policies are **compiled from declarative**
+:class:`repro.core.policy.PolicySpec` **registry entries** — the same specs
+the host engine interprets (:mod:`repro.core.schedulers`), so the two
+engines cannot drift by construction.  :func:`_lower_select` lowers a
+spec's ordered lexicographic key list to a masked refinement over the
+``(M, A)`` feasibility tensor (each key narrows the candidate mask to its
+minimizers; the first surviving flat index supplies the implicit
+``(gpu, anchor)`` tie-break), with the ΔF table computed only for specs
+whose keys ask for it.  The spec itself is the static jit argument, so any
+newly registered batched-capable policy runs without touching this module.
+Acceptance, utilization, active-GPU and fragmentation-severity metrics
+accumulate inside the scan; :func:`run_batched` returns the same aggregate
+dict as :func:`repro.sim.simulator.run_many`.
 
 Parity guarantees vs the Python reference (``tests/test_batched_sim.py``,
 ``tests/test_heterogeneous.py``):
 
-* single-step decisions of all five policies match their
-  ``Scheduler.select`` counterparts *exactly* (including rejects and
-  tie-breaks — every score involved is integer-valued, hence exact in
-  float32), on homogeneous and mixed specs;
+* single-step decisions of every batched-capable registered policy match
+  their host-compiled ``Scheduler.select`` counterparts *exactly*
+  (including rejects and tie-breaks — every scoring-key value is
+  integer-valued, hence exact in float32), on homogeneous and mixed specs;
 * whole-run acceptance rates agree within Monte-Carlo tolerance (the two
   engines consume their RNG streams differently, so trajectories are
   statistically — not bitwise — identical); driving the Python schedulers
@@ -94,10 +98,19 @@ import numpy as np
 
 from repro.core import cluster as jcluster
 from repro.core import mig
+from repro.core.policy import (
+    PolicyLike,
+    PolicySpec,
+    key_base,
+    list_policies,
+    resolve,
+)
 from repro.sim import distributions
 from repro.sim.simulator import SAMPLE_EVERY, SimConfig, steady_params
 
-POLICIES = ("mfi", "ff", "bf-bi", "wf-bi", "rr")
+#: batched-capable registered policies at import time (back-compat alias;
+#: `repro.core.policy.list_policies(engine="batched")` is the live view)
+POLICIES = list_policies(engine="batched")
 
 _BIG = jnp.float32(1e9)
 
@@ -251,64 +264,60 @@ def make_frag_fn(
 
 
 # ---------------------------------------------------------------------------
-# Policies as pure-jnp selection rules over the feasibility/ΔF tensors
+# PolicySpec lowering: lexicographic keys -> masked refinement argmin
 # ---------------------------------------------------------------------------
 
 
-def _select_mfi(feasible, free, f, mem_g, delta, cursor):
-    """Argmin ΔF over all feasible (GPU, anchor); ties (gpu, anchor) lex."""
-    flat = jnp.where(feasible, delta, _BIG).reshape(-1)
-    k = jnp.argmin(flat)
-    a = feasible.shape[1]
-    return k // a, k % a, flat[k] < _BIG
+def _key_tensor(base_key, feasible, free, mem_g, delta, anchors_g, cursor, midx):
+    """One scoring key as an (M, A)-broadcastable float32 tensor.
+
+    All key values are integer-valued (ΔF included — see
+    :func:`_delta_from_base`), hence exact in float32: the refinement's
+    equality comparisons are exact and the lowering matches the host
+    interpreter bit-for-bit.
+    """
+    m, a = feasible.shape
+    if base_key == "frag-delta":
+        return delta  # (M, A)
+    if base_key == "free-slices":
+        return (free.astype(jnp.float32) - mem_g)[:, None]  # (M, 1)
+    if base_key == "gpu":
+        return jnp.arange(m, dtype=jnp.float32)[:, None]
+    if base_key == "anchor":
+        # real anchor VALUES (``profile_anchors[midx, pid]``), not padded
+        # column indexes: on mixed fleets the index<->value mapping differs
+        # per model, and the host interpreter compares values — padded
+        # (-1) columns are masked infeasible so they never win
+        return anchors_g.astype(jnp.float32)  # (M, A)
+    if base_key == "rr-distance":
+        prio = jnp.mod(jnp.arange(m, dtype=jnp.int32) - cursor, m)
+        return prio.astype(jnp.float32)[:, None]
+    if base_key == "model-group":
+        return midx.astype(jnp.float32)[:, None]
+    raise ValueError(f"unknown scoring key {base_key!r}")  # unreachable
 
 
-def _select_ff(feasible, free, f, mem_g, delta, cursor):
-    """First feasible (GPU, anchor) in ascending (gpu, anchor) order."""
-    flat = feasible.reshape(-1)
+def _lower_select(spec, feasible, free, mem_g, delta, anchors_g, cursor, midx):
+    """Compile a spec's key list against the (M, A) feasibility tensor.
+
+    Each key narrows the candidate mask to its minimizers (``-`` prefix
+    negates); the first surviving flat index supplies the implicit
+    ascending ``(gpu, anchor)`` tie-break — the same total order the host
+    interpreter's lexsort produces.  Returns ``(gpu, aidx, ok)``.
+    """
+    mask = feasible
+    for key in spec.keys:
+        val = _key_tensor(
+            key_base(key), feasible, free, mem_g, delta, anchors_g, cursor, midx
+        )
+        if key.startswith("-"):
+            val = -val
+        masked = jnp.where(mask, val, _BIG)
+        mask = mask & (masked == masked.min())
+    flat = mask.reshape(-1)
     k = jnp.argmax(flat)
     a = feasible.shape[1]
     return k // a, k % a, flat[k]
-
-
-def _best_anchor(feasible_row):
-    """Highest feasible anchor index (the Best-Index rule)."""
-    a = feasible_row.shape[0]
-    return a - 1 - jnp.argmax(feasible_row[::-1])
-
-
-def _select_bf(feasible, free, f, mem_g, delta, cursor):
-    """Fewest post-allocation free slices, ties by gpu id; best index."""
-    any_feas = feasible.any(axis=1)
-    score = free.astype(jnp.float32) - mem_g  # free slices after placement
-    g = jnp.argmin(jnp.where(any_feas, score, _BIG))
-    return g, _best_anchor(feasible[g]), any_feas.any()
-
-
-def _select_wf(feasible, free, f, mem_g, delta, cursor):
-    """Most post-allocation free slices, ties by gpu id; best index."""
-    any_feas = feasible.any(axis=1)
-    score = -(free.astype(jnp.float32) - mem_g)
-    g = jnp.argmin(jnp.where(any_feas, score, _BIG))
-    return g, _best_anchor(feasible[g]), any_feas.any()
-
-
-def _select_rr(feasible, free, f, mem_g, delta, cursor):
-    """First feasible GPU in the cursor rotation; first available index."""
-    m = feasible.shape[0]
-    any_feas = feasible.any(axis=1)
-    prio = jnp.mod(jnp.arange(m, dtype=jnp.int32) - cursor, m)  # rotation rank
-    g = jnp.argmin(jnp.where(any_feas, prio.astype(jnp.float32), _BIG))
-    return g, jnp.argmax(feasible[g]), any_feas.any()
-
-
-_SELECT = {
-    "mfi": _select_mfi,
-    "ff": _select_ff,
-    "bf-bi": _select_bf,
-    "wf-bi": _select_wf,
-    "rr": _select_rr,
-}
 
 
 def _feasibility(base: jax.Array, rows: jax.Array, valid: jax.Array) -> jax.Array:
@@ -321,38 +330,42 @@ def _feasibility(base: jax.Array, rows: jax.Array, valid: jax.Array) -> jax.Arra
     return (overlap == 0) & valid
 
 
-def _select(policy, base, free, f, metric, tables, midx, vg, pid, cursor):
+def _select(spec, base, free, f, metric, tables, midx, vg, pid, cursor):
     """Shared decision path: returns (gpu, aidx, ok) for one request."""
     rows = tables.profile_rows[midx, pid]  # (M, A)
     valid = tables.profile_valid[midx, pid]  # (M, A)
     mem_g = tables.profile_mem[midx, pid]  # (M,)
+    anchors_g = tables.profile_anchors[midx, pid]  # (M, A), -1 where padded
     feasible = _feasibility(base, rows, valid)
-    if policy == "mfi":  # only MFI needs the ΔF table
+    if spec.requires_delta_f:  # ΔF table only for specs whose keys use it
         delta = _delta_from_base(
             base, free, metric, vg,
             tables.maskwin[midx, pid], tables.maskpos[midx, pid], mem_g, f,
         )
     else:
         delta = None
-    return _SELECT[policy](feasible, free, f, mem_g, delta, cursor)
+    return _lower_select(spec, feasible, free, mem_g, delta, anchors_g, cursor, midx)
 
 
 def policy_select(
     occ: jax.Array,
     profile_id: jax.Array,
-    policy: str,
+    policy: PolicyLike,
     metric: str = "blocked",
     spec: Optional[mig.ClusterSpec] = None,
     cursor: int = 0,
 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """One placement decision on a raw occupancy: ``(gpu, anchor, accepted)``.
 
-    Runs the same selection rule as the scan step (via the derived
-    ``base``/``free`` state) and exactly matches the corresponding Python
-    ``Scheduler.select`` — including rejects — for all :data:`POLICIES`.
-    ``spec`` defaults to a homogeneous A100-80GB fleet of ``occ.shape[0]``
-    GPUs; ``cursor`` is RR's rotation start (``RoundRobin._next``).
+    Lowers ``policy`` (a registered name or an ad-hoc
+    :class:`~repro.core.policy.PolicySpec`) exactly like the scan step (via
+    the derived ``base``/``free`` state) and matches the corresponding host
+    ``Scheduler.select`` — including rejects — for every batched-capable
+    registered policy.  ``spec`` defaults to a homogeneous A100-80GB fleet
+    of ``occ.shape[0]`` GPUs; ``cursor`` is the rotation start of stateful
+    policies (``SpecScheduler._next``).
     """
+    pspec = resolve(policy, engine="batched")
     spec = spec if spec is not None else _default_spec(int(occ.shape[0]))
     tables = spec_tables(spec)
     midx = jnp.asarray(spec.model_index)
@@ -362,7 +375,7 @@ def policy_select(
     vg = tables.V[midx]
     f = _frag_from_base(base, free, metric, vg)
     gpu, aidx, ok = _select(
-        policy, base, free, f, metric, tables, midx,
+        pspec, base, free, f, metric, tables, midx,
         vg, profile_id, jnp.int32(cursor),
     )
     anchor = jnp.where(ok, tables.profile_anchors[midx[gpu], profile_id, aidx], -1)
@@ -444,7 +457,7 @@ def _init_state(
     )
 
 
-def _event_step(st: ReplicaState, x, *, policy, metric, frag_fn, tables, midx, vg):
+def _event_step(st: ReplicaState, x, *, spec, metric, frag_fn, tables, midx, vg):
     pid, exp_row, exp_col, drain_row, new_slot = x
 
     # 1. slot-boundary metrics (state == end of slot t-1); reduced host-side
@@ -475,7 +488,7 @@ def _event_step(st: ReplicaState, x, *, policy, metric, frag_fn, tables, midx, v
     valid = pid >= 0
     pid_c = jnp.maximum(pid, 0)
     gpu, aidx, ok = _select(
-        policy, base, free, f, metric, tables, midx, vg, pid_c, st.rr
+        spec, base, free, f, metric, tables, midx, vg, pid_c, st.rr
     )
     ok = ok & valid
 
@@ -495,7 +508,7 @@ def _event_step(st: ReplicaState, x, *, policy, metric, frag_fn, tables, midx, v
         )[0]
     )
     rr = st.rr
-    if policy == "rr":  # advance the cursor past the chosen GPU on accept
+    if spec.stateful_cursor:  # advance the cursor past the chosen GPU on accept
         rr = jnp.where(ok, (gpu_c + 1) % midx.shape[0], rr).astype(jnp.int32)
     ring_gpu = st.ring_gpu.at[exp_row, exp_col].set(
         jnp.where(ok, gpu_c, st.ring_gpu[exp_row, exp_col])
@@ -527,7 +540,7 @@ def _event_step(st: ReplicaState, x, *, policy, metric, frag_fn, tables, midx, v
 def _simulate(
     events: EventStream,  # each field (E_max, R) — events are the scanned axis
     *,
-    policy: str,
+    policy: PolicyLike,  # registered name or (hashable, static) PolicySpec
     metric: str,
     num_gpus: int,
     ring_rows: int,
@@ -538,10 +551,11 @@ def _simulate(
     tables: Optional[SpecTables] = None,
 ) -> Tuple[ReplicaState, EventTrace]:
     runs = events.pid.shape[1]
+    pspec = resolve(policy, engine="batched")
     if tables is None:  # homogeneous A100-80GB default
-        spec = _default_spec(num_gpus)
-        tables = spec_tables(spec)
-        midx = jnp.asarray(spec.model_index)
+        cspec = _default_spec(num_gpus)
+        tables = spec_tables(cspec)
+        midx = jnp.asarray(cspec.model_index)
     frag_fn = (
         make_frag_fn(metric, True, kernel_model or mig.A100_80GB)
         if use_kernel
@@ -550,7 +564,7 @@ def _simulate(
     vg = tables.V[midx]  # (M, N) per-GPU window sizes, gathered once
     step = jax.vmap(
         functools.partial(
-            _event_step, policy=policy, metric=metric, frag_fn=frag_fn,
+            _event_step, spec=pspec, metric=metric, frag_fn=frag_fn,
             tables=tables, midx=midx, vg=vg,
         ),
         in_axes=(0, 0),
@@ -655,7 +669,7 @@ def presample_arrivals(
 
 
 def run_batched(
-    policy: str,
+    policy: PolicyLike,
     cfg: SimConfig,
     runs: int = 64,
     use_kernel: bool | None = None,
@@ -663,13 +677,14 @@ def run_batched(
     """Average ``runs`` replicas in one device program.
 
     Drop-in for :func:`repro.sim.simulator.run_many` on the steady protocol
-    (same aggregate keys); ``policy`` must be one of :data:`POLICIES`.
-    ``use_kernel`` routes fragmentation-severity sampling through the
-    Pallas ``fragscore`` kernel (default: only on TPU; homogeneous specs
-    only — the kernel bakes in one model's placement table).
+    (same aggregate keys); ``policy`` is any batched-capable registered
+    policy name or an ad-hoc :class:`~repro.core.policy.PolicySpec`
+    (validated through the registry's single path, like every other entry
+    point).  ``use_kernel`` routes fragmentation-severity sampling through
+    the Pallas ``fragscore`` kernel (default: only on TPU; homogeneous
+    specs only — the kernel bakes in one model's placement table).
     """
-    if policy not in POLICIES:
-        raise ValueError(f"unknown batched policy {policy!r}; options {POLICIES}")
+    policy = resolve(policy, engine="batched")
     if cfg.protocol != "steady":
         raise ValueError("run_batched implements the steady protocol only")
     spec = cfg.spec()

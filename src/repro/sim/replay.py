@@ -31,6 +31,7 @@ from typing import Optional, Tuple
 import numpy as np
 
 from repro.core import mig
+from repro.core.policy import PolicyLike
 from repro.core.schedulers import make_scheduler
 from repro.sim.batched import EventMeta, EventStream, EventTrace
 
@@ -147,20 +148,23 @@ def drain_all(
 def host_decisions(
     events: EventStream,
     meta: EventMeta,
-    policy: str,
+    policy: PolicyLike,
     num_gpus: int,
     metric: str = "blocked",
     spec: Optional[mig.ClusterSpec] = None,
 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Drive the *Python* scheduler over a presampled event stream.
 
-    Returns ``(ok, gpu, anchor)`` arrays shaped like the stream
-    (``(E_max, R)``): the reference decision for every arrival, produced by
-    :class:`repro.core.schedulers` on a :class:`repro.core.mig.ClusterState`
-    with the same arrivals, durations and release schedule the batched
-    engine consumed.  Since single-step selection is exact-parity, the
-    device trace must agree element-for-element (``ok`` everywhere; ``gpu``
-    and ``anchor`` wherever accepted).
+    ``policy`` is any registered policy name or ad-hoc
+    :class:`~repro.core.policy.PolicySpec` (compiled per replica through
+    the registry).  Returns ``(ok, gpu, anchor)`` arrays shaped like the
+    stream (``(E_max, R)``): the reference decision for every arrival,
+    produced by the host-compiled scheduler on a
+    :class:`repro.core.mig.ClusterState` with the same arrivals, durations
+    and release schedule the batched engine consumed.  Since single-step
+    selection is exact-parity, the device trace must agree
+    element-for-element (``ok`` everywhere; ``gpu`` and ``anchor`` wherever
+    accepted).
     """
     spec = _spec_or_default(spec, num_gpus)
     e_max, runs = np.asarray(events.pid).shape

@@ -32,6 +32,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import fragmentation, mig
+from repro.core.policy import PolicyLike
 from repro.core.schedulers import Scheduler, make_scheduler
 from repro.sim import distributions
 
@@ -251,8 +252,13 @@ def _run_cumulative(scheduler: Scheduler, cfg: SimConfig, seed: int) -> SimResul
     )
 
 
-def run_many(scheduler_name: str, cfg: SimConfig, runs: int = 100) -> Dict[str, float]:
-    """Average ``runs`` independent simulations (paper uses 500)."""
+def run_many(scheduler_name: PolicyLike, cfg: SimConfig, runs: int = 100) -> Dict[str, float]:
+    """Average ``runs`` independent simulations (paper uses 500).
+
+    ``scheduler_name`` is any registered policy name or an ad-hoc
+    :class:`~repro.core.policy.PolicySpec`; each run compiles a fresh host
+    scheduler through the registry (stateful cursors start at 0).
+    """
     keys = ("acceptance_rate", "allocated_workloads", "active_gpus", "utilization", "frag_severity")
     acc = {k: 0.0 for k in keys}
     rej = np.zeros(mig.NUM_PROFILES)

@@ -2,11 +2,17 @@
 
 Two layers of guarantees (see ``docs/SIMULATOR.md``):
 
-* **exact** — single-step placement decisions of all four JAX policies
-  match their Python ``Scheduler.select`` counterparts on arbitrary
-  occupancy matrices (including full-cluster rejects);
+* **exact** — single-step placement decisions of every batched-capable
+  registered policy match their host-compiled ``Scheduler.select``
+  counterparts on arbitrary occupancy matrices (including full-cluster
+  rejects);
 * **statistical** — whole-run aggregates agree within Monte-Carlo
   tolerance (the engines consume their RNG streams differently).
+
+Parametrization is **registry-driven** (``list_policies(engine="batched")``
+— both compilers consume the same ``PolicySpec``), so registering a new
+policy extends this coverage automatically; see ``test_policy_api.py`` for
+the in-test custom-registration demonstration.
 
 Plus deterministic trajectory-invariant checks via the host replay
 (:mod:`repro.sim.replay`); the hypothesis-driven variants live in
@@ -20,18 +26,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import mig, schedulers
+from repro.core.policy import list_policies
+from repro.core.schedulers import make_scheduler
 from repro.sim import SimConfig, run_many
 from repro.sim import batched, replay
 
 PID = {name: i for i, name in enumerate(mig.PROFILE_NAMES)}
 
-PY_SCHEDULERS = {
-    "mfi": schedulers.MFI,
-    "ff": schedulers.FirstFit,
-    "bf-bi": schedulers.BestFitBestIndex,
-    "wf-bi": schedulers.WorstFitBestIndex,
-    "rr": schedulers.RoundRobin,  # fresh cursor == policy_select cursor=0
-}
+#: every registered batched-capable policy, compiled for the host engine
+#: through the same registry the batched lowering reads
+BATCHED_POLICIES = list_policies(engine="batched")
 
 
 def _random_cluster(rng, m):
@@ -61,8 +65,8 @@ class TestSingleStepParity:
             cl = _random_cluster(rng, m)
             occ = cl.occupancy_matrix()
             pid = int(rng.integers(0, mig.NUM_PROFILES))
-            for name, cls in PY_SCHEDULERS.items():
-                ref = cls().select(cl, pid)
+            for name in BATCHED_POLICIES:
+                ref = make_scheduler(name).select(cl, pid)
                 g, a, ok = batched.policy_select(
                     jnp.asarray(occ), jnp.int32(pid), name
                 )
@@ -71,21 +75,21 @@ class TestSingleStepParity:
                     f"{name}: pid={pid} python={ref} batched={got}\n{occ}"
                 )
                 checked += 1
-        assert checked >= 200 * len(PY_SCHEDULERS)
+        assert checked >= 200 * len(BATCHED_POLICIES)
 
-    @pytest.mark.parametrize("policy", batched.POLICIES)
+    @pytest.mark.parametrize("policy", BATCHED_POLICIES)
     def test_full_cluster_rejects(self, policy):
         occ = jnp.ones((3, mig.NUM_MEM_SLICES), jnp.int32)
         for pid in range(mig.NUM_PROFILES):
             g, a, ok = batched.policy_select(occ, jnp.int32(pid), policy)
             assert not bool(ok) and int(g) == -1 and int(a) == -1
 
-    @pytest.mark.parametrize("policy", batched.POLICIES)
+    @pytest.mark.parametrize("policy", BATCHED_POLICIES)
     def test_empty_cluster_accepts_everything(self, policy):
         occ = jnp.zeros((3, mig.NUM_MEM_SLICES), jnp.int32)
         for pid in range(mig.NUM_PROFILES):
             cl = mig.ClusterState(3)
-            ref = PY_SCHEDULERS[policy]().select(cl, pid)
+            ref = make_scheduler(policy).select(cl, pid)
             g, a, ok = batched.policy_select(occ, jnp.int32(pid), policy)
             assert bool(ok) and (int(g), int(a)) == ref
 
@@ -95,7 +99,7 @@ class TestSingleStepParity:
             cl = _random_cluster(rng, int(rng.integers(1, 8)))
             occ = cl.occupancy_matrix()
             pid = int(rng.integers(0, mig.NUM_PROFILES))
-            ref = schedulers.MFI(metric="partial").select(cl, pid)
+            ref = make_scheduler("mfi", metric="partial").select(cl, pid)
             g, a, ok = batched.policy_select(
                 jnp.asarray(occ), jnp.int32(pid), "mfi", metric="partial"
             )
@@ -109,7 +113,7 @@ class TestAggregateParity:
     RUNS = 24
 
     @pytest.mark.slow
-    @pytest.mark.parametrize("policy", batched.POLICIES)
+    @pytest.mark.parametrize("policy", BATCHED_POLICIES)
     def test_acceptance_rate_m8(self, policy):
         cfg = SimConfig(num_gpus=8, offered_load=0.85, seed=0)
         rb = batched.run_batched(policy, cfg, runs=self.RUNS)
@@ -140,7 +144,7 @@ class TestTrajectoryInvariants:
     """Deterministic replay checks; hypothesis variants in
     test_batched_invariants.py."""
 
-    @pytest.mark.parametrize("policy", batched.POLICIES)
+    @pytest.mark.parametrize("policy", BATCHED_POLICIES)
     def test_replay_validates_and_matches_final_state(self, policy):
         cfg = SimConfig(num_gpus=4, offered_load=1.1, seed=3)
         events, meta, rr, rc = batched.presample_arrivals(cfg, runs=3)
@@ -184,7 +188,15 @@ class TestTrajectoryInvariants:
 
 class TestAPI:
     def test_unknown_policy_raises(self):
-        with pytest.raises(ValueError, match="unknown batched policy"):
+        # registry's single validation path: unknown names list every
+        # registered policy with its engine support...
+        with pytest.raises(ValueError, match=r"unknown policy 'nope'.*mfi \(python\+batched\)"):
+            batched.run_batched("nope", SimConfig(num_gpus=2), runs=1)
+        # ...and host-only policies name the engines that do support them
+        with pytest.raises(
+            ValueError,
+            match=r"'mfi-defrag' is not supported by the 'batched' engine",
+        ):
             batched.run_batched("mfi-defrag", SimConfig(num_gpus=2), runs=1)
 
     def test_rr_cursor_advances_like_python(self):

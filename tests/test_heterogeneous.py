@@ -21,19 +21,26 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fragmentation, mig, schedulers
+from repro.core.policy import list_policies
 from repro.sim import SimConfig, run_many, run_simulation
 from repro.sim import batched, replay
 from repro.core.schedulers import make_scheduler
 
 MIXED = mig.ClusterSpec(((mig.A100_80GB, 3), (mig.A100_40GB, 3)))
 
-PY_SCHEDULERS = {
-    "mfi": schedulers.MFI,
-    "ff": schedulers.FirstFit,
-    "bf-bi": schedulers.BestFitBestIndex,
-    "wf-bi": schedulers.WorstFitBestIndex,
-    "rr": schedulers.RoundRobin,
-}
+#: four distinct models (both A100 SKUs, both H100 SKUs) — the registry's
+#: stacked-table path at K=4, matching the benchmarks' `--cluster mixed`
+FOUR_MODEL = mig.ClusterSpec(
+    (
+        (mig.A100_80GB, 2),
+        (mig.A100_40GB, 2),
+        (mig.H100_96GB, 2),
+        (mig.H100_80GB, 2),
+    )
+)
+
+#: registry-driven: every batched-capable policy gets parity coverage here
+BATCHED_POLICIES = list_policies(engine="batched")
 
 
 def _sim(policy, cfg, spec, runs):
@@ -66,7 +73,7 @@ class TestDeviceModels:
             mig.ClusterSpec.parse("v100:4")
 
     def test_tables_in_bounds(self):
-        for model in (mig.A100_80GB, mig.A100_40GB, mig.H100_96GB):
+        for model in (mig.A100_80GB, mig.A100_40GB, mig.H100_96GB, mig.H100_80GB):
             for prof in model.profiles:
                 for a in prof.anchors:
                     assert a + prof.mem <= model.num_mem_slices
@@ -137,7 +144,7 @@ class TestHomogeneousBitForBit:
         for _ in range(25):
             occ = (rng.random((4, 8)) < 0.4).astype(np.int32)
             pid = int(rng.integers(0, mig.NUM_PROFILES))
-            for policy in batched.POLICIES:
+            for policy in BATCHED_POLICIES:
                 legacy = batched.policy_select(jnp.asarray(occ), jnp.int32(pid), policy)
                 spec_d = batched.policy_select(
                     jnp.asarray(occ), jnp.int32(pid), policy, spec=spec
@@ -163,17 +170,17 @@ class TestMixedParity:
                             wid += 1
             occ = cl.occupancy_matrix()
             pid = int(rng.integers(0, mig.NUM_PROFILES))
-            for name, cls in PY_SCHEDULERS.items():
-                ref = cls().select(cl, pid)
+            for name in BATCHED_POLICIES:
+                ref = make_scheduler(name).select(cl, pid)
                 g, a, ok = batched.policy_select(
                     jnp.asarray(occ), jnp.int32(pid), name, spec=MIXED
                 )
                 got = (int(g), int(a)) if bool(ok) else None
                 assert got == ref, f"{name}: pid={pid} python={ref} batched={got}"
                 checked += 1
-        assert checked >= 50 * len(PY_SCHEDULERS)
+        assert checked >= 50 * len(BATCHED_POLICIES)
 
-    @pytest.mark.parametrize("policy", ("mfi", "ff", "rr"))
+    @pytest.mark.parametrize("policy", BATCHED_POLICIES)
     def test_same_stream_acceptance_counts_match(self, policy):
         """Exact per-seed agreement: the Python schedulers driven over the
         batched engine's own event stream accept the same arrivals."""
@@ -191,7 +198,7 @@ class TestMixedParity:
                 np.asarray(trace.gpu)[ok_dev], gpu_ref[ok_ref]
             )
 
-    @pytest.mark.parametrize("policy", batched.POLICIES)
+    @pytest.mark.parametrize("policy", BATCHED_POLICIES)
     def test_replay_invariants_on_mixed_spec(self, policy):
         cfg = SimConfig(cluster_spec=MIXED, offered_load=1.1, seed=5)
         events, meta, trace, final = _sim(policy, cfg, MIXED, runs=2)
@@ -263,3 +270,39 @@ class TestMixedBehaviour:
         rp = run_many("mfi", cfg, runs=2)
         assert 0.0 < rb["acceptance_rate"] <= 1.0
         assert 0.0 < rp["acceptance_rate"] <= 1.0
+
+
+class TestFourModelSpec:
+    """H100-80GB + the four-model `--cluster mixed` scenario (K=4 tables)."""
+
+    def test_h100_80_registry_and_geometry(self):
+        spec = mig.ClusterSpec.parse("a100-80:30,a100-40:30,h100-96:20,h100-80:20")
+        assert spec.num_gpus == 100
+        assert [m.name for m in spec.models] == [
+            "a100-80gb", "a100-40gb", "h100-96gb", "h100-80gb",
+        ]
+        # same canonical placement geometry as the paper's device, distinct SKU
+        assert mig.H100_80GB.profiles == mig.PROFILES
+        assert mig.H100_80GB != mig.A100_80GB
+        np.testing.assert_array_equal(
+            mig.H100_80GB.placement_masks, mig.A100_80GB.placement_masks
+        )
+
+    @pytest.mark.parametrize("policy", BATCHED_POLICIES)
+    def test_same_stream_parity_and_invariants(self, policy):
+        """Every registered batched policy agrees with its host compilation
+        decision-for-decision on the four-model fleet, and the trajectory
+        passes the replay invariants against per-model tables."""
+        cfg = SimConfig(cluster_spec=FOUR_MODEL, offered_load=0.9, seed=4)
+        events, meta, trace, _ = _sim(policy, cfg, FOUR_MODEL, runs=2)
+        ok_ref, gpu_ref, _ = replay.host_decisions(
+            events, meta, policy, cfg.num_gpus, spec=FOUR_MODEL
+        )
+        ok_dev = np.asarray(trace.ok)
+        np.testing.assert_array_equal(ok_dev, ok_ref)
+        np.testing.assert_array_equal(np.asarray(trace.gpu)[ok_dev], gpu_ref[ok_ref])
+        replay.replay(events, meta, trace, cfg.num_gpus, spec=FOUR_MODEL)
+        _, drained = replay.drain_all(
+            events, meta, trace, cfg.num_gpus, spec=FOUR_MODEL
+        )
+        np.testing.assert_array_equal(drained, 0)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 
 from repro.core import cluster as jcluster
 from repro.core import fragmentation, mig, schedulers
+from repro.core.policy import list_policies
+from repro.core.schedulers import make_scheduler
 from repro.kernels.fragscore import ops as frag_ops
 
 
@@ -62,6 +64,67 @@ class TestMFIDeltaKernelProperties:
                 np.testing.assert_allclose(delta[j], expect, rtol=1e-6)
             else:
                 assert delta[j] > 1e29
+
+
+class TestPolicyFeasibilityProperties:
+    """Registry-wide invariant: for EVERY registered policy (defrag
+    included) driven over a random demand stream on a mixed fleet, a
+    selected placement is always feasible — a legal anchor of the chosen
+    GPU's own model table, never a double-booked slice, and never the
+    80 GiB class on an A100-40GB (which has no realization for it)."""
+
+    MIXED = mig.ClusterSpec(
+        ((mig.A100_80GB, 2), (mig.A100_40GB, 2), (mig.H100_96GB, 1))
+    )
+
+    @given(
+        policy=st.sampled_from(list_policies()),
+        stream=st.lists(
+            st.tuples(
+                st.integers(0, mig.NUM_PROFILES - 1),  # demand class
+                st.booleans(),  # release the oldest alive workload first?
+            ),
+            min_size=1,
+            max_size=40,
+        ),
+    )
+    @settings(max_examples=60, deadline=None)
+    def test_selected_placement_always_feasible(self, policy, stream):
+        cluster = mig.ClusterState(spec=self.MIXED)
+        sched = make_scheduler(policy)
+        alive = []
+        for step, (pid, release_first) in enumerate(stream):
+            if release_first and alive:
+                cluster.release(alive.pop(0))
+            sel = sched.select(cluster, pid)
+            if sel is None:
+                continue
+            g, a = sel
+            model = cluster.spec.model_of(g)
+            # never places a class on a model with no realization for it
+            # (e.g. the 80 GiB class on an A100-40GB)
+            assert model.placeable(pid), (policy, pid, model.name)
+            assert a in model.profiles[pid].anchors, (policy, pid, g, a)
+            # defrag policies may require their migration to commit first
+            mig_req = getattr(sched, "pending_migration", None)
+            if mig_req is not None:
+                vwid, vg, va = mig_req
+                vpid = next(
+                    gg.allocations[vwid].profile_id
+                    for gg in cluster.gpus
+                    if vwid in gg.allocations
+                )
+                assert cluster.spec.model_of(vg).placeable(vpid)
+                cluster.release(vwid)
+                cluster.allocate(vwid, vpid, vg, va)  # raises if infeasible
+            # never double-books: the window is fully free at commit time
+            prof = model.profiles[pid]
+            assert not cluster.gpus[g].occupancy[a : a + prof.mem].any(), (
+                policy, pid, g, a,
+            )
+            wid = 1000 + step
+            cluster.allocate(wid, pid, g, a)  # raises if illegal
+            alive.append(wid)
 
 
 class TestJaxSchedulerProperties:

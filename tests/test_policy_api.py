@@ -1,0 +1,292 @@
+"""Unified policy API tests: PolicySpec, registry, facade, and the
+register-once-run-everywhere guarantee.
+
+The tentpole property under test: a policy is *one* declarative
+:class:`repro.core.policy.PolicySpec`, and both engines compile it — the
+host interpreter (:mod:`repro.core.schedulers`) and the batched lowering
+(:mod:`repro.sim.batched`) cannot drift because they consume the same
+description.  ``assert_cross_engine_parity`` is the generic harness: any
+spec (built-in or freshly registered) must agree single-step on random
+occupancies AND decision-for-decision over a presampled event stream.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.core import mig
+from repro.core.policy import (
+    KEY_VOCABULARY,
+    PolicySpec,
+    get_policy,
+    list_policies,
+    policy_engines,
+    register_policy,
+    resolve,
+    unregister_policy,
+)
+from repro.core.schedulers import MFIDefrag, SpecScheduler, make_scheduler
+from repro.sim import SimConfig
+from repro.sim import batched, replay
+
+MIXED = mig.ClusterSpec(((mig.A100_80GB, 3), (mig.A100_40GB, 3)))
+
+
+def _random_cluster(rng, spec):
+    cl = mig.ClusterState(spec=spec)
+    density = rng.random()
+    wid = 0
+    for g in range(cl.num_gpus):
+        for pid in rng.permutation(mig.NUM_PROFILES):
+            if rng.random() < density:
+                anchors = cl.gpus[g].feasible_anchors(int(pid))
+                if anchors:
+                    cl.allocate(wid, int(pid), g, int(rng.choice(anchors)))
+                    wid += 1
+    return cl
+
+
+def assert_cross_engine_parity(policy, trials=40, seed=123):
+    """Generic parity harness: host compilation vs batched lowering.
+
+    1. single-step: decisions agree on random occupancies (homogeneous and
+       mixed specs, including rejects);
+    2. same-stream: driving the host scheduler over the batched engine's
+       own presampled event stream reproduces the device decision trace
+       element-for-element, and the trace passes the replay invariants.
+
+    Works for any batched-capable policy name or ad-hoc spec — this is what
+    "a newly registered policy gets parity coverage for free" means.
+    """
+    rng = np.random.default_rng(seed)
+    for spec in (mig.ClusterSpec.homogeneous(mig.A100_80GB, 4), MIXED):
+        for _ in range(trials):
+            cl = _random_cluster(rng, spec)
+            occ = cl.occupancy_matrix()
+            pid = int(rng.integers(0, mig.NUM_PROFILES))
+            ref = make_scheduler(policy).select(cl, pid)
+            g, a, ok = batched.policy_select(
+                jnp.asarray(occ), jnp.int32(pid), policy, spec=spec
+            )
+            got = (int(g), int(a)) if bool(ok) else None
+            assert got == ref, f"{policy}: pid={pid} host={ref} batched={got}\n{occ}"
+    cfg = SimConfig(cluster_spec=MIXED, offered_load=0.9, seed=seed)
+    events, meta, rr, rc = batched.presample_arrivals(cfg, runs=2)
+    _, trace = jax.device_get(
+        batched._simulate(
+            jax.tree.map(jnp.asarray, events),
+            policy=policy,
+            metric=cfg.metric,
+            num_gpus=cfg.num_gpus,
+            ring_rows=rr,
+            ring_cols=rc,
+            use_kernel=False,
+            midx=jnp.asarray(MIXED.model_index),
+            tables=batched.spec_tables(MIXED),
+        )
+    )
+    ok_ref, gpu_ref, _ = replay.host_decisions(
+        events, meta, policy, cfg.num_gpus, spec=MIXED
+    )
+    ok_dev = np.asarray(trace.ok)
+    np.testing.assert_array_equal(ok_dev, ok_ref)
+    np.testing.assert_array_equal(np.asarray(trace.gpu)[ok_dev], gpu_ref[ok_ref])
+    replay.replay(events, meta, trace, cfg.num_gpus, spec=MIXED)
+
+
+class TestPolicySpec:
+    def test_built_ins_registered_with_engine_support(self):
+        assert set(list_policies()) >= {
+            "mfi", "ff", "bf-bi", "wf-bi", "rr", "mfi-defrag",
+        }
+        for name in ("mfi", "ff", "bf-bi", "wf-bi", "rr"):
+            assert policy_engines(name) == ("python", "batched")
+        assert policy_engines("mfi-defrag") == ("python",)
+        assert "mfi-defrag" not in list_policies(engine="batched")
+
+    def test_derived_structure(self):
+        assert get_policy("mfi").requires_delta_f
+        assert not get_policy("ff").requires_delta_f
+        assert get_policy("rr").stateful_cursor
+        assert not get_policy("bf-bi").stateful_cursor
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="unknown scoring key"):
+            PolicySpec(name="bad", keys=("banana",))
+        with pytest.raises(ValueError, match="at least one scoring key"):
+            PolicySpec(name="bad", keys=())
+        with pytest.raises(ValueError, match="unknown feasibility"):
+            PolicySpec(name="bad", keys=("gpu",), feasibility="psychic")
+        # every vocabulary key is accepted, plain and negated
+        for key in KEY_VOCABULARY:
+            PolicySpec(name="ok", keys=(key,))
+            PolicySpec(name="ok", keys=(f"-{key}",))
+
+    def test_register_duplicate_and_unregister(self):
+        spec = PolicySpec(name="tmp-policy", keys=("gpu", "anchor"))
+        register_policy(spec)
+        try:
+            with pytest.raises(ValueError, match="already registered"):
+                register_policy(spec)
+            register_policy(spec, overwrite=True)  # explicit replace is fine
+            assert "tmp-policy" in list_policies()
+        finally:
+            unregister_policy("tmp-policy")
+        assert "tmp-policy" not in list_policies()
+
+
+class TestUnifiedErrors:
+    """One validation path: every entry point raises the same message."""
+
+    def test_unknown_policy_same_message_everywhere(self):
+        entry_points = (
+            lambda: make_scheduler("nope"),
+            lambda: api.make_policy("nope"),
+            lambda: api.simulate("nope", num_gpus=2, runs=1),
+            lambda: batched.run_batched("nope", SimConfig(num_gpus=2), runs=1),
+            lambda: batched.policy_select(
+                jnp.zeros((2, 8), jnp.int32), jnp.int32(0), "nope"
+            ),
+        )
+        messages = set()
+        for call in entry_points:
+            with pytest.raises(ValueError) as exc:
+                call()
+            messages.add(str(exc.value))
+        assert len(messages) == 1
+        (msg,) = messages
+        # helpful: names every registered policy with its engine support
+        assert "unknown policy 'nope'" in msg
+        for name in list_policies():
+            assert name in msg
+        assert "mfi-defrag (python)" in msg and "(python+batched)" in msg
+
+    def test_engine_mismatch_names_supported_engines(self):
+        for call in (
+            lambda: batched.run_batched("mfi-defrag", SimConfig(num_gpus=2), runs=1),
+            lambda: api.simulate("mfi-defrag", engine="batched", num_gpus=2, runs=1),
+        ):
+            with pytest.raises(ValueError, match=r"supports: python") as exc:
+                call()
+            assert "'mfi-defrag' is not supported by the 'batched' engine" in str(
+                exc.value
+            )
+
+    def test_unknown_engine(self):
+        with pytest.raises(ValueError, match="unknown engine"):
+            resolve("mfi", engine="quantum")
+        with pytest.raises(ValueError, match="unknown engine"):
+            list_policies(engine="quantum")
+
+
+class TestCompilers:
+    def test_make_scheduler_compiles_specs_and_names(self):
+        assert isinstance(make_scheduler("ff"), SpecScheduler)
+        assert isinstance(make_scheduler("mfi-defrag"), MFIDefrag)
+        ad_hoc = PolicySpec(name="inline", keys=("free-slices", "gpu", "anchor"))
+        sched = make_scheduler(ad_hoc)  # unregistered specs work too
+        assert sched.select(mig.ClusterState(2), 3) is not None
+
+    def test_stateful_cursor_reset(self):
+        sched = make_scheduler("rr")
+        cl = mig.ClusterState(3)
+        assert sched.select(cl, 5) == (0, 0)
+        cl.allocate(1, 5, 0, 0)
+        assert sched._next == 1
+        sched.reset()
+        assert sched._next == 0
+
+    def test_model_group_key_steers_mixed_fleet(self):
+        """The `model-group` key orders device generations: -model-group
+        prefers the later model group (the A100-40s here) when feasible."""
+        prefer_new = PolicySpec(
+            name="prefer-new", keys=("-model-group", "gpu", "anchor")
+        )
+        cl = mig.ClusterState(spec=MIXED)
+        sel = make_scheduler(prefer_new).select(cl, 5)  # 10 GiB demand
+        assert sel == (3, 0)  # first A100-40GB, not GPU 0
+        # the batched lowering agrees
+        g, a, ok = batched.policy_select(
+            jnp.asarray(cl.occupancy_matrix()), jnp.int32(5), prefer_new, spec=MIXED
+        )
+        assert bool(ok) and (int(g), int(a)) == sel
+        # but an 80 GiB demand must still land on an A100-80GB
+        sel80 = make_scheduler(prefer_new).select(cl, 0)
+        assert sel80 is not None and sel80[0] < 3
+
+
+class TestRegisterOnceRunEverywhere:
+    """Satellite #1's payoff: registering a policy is all it takes."""
+
+    CUSTOM = PolicySpec(
+        name="test-pack-left",
+        keys=("free-slices", "-gpu", "-anchor"),
+        description="best-fit from the highest GPU id down (test-only)",
+    )
+
+    def test_custom_policy_gets_parity_coverage_for_free(self):
+        register_policy(self.CUSTOM)
+        try:
+            assert "test-pack-left" in list_policies(engine="batched")
+            assert_cross_engine_parity("test-pack-left", trials=25)
+        finally:
+            unregister_policy("test-pack-left")
+
+    def test_anchor_key_compares_values_across_models(self):
+        """Regression: an `anchor` key NOT preceded by a GPU-unique key
+        compares anchors across GPUs of different models; the batched
+        lowering must score real anchor VALUES (per-model index<->value
+        mappings differ), exactly like the host interpreter."""
+        anchor_first = PolicySpec(name="test-anchor-first", keys=("anchor", "gpu"))
+        spec = mig.ClusterSpec(((mig.A100_80GB, 1), (mig.A100_40GB, 1)))
+        # pid 3 (2g.20gb demand): anchors (0,2,4) on A100-80, (0,4) on A100-40
+        # — anchor 4 is index 2 on the A100-80 but index 1 on the A100-40
+        occ = np.array(
+            [[1, 1, 1, 1, 0, 0, 1, 0], [1, 1, 1, 1, 0, 0, 0, 0]], np.int32
+        )
+        cl = mig.ClusterState(spec=spec)
+        cl.gpus[0].occupancy[:] = occ[0]
+        cl.gpus[1].occupancy[:] = occ[1]
+        ref = make_scheduler(anchor_first).select(cl, 3)
+        assert ref == (0, 4)  # min anchor value 4, gpu tie-break
+        g, a, ok = batched.policy_select(
+            jnp.asarray(occ), jnp.int32(3), anchor_first, spec=spec
+        )
+        assert bool(ok) and (int(g), int(a)) == ref
+        # and the full generic harness passes for the anchor-primary spec
+        assert_cross_engine_parity(anchor_first, trials=20)
+
+    def test_custom_policy_runs_through_both_facade_engines(self):
+        register_policy(self.CUSTOM)
+        try:
+            cfg = SimConfig(num_gpus=3, offered_load=0.8, seed=2)
+            rp = api.simulate("test-pack-left", cfg=cfg, engine="python", runs=2)
+            rb = api.simulate("test-pack-left", cfg=cfg, engine="batched", runs=2)
+            assert 0.0 < rp["acceptance_rate"] <= 1.0
+            assert 0.0 < rb["acceptance_rate"] <= 1.0
+            assert set(rp) == set(rb)
+        finally:
+            unregister_policy("test-pack-left")
+
+    @pytest.mark.parametrize("name", list_policies(engine="batched"))
+    def test_built_in_specs_pass_the_generic_harness(self, name):
+        assert_cross_engine_parity(name, trials=12, seed=7)
+
+
+class TestFacade:
+    def test_simulate_kwargs_build_config(self):
+        r = api.simulate("ff", num_gpus=2, offered_load=0.7, runs=2)
+        assert 0.0 < r["acceptance_rate"] <= 1.0
+
+    def test_simulate_rejects_cfg_plus_kwargs(self):
+        with pytest.raises(ValueError, match="not both"):
+            api.simulate("ff", cfg=SimConfig(num_gpus=2), num_gpus=4)
+
+    def test_engine_results_statistically_close(self):
+        cfg = SimConfig(num_gpus=4, offered_load=0.85, seed=0)
+        rp = api.simulate("mfi", cfg=cfg, engine="python", runs=6)
+        rb = api.simulate("mfi", cfg=cfg, engine="batched", runs=6)
+        assert abs(rp["acceptance_rate"] - rb["acceptance_rate"]) < 0.15
