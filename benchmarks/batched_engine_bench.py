@@ -15,14 +15,16 @@ workflow artifact.  Smoke mode records the numbers without enforcing the
 10x bar (tiny clusters under-utilize the batched engine by design), and
 additionally sweeps **every registered batched-capable policy**
 (``repro.core.policy.list_policies(engine="batched")``) for warm per-policy
-throughput — so the uploaded artifact tracks the perf trajectory of each
-policy, including ones registered after this benchmark was written
-(``--sweep``/``--no-sweep`` overrides).
+throughput — ``mfi-defrag``'s migrate stage included — plus one
+**cumulative-protocol** run, so the uploaded artifact tracks the perf
+trajectory of every engine configuration, including policies registered
+after this benchmark was written (``--sweep``/``--no-sweep`` overrides).
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import time
 
@@ -44,6 +46,20 @@ def sweep_policies(cfg: SimConfig, runs: int):
             "acceptance_rate": float(r["acceptance_rate"]),
         }
     return out
+
+
+def bench_cumulative(cfg: SimConfig, runs: int):
+    """Warm throughput of one cumulative-protocol batched run (mfi)."""
+    ccfg = dataclasses.replace(cfg, protocol="cumulative")
+    run_batched("mfi", ccfg, runs=runs)  # compile + warm the cache
+    t0 = time.perf_counter()
+    r = run_batched("mfi", ccfg, runs=runs)
+    dt = time.perf_counter() - t0
+    return {
+        "warm_rps": runs / dt,
+        "acceptance_rate": float(r["acceptance_rate"]),
+        "final_utilization": float(r["utilization"]),
+    }
 
 
 def bench_point(policy: str, cfg: SimConfig, runs: int, py_runs: int):
@@ -102,7 +118,7 @@ def main(runs: int = 64, num_gpus: int = 100, load: float = 0.85,
         f"-> {'PASS' if ok else 'FAIL'}"
         f"{' (smoke mode: recorded, not enforced)' if smoke else ' (>= 10x required)'}"
     )
-    per_policy = None
+    per_policy = cumulative = None
     if sweep:
         per_policy = sweep_policies(cfg, runs)
         print("table,engine,policy,num_gpus,runs,replicas_per_sec,acceptance")
@@ -111,12 +127,19 @@ def main(runs: int = 64, num_gpus: int = 100, load: float = 0.85,
                 f"sweep,batched,{name},{num_gpus},{runs},"
                 f"{p['warm_rps']:.2f},{p['acceptance_rate']:.4f}"
             )
+        cumulative = bench_cumulative(cfg, runs)
+        print(
+            f"sweep,batched-cumulative,mfi,{num_gpus},{runs},"
+            f"{cumulative['warm_rps']:.2f},{cumulative['acceptance_rate']:.4f}"
+        )
     if json_path:
         payload = dict(
             r, policy=policy, num_gpus=num_gpus, runs=runs, load=load, smoke=smoke
         )
         if per_policy is not None:
             payload["policies"] = per_policy
+        if cumulative is not None:
+            payload["cumulative"] = cumulative
         with open(json_path, "w") as fh:
             json.dump(payload, fh, indent=2, sort_keys=True)
         print(f"# wrote {json_path}")

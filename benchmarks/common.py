@@ -32,10 +32,23 @@ PAPER_POLICIES = ("ff", "rr", "bf-bi", "wf-bi", "mfi")
 #: named fleet scenarios (--cluster flags also accept raw spec strings
 #: such as "a100-80:40,a100-40:40,h100-96:20").  The ``mixed`` scenario is
 #: a four-model fleet — both A100 SKUs plus both H100 SKUs — so every
-#: sweep exercises the registry's per-model placement tables end to end.
+#: sweep exercises the registry's per-model placement tables end to end;
+#: ``mixed-h200`` adds the stylized 12-slice H200-141GB, exercising the
+#: padded-width (non-8-slice) table path.
 CLUSTERS = {
     "homogeneous": None,
     "mixed": "a100-80:30,a100-40:30,h100-96:20,h100-80:20",
+    "mixed-h200": "a100-80:25,a100-40:25,h100-96:20,h100-80:15,h200-141:15",
+}
+
+#: named per-model demand-mix scenarios for `--model-dist` (raw
+#: "model=dist,model=dist" strings are also accepted): newer SKUs attract
+#: the big classes, the A100-40s see the small ones
+MODEL_DISTS = {
+    "generation-skew": (
+        "a100-40=skew-small,h100-96=skew-big,h100-80=skew-big,"
+        "h200-141=skew-big"
+    ),
 }
 
 
@@ -70,15 +83,52 @@ def resolve_cluster(cluster, num_gpus: int):
     return spec, spec.num_gpus
 
 
+def resolve_model_dist(arg, spec=None):
+    """``--model-dist`` value -> per-model distribution dict (or None).
+
+    Accepts a named scenario (see :data:`MODEL_DISTS`) or a raw
+    ``"a100-40=skew-small,h100-96=skew-big"`` string; distribution names
+    validate in :func:`repro.sim.distributions.resolve_probs` when the
+    config is used.  With ``spec``, entries for models outside the fleet
+    are dropped (named scenarios cover the superset of all scenarios'
+    models; the strict core-layer validation stays for direct API users).
+    """
+    if not arg:
+        return None
+    from repro.core import mig
+
+    text = MODEL_DISTS.get(arg, arg)
+    out = {}
+    for part in text.split(","):
+        model, sep, dist = part.strip().partition("=")
+        if not sep:
+            raise ValueError(
+                f"--model-dist entry {part!r} is not 'model=distribution'"
+            )
+        out[model] = dist
+    for name in out:
+        if name not in mig.DEVICE_MODELS:  # typos raise; never drop silently
+            raise ValueError(
+                f"unknown device model {name!r} in --model-dist; options "
+                f"{sorted(set(mig.DEVICE_MODELS))}"
+            )
+    if spec is not None:
+        fleet = {m.name for m in spec.models}
+        out = {
+            k: v for k, v in out.items() if mig.DEVICE_MODELS[k].name in fleet
+        }
+    return out or None
+
+
 def run_engine(engine: str, scheduler, cfg, runs: int):
     """Dispatch a Monte-Carlo sweep point to the chosen simulation engine.
 
     ``scheduler`` is any registered policy name (or ad-hoc ``PolicySpec``);
     the policy registry decides batched capability.  ``batched`` runs every
-    batched-capable policy on the steady protocol, homogeneous or mixed
-    ``cfg.cluster_spec``; anything else (defrag policies, the cumulative
-    protocol) falls back to the Python reference loop so sweeps stay
-    complete.
+    batched-capable policy — the defrag variants (migrate stage in the
+    scan) and the cumulative protocol included — on homogeneous or mixed
+    ``cfg.cluster_spec``; engine-restricted specs fall back to the Python
+    reference loop so sweeps stay complete.
     """
     from repro.core.policy import resolve
     from repro.sim import run_many
@@ -87,10 +137,6 @@ def run_engine(engine: str, scheduler, cfg, runs: int):
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; options {ENGINES}")
     spec = resolve(scheduler)
-    if (
-        engine == "batched"
-        and spec.supports("batched")
-        and cfg.protocol == "steady"
-    ):
+    if engine == "batched" and spec.supports("batched"):
         return run_batched(spec, cfg, runs=runs)
     return run_many(spec, cfg, runs=runs)

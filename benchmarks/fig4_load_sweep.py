@@ -24,8 +24,10 @@ import numpy as np
 from benchmarks.common import (
     CLUSTERS,
     ENGINES,
+    MODEL_DISTS,
     PAPER_POLICIES,
     resolve_cluster,
+    resolve_model_dist,
     resolve_policies,
     run_engine,
 )
@@ -36,9 +38,10 @@ SCHEDULERS = PAPER_POLICIES
 
 def run(runs: int = 30, num_gpus: int = 100, loads=(0.5, 0.7, 0.85, 1.0),
         seed: int = 0, engine: str = "python", cluster: str | None = None,
-        policies: str | None = None):
+        policies: str | None = None, model_dist: str | None = None):
     spec, num_gpus = resolve_cluster(cluster, num_gpus)
     names = resolve_policies(policies)
+    model_dists = resolve_model_dist(model_dist, spec)
     rows = []
     results = {}
     for load in loads:
@@ -46,6 +49,7 @@ def run(runs: int = 30, num_gpus: int = 100, loads=(0.5, 0.7, 0.85, 1.0),
             cfg = SimConfig(
                 num_gpus=num_gpus, distribution="uniform",
                 offered_load=load, seed=seed, cluster_spec=spec,
+                model_distributions=model_dists,
             )
             r = run_engine(engine, name, cfg, runs=runs)
             results[(name, load)] = r
@@ -58,9 +62,10 @@ def run(runs: int = 30, num_gpus: int = 100, loads=(0.5, 0.7, 0.85, 1.0),
 
 
 def main(runs: int = 30, engine: str = "python", cluster: str | None = None,
-         policies: str | None = None):
+         policies: str | None = None, model_dist: str | None = None):
     print("table,scheduler,load,acceptance,allocated,utilization,active_gpus,frag")
-    rows, results = run(runs=runs, engine=engine, cluster=cluster, policies=policies)
+    rows, results = run(runs=runs, engine=engine, cluster=cluster,
+                        policies=policies, model_dist=model_dist)
     for row in rows:
         print(row)
     # headline check at heavy load
@@ -85,6 +90,11 @@ if __name__ == "__main__":
         "--policies", default=None,
         help="comma list of registered policies, or 'all' (default: paper set)",
     )
+    ap.add_argument(
+        "--model-dist", default=None,
+        help=f"per-model demand mix: named scenario {sorted(MODEL_DISTS)} or "
+             "'model=dist,model=dist' (default: fleet-wide Table II)",
+    )
     args = ap.parse_args()
     main(runs=args.runs, engine=args.engine, cluster=args.cluster,
-         policies=args.policies)
+         policies=args.policies, model_dist=args.model_dist)

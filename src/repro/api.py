@@ -64,10 +64,15 @@ def simulate(
       cfg: a :class:`repro.sim.SimConfig`; built from ``cfg_kwargs``
         (``num_gpus``, ``offered_load``, ``distribution``,
         ``cluster_spec``, ...) when omitted.
-      engine: ``"python"`` (reference loop; every policy, both protocols)
-        or ``"batched"`` (single-XLA-program scan; batched-capable
-        policies, steady protocol).
-      runs: replicas to average (the paper uses 500).
+      engine: ``"python"`` (reference loop) or ``"batched"`` (single
+        XLA-program staged scan).  Both engines run every registered
+        policy (defrag variants included — the batched engine compiles a
+        migrate stage into its scan) and both protocols (``steady`` |
+        ``cumulative``); a spec may still opt out of an engine via its
+        ``engines`` field, validated here like everywhere else.
+      runs: replicas to average (the paper uses 500).  The batched engine
+        auto-shards the replica axis across visible devices when ``runs``
+        divides evenly (see :func:`repro.sim.batched.shard_events`).
       use_kernel: batched engine only — route fragmentation scoring
         through the Pallas kernel (default: auto, TPU + homogeneous spec).
 

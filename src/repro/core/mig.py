@@ -213,6 +213,27 @@ H100_96GB = DeviceModel(
 #: apart via the ``model-group`` scoring key).
 H100_80GB = DeviceModel(name="h100-80gb", slice_gib=10, profiles=PROFILES)
 
+#: H200-141GB (stylized): **12** × 12 GiB memory slices (144 ≈ the 141 GiB
+#: marketing capacity) — the only non-8-slice geometry in the registry, so
+#: mixed fleets carrying it exercise the padded-width paths everywhere
+#: (occupancy bitmaps, stacked `SpecTables`, per-model fragmentation).
+#: Placement windows follow the NVIDIA power-of-two alignment style on the
+#: wider grid: full-GPU-minus-trailing for 7g, quarter-aligned for 4g/3g,
+#: even anchors for the 2-slice classes, every slice for 1g.
+H200_141GB = DeviceModel(
+    name="h200-141gb",
+    slice_gib=12,
+    num_mem_slices=12,
+    profiles=(
+        MIGProfile("7g.84gb", compute=7, mem=7, anchors=(0,)),
+        MIGProfile("4g.48gb", compute=4, mem=4, anchors=(0, 4, 8)),
+        MIGProfile("3g.48gb", compute=3, mem=4, anchors=(0, 4, 8)),
+        MIGProfile("2g.24gb", compute=2, mem=2, anchors=(0, 2, 4, 6, 8, 10)),
+        MIGProfile("1g.24gb", compute=1, mem=2, anchors=(0, 2, 4, 6, 8, 10)),
+        MIGProfile("1g.12gb", compute=1, mem=1, anchors=tuple(range(12))),
+    ),
+)
+
 DEVICE_MODELS: Dict[str, DeviceModel] = {
     "a100-80": A100_80GB,
     "a100-80gb": A100_80GB,
@@ -222,6 +243,8 @@ DEVICE_MODELS: Dict[str, DeviceModel] = {
     "h100-96gb": H100_96GB,
     "h100-80": H100_80GB,
     "h100-80gb": H100_80GB,
+    "h200-141": H200_141GB,
+    "h200-141gb": H200_141GB,
 }
 
 
@@ -447,6 +470,21 @@ class ClusterState:
     def release(self, workload_id: int) -> None:
         gpu_id = self._placement_of.pop(workload_id)
         self.gpus[gpu_id].release(workload_id)
+
+    def migrate(self, workload_id: int, gpu_id: int, anchor: int) -> Tuple[int, int, int]:
+        """Move a running workload to a new placement (same class, same id).
+
+        The single primitive behind every defrag ``pending_migration``
+        apply (simulator protocols, serving admission, host replay).
+        Returns the old ``(gpu, anchor, profile_id)``; raises like
+        :meth:`allocate` if the target is illegal or occupied.
+        """
+        old_gpu = self._placement_of[workload_id]
+        alloc = self.gpus[old_gpu].allocations[workload_id]
+        old = (old_gpu, alloc.anchor, alloc.profile_id)
+        self.release(workload_id)
+        self.allocate(workload_id, alloc.profile_id, gpu_id, anchor)
+        return old
 
     def gpu_of(self, workload_id: int) -> Optional[int]:
         return self._placement_of.get(workload_id)

@@ -50,10 +50,13 @@ Key vocabulary
 
 The six shipped policies (``mfi``, ``ff``, ``bf-bi``, ``wf-bi``, ``rr``,
 ``mfi-defrag``) are registered here as specs; ``mfi-defrag`` additionally
-sets ``defrag=True`` (an opportunistic single-migration search on reject),
-which only the host engine implements — the registry tracks per-policy
-engine support and :func:`resolve` is the single validation path both
-engines raise through.
+sets ``defrag=True`` (an opportunistic single-migration search on reject).
+Both engines implement the migration step — the host scheduler as a
+candidate search (:class:`repro.core.schedulers.MFIDefrag`), the batched
+engine as a masked migrate stage compiled into its scan body
+(:mod:`repro.sim.batched`) — so a defrag spec runs everywhere.  A spec may
+still *opt out* of an engine via the ``engines`` field; :func:`resolve`
+remains the single validation path both engines raise through.
 """
 
 from __future__ import annotations
@@ -100,11 +103,17 @@ class PolicySpec:
       feasibility: candidate filter; ``"window-free"`` keeps anchors whose
         placement window has zero occupied slices (and drops demand classes
         with no realization on the GPU's model).
-      defrag: host-only extension — on reject, search for one running
-        workload whose migration makes the request feasible (the
-        beyond-paper ``mfi-defrag`` behaviour).  Policies with ``defrag``
-        cannot be lowered to the batched engine (migration needs a
-        host-side allocation table).
+      defrag: on reject, search for ONE running workload whose migration
+        makes the request feasible (the beyond-paper ``mfi-defrag``
+        behaviour).  Both engines implement it: the host scheduler as the
+        canonical ``(total F, victim gpu, victim anchor)`` candidate search,
+        the batched engine as a migrate stage compiled into its scan body
+        (the expiry ring doubles as the allocation table).  Incompatible
+        with the ``rr-distance`` key (the inner dry-run selections of the
+        search would advance the rotation cursor ambiguously).
+      engines: engines this spec may be compiled to (default: all).  A
+        spec can opt out of an engine, e.g. a host-side-only experiment;
+        :func:`resolve` raises through the same message everywhere.
       description: one-line human summary (shown by ``list_policies``
         consumers and docs).
     """
@@ -113,6 +122,7 @@ class PolicySpec:
     keys: Tuple[str, ...]
     feasibility: str = "window-free"
     defrag: bool = False
+    engines: Tuple[str, ...] = ENGINES
     description: str = ""
 
     def __post_init__(self):
@@ -133,6 +143,22 @@ class PolicySpec:
                 f"policy {self.name!r}: unknown feasibility filter "
                 f"{self.feasibility!r}; options: {FEASIBILITY_FILTERS}"
             )
+        if not isinstance(self.engines, tuple):
+            object.__setattr__(self, "engines", tuple(self.engines))
+        if not self.engines:
+            raise ValueError(f"policy {self.name!r}: needs at least one engine")
+        for engine in self.engines:
+            if engine not in ENGINES:
+                raise ValueError(
+                    f"policy {self.name!r}: unknown engine {engine!r}; "
+                    f"options: {ENGINES}"
+                )
+        if self.defrag and self.stateful_cursor:
+            raise ValueError(
+                f"policy {self.name!r}: defrag is incompatible with the "
+                "'rr-distance' key (the migration search's inner dry-run "
+                "selections would advance the rotation cursor ambiguously)"
+            )
 
     # -- derived structure ---------------------------------------------------
     @property
@@ -144,11 +170,6 @@ class PolicySpec:
     def stateful_cursor(self) -> bool:
         """Whether the policy carries a round-robin rotation cursor."""
         return any(key_base(k) == "rr-distance" for k in self.keys)
-
-    @property
-    def engines(self) -> Tuple[str, ...]:
-        """Engines this spec compiles to (defrag needs the host engine)."""
-        return ("python",) if self.defrag else ENGINES
 
     def supports(self, engine: str) -> bool:
         return engine in self.engines
@@ -311,7 +332,7 @@ MFI_DEFRAG_SPEC = register_policy(
         defrag=True,
         description=(
             "BEYOND-PAPER: MFI plus an opportunistic single-migration "
-            "defrag search on reject (host engine only)"
+            "defrag search on reject (both engines)"
         ),
     )
 )

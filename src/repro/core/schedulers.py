@@ -210,19 +210,27 @@ class MFIDefrag(SpecScheduler):
     The paper excludes rescheduling ("we are going to consider rescheduling
     in a future work").  This variant keeps the no-disruption spirit almost
     intact: only when a request would be REJECTED does it search for ONE
-    running workload whose migration (to an MFI-chosen new placement) makes
+    running workload whose migration (to a spec-chosen new placement) makes
     the request feasible, choosing the migration that minimises the final
     cluster fragmentation sum.  The caller performs the migration via the
     ``pending_migration`` attribute ((workload_id, gpu, anchor) or None).
 
-    Host engine only (the registry entry sets ``defrag=True``): the search
-    needs the host-side allocation table and mutates/rolls back occupancy.
+    The search is **canonical**: victims are enumerated in ascending
+    ``(gpu, anchor)`` order and the first strict minimum of the total-F
+    objective wins, i.e. the chosen migration is the lexicographic minimum
+    of ``(total F after, victim gpu, victim anchor)``.  The batched
+    engine's migrate stage (:mod:`repro.sim.batched`) computes exactly this
+    total order with masked tensor ops.  The search is unbounded by
+    default — matching the batched engine, which is always exhaustive (it
+    is vectorized, a budget would save no work) — so the two engines
+    express the same policy at any scale; pass ``max_candidates`` to cap
+    host-side work on large clusters at the cost of that parity.
     """
 
     def __init__(
         self,
         metric: str = "blocked",
-        max_candidates: int = 64,
+        max_candidates: Optional[int] = None,
         spec: Optional[PolicySpec] = None,
     ):
         super().__init__(spec if spec is not None else resolve("mfi-defrag"), metric)
@@ -237,13 +245,23 @@ class MFIDefrag(SpecScheduler):
             return sel
 
         # rejected: try single-workload migration
+        budget = (
+            self.max_candidates
+            if self.max_candidates is not None
+            else float("inf")
+        )
         best = None  # (total_F, victim_id, victim_new, request_placement)
         tried = 0
         for gpu in cluster.gpus:
-            if tried >= self.max_candidates:
+            if tried >= budget:
                 break  # candidate budget caps TOTAL work, not per-GPU work
-            for wid, alloc in list(gpu.allocations.items()):
-                if tried >= self.max_candidates:
+            # canonical victim order: ascending anchor within the GPU scan
+            # (the migration objective's tie-break — see class docstring)
+            victims = sorted(
+                gpu.allocations.items(), key=lambda kv: kv[1].anchor
+            )
+            for wid, alloc in victims:
+                if tried >= budget:
                     break
                 tried += 1
                 prof = gpu.model.profiles[alloc.profile_id]
@@ -278,9 +296,15 @@ class MFIDefrag(SpecScheduler):
 
 
 def compile_policy(spec: PolicySpec, metric: str = "blocked") -> Scheduler:
-    """Host-engine compiler: spec -> ready-to-run ``Scheduler``."""
+    """Host-engine compiler: spec -> ready-to-run ``Scheduler``.
+
+    Registry-compiled defrag schedulers run the UNBOUNDED canonical search
+    so both engines express the same policy at any scale (the batched
+    migrate stage is always exhaustive); construct
+    ``MFIDefrag(max_candidates=...)`` directly to opt into the work cap.
+    """
     if spec.defrag:
-        return MFIDefrag(metric=metric, spec=spec)
+        return MFIDefrag(metric=metric, spec=spec, max_candidates=None)
     return SpecScheduler(spec, metric=metric)
 
 

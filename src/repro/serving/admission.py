@@ -79,6 +79,12 @@ class AdmissionController:
         if sel is None:
             self.rejected += 1
             return None
+        pending = getattr(self.scheduler, "pending_migration", None)
+        if pending is not None:  # defrag policies: move the victim first
+            vwid, vgpu, vanchor = pending
+            self.cluster.migrate(vwid, vgpu, vanchor)
+            old = self.placements[vwid]
+            self.placements[vwid] = Placement(vwid, old.profile, vgpu, vanchor)
         gpu, anchor = sel
         self.cluster.allocate(workload_id, pid, gpu, anchor)
         placement = Placement(workload_id, profile, gpu, anchor)

@@ -3,19 +3,34 @@
 Two engines simulate the same load model (see ``docs/SIMULATOR.md``):
 
 * :mod:`repro.sim.simulator` — the Python/`heapq` reference, one replica at
-  a time (both ``steady`` and ``cumulative`` protocols);
+  a time;
 * :mod:`repro.sim.batched` — the batched JAX engine: R replicas × T slots
-  as one ``lax.scan`` over a vmapped replica axis (``steady`` only,
-  policies MFI/FF/BF-BI/WF-BI/RR), ≥10× replica throughput on CPU and the
+  as one staged ``lax.scan`` over a vmapped (and optionally
+  device-sharded) replica axis, ≥10× replica throughput on CPU and the
   engine every large scenario sweep should use.
 
-Both engines accept a heterogeneous ``SimConfig.cluster_spec``
-(:class:`repro.core.mig.ClusterSpec`); the default is the paper's
-homogeneous A100-80GB fleet.
+Both engines run every registered policy (``mfi-defrag``'s migration
+search included — the batched engine compiles it as a *migrate* stage)
+and both load protocols (``steady`` | ``cumulative``), and both accept a
+heterogeneous ``SimConfig.cluster_spec``
+(:class:`repro.core.mig.ClusterSpec`) with optional per-model demand
+mixes (``SimConfig.model_distributions``); the default is the paper's
+homogeneous A100-80GB fleet with the fleet-wide Table-II mix.
 """
 
 from repro.sim.distributions import DISTRIBUTIONS, sample_profiles  # noqa: F401
-from repro.sim.simulator import SimConfig, SimResult, run_simulation, run_many  # noqa: F401
+from repro.sim.simulator import (  # noqa: F401
+    SimConfig,
+    SimResult,
+    request_probs,
+    run_simulation,
+    run_many,
+)
 from repro.sim.batched import POLICIES as BATCHED_POLICIES  # noqa: F401
-from repro.sim.batched import policy_select, run_batched  # noqa: F401
+from repro.sim.batched import (  # noqa: F401
+    PROTOCOLS,
+    policy_select,
+    policy_select_full,
+    run_batched,
+)
 from repro.core.policy import PolicySpec, list_policies, register_policy  # noqa: F401

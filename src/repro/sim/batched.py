@@ -1,4 +1,4 @@
-"""Batched on-device Monte-Carlo simulation engine (steady protocol).
+"""Batched on-device Monte-Carlo simulation engine (staged scan pipeline).
 
 The Python reference in :mod:`repro.sim.simulator` runs replicas one at a
 time through a ``ClusterState``/``heapq`` event loop; at the paper's scale
@@ -6,15 +6,35 @@ time through a ``ClusterState``/``heapq`` event loop; at the paper's scale
 **R replicas × T slots as one** ``lax.scan`` **over a vmapped replica axis**
 so the whole Monte-Carlo average is a single XLA program.
 
+Staged pipeline (the :class:`EngineCore`)
+    The scan body is composed from small *stages* —
+    ``arrival → select → migrate → commit → expire → measure`` — and two
+    static descriptors decide which stages are compiled in:
+
+    * the :class:`Protocol` descriptor (``steady`` | ``cumulative``)
+      selects the *measure* semantics: slot-boundary sampling for the
+      steady protocol (paper §VI), post-commit sampling on the cumulative
+      demand grid for the paper-literal cumulative protocol;
+    * the :class:`~repro.core.policy.PolicySpec` selects the decision
+      stages: the select lowering (:func:`_lower_select`), the optional
+      *migrate* stage (``spec.defrag`` — the beyond-paper ``mfi-defrag``
+      single-migration search, see below), and the rotation-cursor update.
+
+    Because the descriptors are static jit arguments, a configuration
+    compiles exactly the stages it needs: the steady/non-defrag pipeline
+    emits the same computation as the original monolithic event step
+    (pre-refactor traces reproduce bit-for-bit).
+
 Event stream
     Arrivals are pre-sampled on host (Poisson counts, profile ids and
-    durations per slot) and flattened into one *event stream* per replica:
-    one event per arrival, plus one synthetic heartbeat event for every
-    empty slot so consecutive events never skip a slot.  Streams are padded
-    to the longest replica (``pid = -1`` lanes are no-ops), and everything
-    slot-dependent (release ring row, metric-sample flags, measurement
-    window membership) is precomputed host-side, so the device step is pure
-    tensor algebra with no clock arithmetic.
+    durations per slot for the steady protocol; one arrival per slot for
+    the cumulative protocol) and flattened into one *event stream* per
+    replica: one event per arrival, plus one synthetic heartbeat event for
+    every empty slot so consecutive events never skip a slot.  Streams are
+    padded to the longest replica (``pid = -1`` lanes are no-ops), and
+    everything slot-dependent (release ring row, metric-sample flags,
+    measurement window membership) is precomputed host-side, so the device
+    step is pure tensor algebra with no clock arithmetic.
 
 Heterogeneous fleets
     A :class:`repro.core.mig.ClusterSpec` (``SimConfig.cluster_spec``) may
@@ -25,7 +45,8 @@ Heterogeneous fleets
     step.  The MFI ΔF table becomes a per-model gather plus one batched
     matmul (``einsum('mn,man->ma')``), so the scan stays fully jittable;
     the paper's homogeneous setup is the trivial ``K = 1`` spec and
-    reproduces the previous engine bit-for-bit.
+    reproduces the previous engine bit-for-bit.  Non-8-slice geometries
+    (e.g. the stylized H200-141GB) ride the same padded-width path.
 
 Replica state (fixed-capacity struct-of-arrays pytree)
     * ``occ (M, S) int32`` — cluster occupancy bitmap (materialized only
@@ -51,7 +72,33 @@ Replica state (fixed-capacity struct-of-arrays pytree)
       the clock reaches it, before it can be re-targeted.  Within-row
       columns are assigned on host (arrival rank among same-end-slot
       arrivals), so inserts never collide; row ``K + 1`` is a write-only
-      trash row for padding lanes.
+      trash row for padding lanes.  For defrag specs two parallel planes
+      ``ring_pid`` / ``ring_aidx`` additionally record each running
+      workload's demand class and anchor index — **the ring doubles as the
+      allocation table** the migration search needs.
+
+Migrate stage (batched ``mfi-defrag``)
+    When ``spec.defrag`` and the arrival was rejected, the stage evaluates
+    every running workload (= live ring entry) as a migration victim with
+    masked tensor ops: hypothetically evacuate it, re-select the request on
+    the freed GPU (the only GPU where it can have become feasible), then
+    re-place the victim anywhere via the spec's own key list, scoring each
+    candidate by the total cluster fragmentation after both moves.  The
+    winner is the lexicographic minimum of ``(total F, victim gpu, victim
+    anchor)`` — exactly the canonical order the host search
+    (:class:`repro.core.schedulers.MFIDefrag`) enumerates — so the two
+    engines agree single-step whenever the host's candidate budget does
+    not bind (the batched search is always exhaustive: it is vectorized,
+    a budget would save no work).  All scores are integer-valued, hence
+    exact in float32.
+
+Replica sharding
+    The replica axis is embarrassingly parallel: :func:`run_batched`
+    splits it across all visible devices via ``jax.sharding``
+    (``NamedSharding`` over a 1-D ``replicas`` mesh) whenever more than
+    one device is available and ``runs`` divides evenly — results are
+    bitwise identical to the single-device run (no cross-replica
+    arithmetic happens on device).  Single-device setups are unchanged.
 
 Policies are **compiled from declarative**
 :class:`repro.core.policy.PolicySpec` **registry entries** — the same specs
@@ -65,20 +112,24 @@ whose keys ask for it.  The spec itself is the static jit argument, so any
 newly registered batched-capable policy runs without touching this module.
 Acceptance, utilization, active-GPU and fragmentation-severity metrics
 accumulate inside the scan; :func:`run_batched` returns the same aggregate
-dict as :func:`repro.sim.simulator.run_many`.
+dict as :func:`repro.sim.simulator.run_many` — demand-grid traces included
+for the cumulative protocol.
 
 Parity guarantees vs the Python reference (``tests/test_batched_sim.py``,
-``tests/test_heterogeneous.py``):
+``tests/test_heterogeneous.py``, ``tests/test_engine_core.py``):
 
 * single-step decisions of every batched-capable registered policy match
   their host-compiled ``Scheduler.select`` counterparts *exactly*
-  (including rejects and tie-breaks — every scoring-key value is
-  integer-valued, hence exact in float32), on homogeneous and mixed specs;
-* whole-run acceptance rates agree within Monte-Carlo tolerance (the two
-  engines consume their RNG streams differently, so trajectories are
-  statistically — not bitwise — identical); driving the Python schedulers
-  over the *same* presampled event stream matches decision-for-decision
-  (:func:`repro.sim.replay.host_decisions`).
+  (including rejects, tie-breaks and defrag migrations — every scoring-key
+  value is integer-valued, hence exact in float32), on homogeneous and
+  mixed specs;
+* whole-run acceptance rates agree within Monte-Carlo tolerance on the
+  steady protocol (the two engines consume their RNG streams differently);
+  driving the Python schedulers over the *same* presampled event stream
+  matches decision-for-decision (:func:`repro.sim.replay.host_decisions`);
+* cumulative-protocol runs consume the *identical* per-replica RNG streams
+  as ``run_many`` (seed ``cfg.seed + r * 9973``), so the demand-grid
+  traces match the Python simulator to float tolerance on the same stream.
 
 On TPU, per-GPU fragmentation rescoring (the rows each drain/commit
 touches, which feed both MFI and the severity metric) routes through the
@@ -89,8 +140,9 @@ Pallas ``fragscore`` kernel (``interpret=False``) — homogeneous specs only
 
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -106,13 +158,57 @@ from repro.core.policy import (
     resolve,
 )
 from repro.sim import distributions
-from repro.sim.simulator import SAMPLE_EVERY, SimConfig, steady_params
+from repro.sim.simulator import (
+    SAMPLE_EVERY,
+    SimConfig,
+    request_probs,
+    steady_params,
+)
 
 #: batched-capable registered policies at import time (back-compat alias;
 #: `repro.core.policy.list_policies(engine="batched")` is the live view)
 POLICIES = list_policies(engine="batched")
 
 _BIG = jnp.float32(1e9)
+
+
+# ---------------------------------------------------------------------------
+# Protocol descriptors — static configuration of the measure stage
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Protocol:
+    """Static load-protocol descriptor compiled into the scan body.
+
+    ``boundary_metrics`` samples utilization / active-GPU / fragmentation
+    at slot boundaries *before* the drain (the steady protocol's
+    time-averaged metrics, reduced host-side against the ``sample``
+    flags); ``post_metrics`` samples them *after* the commit of every
+    event (the cumulative protocol's demand-grid traces).  Instances are
+    frozen/hashable so a protocol doubles as a jit static argument.
+    """
+
+    name: str
+    boundary_metrics: bool
+    post_metrics: bool
+
+
+PROTOCOLS: Dict[str, Protocol] = {
+    "steady": Protocol("steady", boundary_metrics=True, post_metrics=False),
+    "cumulative": Protocol("cumulative", boundary_metrics=False, post_metrics=True),
+}
+
+
+def resolve_protocol(protocol: Union[str, Protocol]) -> Protocol:
+    """Name-or-descriptor -> :class:`Protocol` (single validation path)."""
+    if isinstance(protocol, Protocol):
+        return protocol
+    if protocol not in PROTOCOLS:
+        raise ValueError(
+            f"unknown protocol {protocol!r}; options: {tuple(sorted(PROTOCOLS))}"
+        )
+    return PROTOCOLS[protocol]
 
 
 # ---------------------------------------------------------------------------
@@ -174,18 +270,22 @@ def spec_tables(spec: mig.ClusterSpec) -> SpecTables:
             rows_t[k, pid, : s.stop - s.start] = np.arange(s.start, s.stop)
     # occupied-slice count each profile anchor adds to every placement window
     maskwin = np.einsum("kpas,kns->kpan", masks_t.astype(np.float32), W)
-    return SpecTables(
-        W=jnp.asarray(W),
-        V=jnp.asarray(V),
-        slices=jnp.asarray(slices),
-        profile_rows=jnp.asarray(rows_t),
-        profile_masks=jnp.asarray(masks_t),
-        profile_anchors=jnp.asarray(anchors_t),
-        profile_valid=jnp.asarray(valid_t),
-        profile_mem=jnp.asarray(mem_t),
-        maskwin=jnp.asarray(maskwin),
-        maskpos=jnp.asarray((maskwin > 0).astype(np.float32)),
-    )
+    # the cache may be populated from inside a jit trace (e.g. `_simulate`
+    # building its default tables): force concrete device arrays so no
+    # tracer ever escapes into the cache
+    with jax.ensure_compile_time_eval():
+        return SpecTables(
+            W=jnp.asarray(W),
+            V=jnp.asarray(V),
+            slices=jnp.asarray(slices),
+            profile_rows=jnp.asarray(rows_t),
+            profile_masks=jnp.asarray(masks_t),
+            profile_anchors=jnp.asarray(anchors_t),
+            profile_valid=jnp.asarray(valid_t),
+            profile_mem=jnp.asarray(mem_t),
+            maskwin=jnp.asarray(maskwin),
+            maskpos=jnp.asarray((maskwin > 0).astype(np.float32)),
+        )
 
 
 def _default_spec(num_gpus: int) -> mig.ClusterSpec:
@@ -347,23 +447,318 @@ def _select(spec, base, free, f, metric, tables, midx, vg, pid, cursor):
     return _lower_select(spec, feasible, free, mem_g, delta, anchors_g, cursor, midx)
 
 
-def policy_select(
+# ---------------------------------------------------------------------------
+# Row-wise / grid-wise refinement variants (the migrate stage's selections)
+# ---------------------------------------------------------------------------
+
+
+def _key_rows(base_key, free, mem_g, delta, anchors_g, cursor, gidx, kidx, num_gpus):
+    """One scoring key as a (C, A)-broadcastable tensor for *per-row*
+    selection: row ``c`` is an independent single-GPU candidate whose GPU
+    index is ``gidx[c]`` and model index ``kidx[c]``."""
+    if base_key == "frag-delta":
+        return delta  # (C, A)
+    if base_key == "free-slices":
+        return (free.astype(jnp.float32) - mem_g)[:, None]  # (C, 1)
+    if base_key == "gpu":
+        return gidx.astype(jnp.float32)[:, None]
+    if base_key == "anchor":
+        return anchors_g.astype(jnp.float32)  # (C, A)
+    if base_key == "rr-distance":
+        prio = jnp.mod(gidx.astype(jnp.int32) - cursor, num_gpus)
+        return prio.astype(jnp.float32)[:, None]
+    if base_key == "model-group":
+        return kidx.astype(jnp.float32)[:, None]
+    raise ValueError(f"unknown scoring key {base_key!r}")  # unreachable
+
+
+def _refine_rows(spec, feasible, free, mem_g, delta, anchors_g, cursor, gidx,
+                 kidx, num_gpus):
+    """Per-row spec selection: one independent argmin along the anchor axis
+    of every row of ``feasible (C, A)``.  Returns ``(aidx (C,), ok (C,))``.
+
+    Equivalent to the host interpreter's full select when each row's
+    feasible set is confined to its own GPU (GPU-keyed scores are constant
+    per row, so only anchor-varying keys act; the implicit ascending-anchor
+    tie-break is the first surviving column).
+    """
+    mask = feasible
+    for key in spec.keys:
+        val = _key_rows(
+            key_base(key), free, mem_g, delta, anchors_g, cursor, gidx, kidx,
+            num_gpus,
+        )
+        if key.startswith("-"):
+            val = -val
+        masked = jnp.where(mask, val, _BIG)
+        mask = mask & (masked == masked.min(axis=-1, keepdims=True))
+    return jnp.argmax(mask, axis=-1), mask.any(axis=-1)
+
+
+def _key_grid(base_key, free, mem_g, delta, anchors_g, cursor, midx):
+    """One scoring key as a (C, M, A)-broadcastable tensor for *batched
+    whole-cluster* selection (one independent (gpu, anchor) argmin per
+    leading candidate row): ``free/mem_g (C, M)``, ``delta/anchors_g
+    (C, M, A)``."""
+    m = free.shape[-1]
+    if base_key == "frag-delta":
+        return delta
+    if base_key == "free-slices":
+        return (free.astype(jnp.float32) - mem_g)[..., None]  # (C, M, 1)
+    if base_key == "gpu":
+        return jnp.arange(m, dtype=jnp.float32)[None, :, None]
+    if base_key == "anchor":
+        return anchors_g.astype(jnp.float32)
+    if base_key == "rr-distance":  # pragma: no cover — defrag+rr is rejected
+        prio = jnp.mod(jnp.arange(m, dtype=jnp.int32) - cursor, m)
+        return prio.astype(jnp.float32)[None, :, None]
+    if base_key == "model-group":
+        return midx.astype(jnp.float32)[None, :, None]
+    raise ValueError(f"unknown scoring key {base_key!r}")  # unreachable
+
+
+def _refine_grid(spec, feasible, free, mem_g, delta, anchors_g, cursor, midx):
+    """Batched whole-cluster spec selection: an independent ``(gpu, anchor)``
+    argmin over the trailing (M, A) axes of every leading row of
+    ``feasible (C, M, A)``.  Returns ``(gpu (C,), aidx (C,), ok (C,))`` —
+    the same total order :func:`_lower_select` produces, per row.
+    """
+    mask = feasible
+    for key in spec.keys:
+        val = _key_grid(
+            key_base(key), free, mem_g, delta, anchors_g, cursor, midx
+        )
+        if key.startswith("-"):
+            val = -val
+        masked = jnp.where(mask, val, _BIG)
+        mask = mask & (masked == masked.min(axis=(-2, -1), keepdims=True))
+    a = feasible.shape[-1]
+    flat = mask.reshape(mask.shape[:-2] + (-1,))
+    k = jnp.argmax(flat, axis=-1)
+    return k // a, k % a, flat.any(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Migrate stage: the batched single-migration defrag search
+# ---------------------------------------------------------------------------
+
+
+class MigrationResult(NamedTuple):
+    """Chosen migration of one event (all entries masked by ``mig``)."""
+
+    mig: jax.Array            # () bool — a migration was committed
+    gpu: jax.Array            # () int32 — request GPU (= victim's old GPU)
+    aidx: jax.Array           # () int32 — request anchor index
+    vic_row: jax.Array        # () int32 — victim's ring row
+    vic_col: jax.Array        # () int32 — victim's ring column
+    vic_gpu: jax.Array        # () int32 — victim's old GPU
+    vic_anchor: jax.Array     # () int32 — victim's old anchor value
+    vic_pid: jax.Array        # () int32 — victim's demand class
+    new_gpu: jax.Array        # () int32 — victim's new GPU
+    new_aidx: jax.Array       # () int32 — victim's new anchor index
+    new_anchor: jax.Array     # () int32 — victim's new anchor value
+    old_mask: jax.Array       # (S,) int32 — victim's old window bitmask
+    old_mwin: jax.Array       # (N,) float32 — window counts the old mask held
+    new_mask: jax.Array       # (S,) int32 — victim's new window bitmask
+    new_mwin: jax.Array       # (N,) float32 — window counts the new mask adds
+
+
+def _migrate_search(
+    spec: PolicySpec,
+    metric: str,
+    tables: SpecTables,
+    midx: jax.Array,
+    vg: jax.Array,
+    base: jax.Array,
+    free: jax.Array,
+    f: jax.Array,
+    ring_gpu: jax.Array,
+    ring_mask: jax.Array,
+    ring_pid: jax.Array,
+    ring_aidx: jax.Array,
+    pid_c: jax.Array,
+    cursor: jax.Array,
+    want: jax.Array,
+) -> MigrationResult:
+    """Exhaustive masked single-migration search over live ring entries.
+
+    For every candidate victim (a running workload): evacuate it, re-select
+    the request on the victim's GPU (the only GPU where feasibility can
+    have appeared — the arrival was just rejected everywhere), re-place the
+    victim anywhere via the spec's keys, and score the candidate by the
+    total cluster fragmentation after both moves.  The winner minimizes
+    ``(total F, victim gpu, victim anchor)`` — the host search's canonical
+    order.  ``want`` gates the whole stage (scalar bool).
+    """
+    num_gpus = midx.shape[0]
+    rows, cols = ring_gpu.shape
+    c = rows * cols
+    rg = ring_gpu.reshape(c)                       # (C,) victim gpu
+    rm = ring_mask.reshape(c, ring_mask.shape[-1])  # (C, S) victim window
+    rp = ring_pid.reshape(c)                       # (C,) victim class
+    ra = ring_aidx.reshape(c)                      # (C,) victim anchor index
+    present = rm.sum(axis=1) > 0                   # live entries only
+    kc = midx[rg]                                  # (C,) victim model index
+    vgc = vg[rg]                                   # (C, N) window sizes
+
+    # -- evacuate the victim from its own GPU -------------------------------
+    mwin_vic = tables.maskwin[kc, rp, ra]          # (C, N)
+    mem_vic = rm.sum(axis=1)                       # (C,) int32
+    base_v = base[rg] - mwin_vic                   # (C, N)
+    free_v = free[rg] + mem_vic                    # (C,)
+    f_v = _frag_from_base(base_v, free_v, metric, vgc)  # (C,)
+
+    # -- re-select the request on the freed GPU -----------------------------
+    rows_req = tables.profile_rows[kc, pid_c]      # (C, A)
+    valid_req = tables.profile_valid[kc, pid_c]    # (C, A)
+    mem_req = tables.profile_mem[kc, pid_c]        # (C,) float32
+    anchors_req = tables.profile_anchors[kc, pid_c]  # (C, A)
+    overlap_req = jnp.take_along_axis(base_v, rows_req, axis=1)
+    feas_req = (overlap_req == 0) & valid_req
+    if spec.requires_delta_f:
+        delta_req = _delta_from_base(
+            base_v, free_v, metric, vgc,
+            tables.maskwin[kc, pid_c], tables.maskpos[kc, pid_c],
+            mem_req, f_v,
+        )
+    else:
+        delta_req = None
+    aidx_req, ok_req = _refine_rows(
+        spec, feas_req, free_v, mem_req, delta_req, anchors_req, cursor,
+        rg, kc, num_gpus,
+    )
+
+    # -- place the request, then re-place the victim anywhere ---------------
+    take = lambda t, i: jnp.take_along_axis(  # noqa: E731 — (C, A, ...) @ (C,)
+        t, i[:, None, None] if t.ndim == 3 else i[:, None], axis=1
+    )[:, 0]
+    mask_req = take(tables.profile_masks[kc, pid_c], aidx_req)   # (C, S)
+    mwin_req = take(tables.maskwin[kc, pid_c], aidx_req)         # (C, N)
+    base2 = base_v + mwin_req                                    # (C, N)
+    free2 = free_v - mask_req.sum(axis=1)                        # (C,)
+    f2 = _frag_from_base(base2, free2, metric, vgc)              # (C,)
+
+    # whole-cluster tables for the victim's class, with the victim's own
+    # GPU row patched to the post-evacuation/post-request state
+    rows_all = jnp.transpose(tables.profile_rows[midx], (1, 0, 2))      # (P, M, A)
+    valid_all = jnp.transpose(tables.profile_valid[midx], (1, 0, 2))    # (P, M, A)
+    anchors_all = jnp.transpose(tables.profile_anchors[midx], (1, 0, 2))
+    mem_all = jnp.transpose(tables.profile_mem[midx], (1, 0))           # (P, M)
+    overlap_all = jnp.take_along_axis(base[None], rows_all, axis=2)     # (P, M, A)
+    feas_all = (overlap_all == 0) & valid_all
+
+    rows_vic = tables.profile_rows[kc, rp]         # (C, A)
+    valid_vic = tables.profile_valid[kc, rp]       # (C, A)
+    overlap_patch = jnp.take_along_axis(base2, rows_vic, axis=1)
+    feas_patch = (overlap_patch == 0) & valid_vic  # (C, A)
+    onehot = jnp.arange(num_gpus)[None, :] == rg[:, None]  # (C, M)
+    feas_grid = jnp.where(onehot[:, :, None], feas_patch[:, None, :], feas_all[rp])
+    free_grid = jnp.where(onehot, free2[:, None], free[None, :])        # (C, M)
+    mem_grid = mem_all[rp]                                              # (C, M)
+    anchors_grid = anchors_all[rp]                                      # (C, M, A)
+    if spec.requires_delta_f:
+        mw_all = jnp.transpose(tables.maskwin[midx], (1, 0, 2, 3))      # (P, M, A, N)
+        mp_all = jnp.transpose(tables.maskpos[midx], (1, 0, 2, 3))
+        delta_all = jnp.stack(  # ΔF per class on the untouched cluster
+            [
+                _delta_from_base(
+                    base, free, metric, vg, mw_all[p], mp_all[p],
+                    mem_all[p], f,
+                )
+                for p in range(mig.NUM_PROFILES)
+            ]
+        )  # (P, M, A)
+        delta_patch = _delta_from_base(
+            base2, free2, metric, vgc,
+            tables.maskwin[kc, rp], tables.maskpos[kc, rp],
+            tables.profile_mem[kc, rp], f2,
+        )  # (C, A)
+        delta_grid = jnp.where(
+            onehot[:, :, None], delta_patch[:, None, :], delta_all[rp]
+        )
+    else:
+        delta_grid = None
+    new_gpu, new_aidx, ok_vic = _refine_grid(
+        spec, feas_grid, free_grid, mem_grid, delta_grid, anchors_grid,
+        cursor, midx,
+    )
+
+    # -- score: total cluster fragmentation after both moves ----------------
+    kv = midx[new_gpu]                                           # (C,)
+    idx3 = (kv, rp, new_aidx)
+    mask_new = tables.profile_masks[idx3]                        # (C, S)
+    mwin_new = tables.maskwin[idx3]                              # (C, N)
+    same = new_gpu == rg
+    base_gv = jnp.where(same[:, None], base2, base[new_gpu])     # (C, N)
+    free_gv = jnp.where(same, free2, free[new_gpu])              # (C,)
+    f_gv_before = _frag_from_base(base_gv, free_gv, metric, vg[new_gpu])
+    f_gv_after = _frag_from_base(
+        base_gv + mwin_new, free_gv - mask_new.sum(axis=1), metric, vg[new_gpu]
+    )
+    total = f.sum() - f[rg] + f2 + f_gv_after - f_gv_before      # (C,)
+
+    # -- canonical choice: lex-min (total F, victim gpu, victim anchor) -----
+    vic_anchor = tables.profile_anchors[kc, rp, ra]              # (C,)
+    cmask = present & ok_req & ok_vic & want
+    for val in (total, rg.astype(jnp.float32), vic_anchor.astype(jnp.float32)):
+        masked = jnp.where(cmask, val, _BIG)
+        cmask = cmask & (masked == masked.min())
+    j = jnp.argmax(cmask)
+    return MigrationResult(
+        mig=cmask[j],
+        gpu=rg[j],
+        aidx=aidx_req[j].astype(jnp.int32),
+        vic_row=(j // cols).astype(jnp.int32),
+        vic_col=(j % cols).astype(jnp.int32),
+        vic_gpu=rg[j],
+        vic_anchor=vic_anchor[j],
+        vic_pid=rp[j],
+        new_gpu=new_gpu[j].astype(jnp.int32),
+        new_aidx=new_aidx[j].astype(jnp.int32),
+        new_anchor=tables.profile_anchors[kv[j], rp[j], new_aidx[j]],
+        old_mask=rm[j],
+        old_mwin=mwin_vic[j],
+        new_mask=mask_new[j],
+        new_mwin=mwin_new[j],
+    )
+
+
+# ---------------------------------------------------------------------------
+# Single-decision entry point
+# ---------------------------------------------------------------------------
+
+
+class PolicyDecision(NamedTuple):
+    """One placement decision, migration included (``-1`` where n/a)."""
+
+    gpu: jax.Array
+    anchor: jax.Array
+    ok: jax.Array
+    mig: jax.Array
+    vic_gpu: jax.Array
+    vic_anchor: jax.Array
+    new_gpu: jax.Array
+    new_anchor: jax.Array
+
+
+def policy_select_full(
     occ: jax.Array,
     profile_id: jax.Array,
     policy: PolicyLike,
     metric: str = "blocked",
     spec: Optional[mig.ClusterSpec] = None,
     cursor: int = 0,
-) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """One placement decision on a raw occupancy: ``(gpu, anchor, accepted)``.
+    workloads: Optional[Sequence[Tuple[int, int, int]]] = None,
+) -> PolicyDecision:
+    """One placement decision on a raw occupancy, defrag search included.
 
-    Lowers ``policy`` (a registered name or an ad-hoc
-    :class:`~repro.core.policy.PolicySpec`) exactly like the scan step (via
-    the derived ``base``/``free`` state) and matches the corresponding host
-    ``Scheduler.select`` — including rejects — for every batched-capable
-    registered policy.  ``spec`` defaults to a homogeneous A100-80GB fleet
-    of ``occ.shape[0]`` GPUs; ``cursor`` is the rotation start of stateful
-    policies (``SpecScheduler._next``).
+    ``workloads`` lists the running workloads as ``(gpu, profile_id,
+    anchor)`` triples — the allocation table a defrag spec's migration
+    search needs (victims).  It is optional (and ignored) for non-defrag
+    specs; a defrag spec with no workloads simply has no migration
+    candidates.  Matches the host compilation
+    (:class:`repro.core.schedulers.MFIDefrag` with an unbounded candidate
+    budget) exactly, migration choice included.
     """
     pspec = resolve(policy, engine="batched")
     spec = spec if spec is not None else _default_spec(int(occ.shape[0]))
@@ -374,20 +769,86 @@ def policy_select(
     free = tables.slices[midx] - occ.sum(axis=1).astype(jnp.int32)
     vg = tables.V[midx]
     f = _frag_from_base(base, free, metric, vg)
+    cur = jnp.int32(cursor)
     gpu, aidx, ok = _select(
-        pspec, base, free, f, metric, tables, midx,
-        vg, profile_id, jnp.int32(cursor),
+        pspec, base, free, f, metric, tables, midx, vg, profile_id, cur
     )
+    neg1 = jnp.int32(-1)
+    mig_out = (jnp.asarray(False), neg1, neg1, neg1, neg1)
+    if pspec.defrag:
+        wl = list(workloads) if workloads else []
+        cols = max(1, len(wl))
+        ring_gpu = np.zeros((1, cols), np.int32)
+        ring_mask = np.zeros((1, cols, int(tables.W.shape[2])), np.int32)
+        ring_pid = np.zeros((1, cols), np.int32)
+        ring_aidx = np.zeros((1, cols), np.int32)
+        for i, (g, p, anchor) in enumerate(wl):
+            model = spec.model_of(int(g))
+            j = model.profiles[int(p)].anchors.index(int(anchor))
+            m = model.profiles[int(p)].mem
+            ring_gpu[0, i] = g
+            ring_mask[0, i, anchor : anchor + m] = 1
+            ring_pid[0, i] = p
+            ring_aidx[0, i] = j
+        res = _migrate_search(
+            pspec, metric, tables, midx, vg, base, free, f,
+            jnp.asarray(ring_gpu), jnp.asarray(ring_mask),
+            jnp.asarray(ring_pid), jnp.asarray(ring_aidx),
+            profile_id, cur, want=~ok,
+        )
+        gpu = jnp.where(res.mig, res.gpu, gpu)
+        aidx = jnp.where(res.mig, res.aidx, aidx)
+        ok = ok | res.mig
+        mig_out = (
+            res.mig,
+            jnp.where(res.mig, res.vic_gpu, neg1),
+            jnp.where(res.mig, res.vic_anchor, neg1),
+            jnp.where(res.mig, res.new_gpu, neg1),
+            jnp.where(res.mig, res.new_anchor, neg1),
+        )
     anchor = jnp.where(ok, tables.profile_anchors[midx[gpu], profile_id, aidx], -1)
-    return (
-        jnp.where(ok, gpu, -1).astype(jnp.int32),
-        anchor.astype(jnp.int32),
-        ok,
+    return PolicyDecision(
+        gpu=jnp.where(ok, gpu, -1).astype(jnp.int32),
+        anchor=anchor.astype(jnp.int32),
+        ok=ok,
+        mig=mig_out[0],
+        vic_gpu=mig_out[1],
+        vic_anchor=mig_out[2],
+        new_gpu=mig_out[3],
+        new_anchor=mig_out[4],
     )
+
+
+def policy_select(
+    occ: jax.Array,
+    profile_id: jax.Array,
+    policy: PolicyLike,
+    metric: str = "blocked",
+    spec: Optional[mig.ClusterSpec] = None,
+    cursor: int = 0,
+    workloads: Optional[Sequence[Tuple[int, int, int]]] = None,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One placement decision on a raw occupancy: ``(gpu, anchor, accepted)``.
+
+    Lowers ``policy`` (a registered name or an ad-hoc
+    :class:`~repro.core.policy.PolicySpec`) exactly like the scan step (via
+    the derived ``base``/``free`` state) and matches the corresponding host
+    ``Scheduler.select`` — including rejects — for every batched-capable
+    registered policy.  ``spec`` defaults to a homogeneous A100-80GB fleet
+    of ``occ.shape[0]`` GPUs; ``cursor`` is the rotation start of stateful
+    policies (``SpecScheduler._next``); ``workloads`` supplies the running
+    allocations a defrag spec's migration search considers (see
+    :func:`policy_select_full`, which also reports the chosen migration).
+    """
+    d = policy_select_full(
+        occ, profile_id, policy, metric=metric, spec=spec, cursor=cursor,
+        workloads=workloads,
+    )
+    return d.gpu, d.anchor, d.ok
 
 
 # ---------------------------------------------------------------------------
-# Scan state and event step
+# Scan state and the staged event step
 # ---------------------------------------------------------------------------
 
 
@@ -399,6 +860,8 @@ class ReplicaState(NamedTuple):
     rr: jax.Array         # () int32 — RoundRobin cursor
     ring_gpu: jax.Array   # (K+2, E) int32 — expiry ring, keyed end_slot % K
     ring_mask: jax.Array  # (K+2, E, S) int32
+    ring_pid: jax.Array   # (K+2, E) int32 — defrag specs only, else None
+    ring_aidx: jax.Array  # (K+2, E) int32 — defrag specs only, else None
 
 
 class EventStream(NamedTuple):
@@ -426,14 +889,29 @@ class EventMeta(NamedTuple):
 
 class EventTrace(NamedTuple):
     """Per-event scan outputs, each ``(E_max, R)``; counters and metric sums
-    are reduced host-side against the host-known flags of the stream."""
+    are reduced host-side against the host-known flags of the stream.
+
+    Fields past ``aidx`` are compiled in per configuration and ``None``
+    otherwise: the slot-boundary metrics for protocols with
+    ``boundary_metrics`` (steady), the ``post_*`` metrics for protocols
+    with ``post_metrics`` (cumulative), the ``mig_*`` fields for defrag
+    specs (the victim's old placement and its new one).
+    """
 
     ok: jax.Array        # arrival accepted
     gpu: jax.Array       # chosen GPU (undefined when not accepted)
     aidx: jax.Array      # chosen anchor index (undefined when not accepted)
-    free_sum: jax.Array  # Σ free slices at slot boundary (pre-drain)
-    active: jax.Array    # active-GPU count at slot boundary (pre-drain)
-    frag: jax.Array      # cluster-mean F at slot boundary (pre-drain)
+    free_sum: jax.Array = None  # Σ free slices at slot boundary (pre-drain)
+    active: jax.Array = None    # active-GPU count at slot boundary (pre-drain)
+    frag: jax.Array = None      # cluster-mean F at slot boundary (pre-drain)
+    post_free: jax.Array = None    # Σ free slices after the commit
+    post_active: jax.Array = None  # active-GPU count after the commit
+    post_frag: jax.Array = None    # cluster-mean F after the commit
+    mig: jax.Array = None          # a migration was committed at this event
+    mig_from_gpu: jax.Array = None     # victim's old GPU (-1 when no mig)
+    mig_from_anchor: jax.Array = None  # victim's old anchor value
+    mig_to_gpu: jax.Array = None       # victim's new GPU
+    mig_to_anchor: jax.Array = None    # victim's new anchor value
 
 
 def _init_state(
@@ -442,6 +920,7 @@ def _init_state(
     ring_rows: int,
     ring_cols: int,
     track_occ: bool,
+    track_alloc: bool,
 ) -> ReplicaState:
     num_gpus = midx.shape[0]
     s = tables.W.shape[2]
@@ -454,87 +933,225 @@ def _init_state(
         rr=jnp.int32(0),
         ring_gpu=jnp.zeros((ring_rows, ring_cols), jnp.int32),
         ring_mask=jnp.zeros((ring_rows, ring_cols, s), jnp.int32),
+        ring_pid=jnp.zeros((ring_rows, ring_cols), jnp.int32) if track_alloc else None,
+        ring_aidx=jnp.zeros((ring_rows, ring_cols), jnp.int32) if track_alloc else None,
     )
 
 
-def _event_step(st: ReplicaState, x, *, spec, metric, frag_fn, tables, midx, vg):
-    pid, exp_row, exp_col, drain_row, new_slot = x
+@dataclasses.dataclass(frozen=True)
+class EngineCore:
+    """The staged scan body: one event step, composed from stages.
 
-    # 1. slot-boundary metrics (state == end of slot t-1); reduced host-side
-    frag = st.f.mean()
-    free_sum = st.free.sum()
-    active = (st.free < tables.slices[midx]).sum()
+    Static configuration (``spec``, ``protocol``, ``metric``) selects which
+    stages are compiled in; the array members (stacked tables, model-index
+    gather, per-GPU window sizes) are closed over as constants.  Stage
+    order within one event is the semantic order of the simulators:
+    *measure* the just-finished slot (steady), *expire* this slot's ring
+    row, decode the *arrival*, *select*, *migrate* (defrag specs, on
+    reject), *commit*, and *measure* the post-commit state (cumulative).
+    """
 
-    # 2. drain this slot's expiry-ring row (first event of the slot only)
-    ns = new_slot.astype(jnp.int32)
-    rel_gpu = st.ring_gpu[drain_row]  # (E,)
-    rel_mask = st.ring_mask[drain_row] * ns  # (E, S)
-    occ = None if st.occ is None else st.occ.at[rel_gpu].add(-rel_mask)
-    rel_win = jnp.einsum(
-        "es,ens->en", rel_mask.astype(jnp.float32), tables.W[midx[rel_gpu]]
-    )  # (E, N) — window counts each release frees, per its GPU's model
-    base = st.base.at[rel_gpu].add(-rel_win)
-    free = st.free.at[rel_gpu].add(rel_mask.sum(axis=1))
-    # rescore exactly the touched rows — through the Pallas kernel when it
-    # is routed in (occ is materialized then), else from the window counts
-    f = st.f.at[rel_gpu].set(
-        frag_fn(occ[rel_gpu])
-        if frag_fn is not None
-        else _frag_from_base(base[rel_gpu], free[rel_gpu], metric, vg[rel_gpu])
-    )
-    ring_mask = st.ring_mask.at[drain_row].set(st.ring_mask[drain_row] * (1 - ns))
+    spec: PolicySpec
+    protocol: Protocol
+    metric: str
+    tables: SpecTables
+    midx: jax.Array
+    vg: jax.Array
+    frag_fn: Optional[object] = None
 
-    # 3. place (or reject) the arrival; pid == -1 lanes are no-ops
-    valid = pid >= 0
-    pid_c = jnp.maximum(pid, 0)
-    gpu, aidx, ok = _select(
-        spec, base, free, f, metric, tables, midx, vg, pid_c, st.rr
-    )
-    ok = ok & valid
+    # -- stages --------------------------------------------------------------
+    def _stage_boundary_measure(self, st: ReplicaState):
+        """Slot-boundary metrics (state == end of slot t-1); reduced
+        host-side against the ``sample`` flags of the stream."""
+        frag = st.f.mean()
+        free_sum = st.free.sum()
+        active = (st.free < self.tables.slices[self.midx]).sum()
+        return frag, free_sum, active
 
-    oki = ok.astype(jnp.int32)
-    gpu_c = jnp.where(ok, gpu, 0).astype(jnp.int32)
-    kg = midx[gpu_c]  # chosen GPU's model index
-    mask = tables.profile_masks[kg, pid_c, aidx] * oki  # (S,)
-    mwin = tables.maskwin[kg, pid_c, aidx] * oki.astype(jnp.float32)  # (N,)
-    occ = None if occ is None else occ.at[gpu_c].add(mask)
-    base = base.at[gpu_c].add(mwin)
-    free = free.at[gpu_c].add(-mask.sum())
-    f = f.at[gpu_c].set(
-        frag_fn(occ[gpu_c][None])[0]
-        if frag_fn is not None
-        else _frag_from_base(
-            base[gpu_c][None], free[gpu_c][None], metric, vg[gpu_c][None]
-        )[0]
-    )
-    rr = st.rr
-    if spec.stateful_cursor:  # advance the cursor past the chosen GPU on accept
-        rr = jnp.where(ok, (gpu_c + 1) % midx.shape[0], rr).astype(jnp.int32)
-    ring_gpu = st.ring_gpu.at[exp_row, exp_col].set(
-        jnp.where(ok, gpu_c, st.ring_gpu[exp_row, exp_col])
-    )
-    ring_mask = ring_mask.at[exp_row, exp_col].add(mask)
+    def _stage_expire(self, st: ReplicaState, drain_row, new_slot):
+        """Drain this slot's expiry-ring row (first event of the slot only)."""
+        ns = new_slot.astype(jnp.int32)
+        rel_gpu = st.ring_gpu[drain_row]  # (E,)
+        rel_mask = st.ring_mask[drain_row] * ns  # (E, S)
+        occ = None if st.occ is None else st.occ.at[rel_gpu].add(-rel_mask)
+        rel_win = jnp.einsum(
+            "es,ens->en", rel_mask.astype(jnp.float32), self.tables.W[self.midx[rel_gpu]]
+        )  # (E, N) — window counts each release frees, per its GPU's model
+        base = st.base.at[rel_gpu].add(-rel_win)
+        free = st.free.at[rel_gpu].add(rel_mask.sum(axis=1))
+        # rescore exactly the touched rows — through the Pallas kernel when it
+        # is routed in (occ is materialized then), else from the window counts
+        f = st.f.at[rel_gpu].set(
+            self.frag_fn(occ[rel_gpu])
+            if self.frag_fn is not None
+            else _frag_from_base(
+                base[rel_gpu], free[rel_gpu], self.metric, self.vg[rel_gpu]
+            )
+        )
+        ring_mask = st.ring_mask.at[drain_row].set(st.ring_mask[drain_row] * (1 - ns))
+        return st._replace(
+            occ=occ, base=base, free=free, f=f, ring_mask=ring_mask
+        )
 
-    st = ReplicaState(
-        occ=occ, base=base, free=free, f=f, rr=rr,
-        ring_gpu=ring_gpu, ring_mask=ring_mask,
-    )
-    trace = EventTrace(
-        ok=ok,
-        gpu=gpu_c,
-        aidx=aidx.astype(jnp.int32),
-        free_sum=free_sum,
-        active=active,
-        frag=frag,
-    )
-    return st, trace
+    def _stage_select(self, st: ReplicaState, pid_c, valid):
+        """Place (or reject) the arrival; ``pid == -1`` lanes are no-ops."""
+        gpu, aidx, ok = _select(
+            self.spec, st.base, st.free, st.f, self.metric, self.tables,
+            self.midx, self.vg, pid_c, st.rr,
+        )
+        return gpu, aidx, ok & valid
+
+    def _stage_migrate(self, st: ReplicaState, pid_c, valid, gpu, aidx, ok):
+        """Defrag search on reject; commits the victim's move in place."""
+        res = _migrate_search(
+            self.spec, self.metric, self.tables, self.midx, self.vg,
+            st.base, st.free, st.f,
+            st.ring_gpu, st.ring_mask, st.ring_pid, st.ring_aidx,
+            pid_c, st.rr, want=valid & ~ok,
+        )
+        mi = res.mig.astype(jnp.int32)
+        mf = res.mig.astype(jnp.float32)
+        base = st.base.at[res.vic_gpu].add(-res.old_mwin * mf)
+        base = base.at[res.new_gpu].add(res.new_mwin * mf)
+        free = st.free.at[res.vic_gpu].add(res.old_mask.sum() * mi)
+        free = free.at[res.new_gpu].add(-res.new_mask.sum() * mi)
+        occ = st.occ
+        if occ is not None:
+            occ = occ.at[res.vic_gpu].add(-res.old_mask * mi)
+            occ = occ.at[res.new_gpu].add(res.new_mask * mi)
+        rc = (res.vic_row, res.vic_col)
+        ring_mask = st.ring_mask.at[rc].add((res.new_mask - res.old_mask) * mi)
+        ring_gpu = st.ring_gpu.at[rc].set(
+            jnp.where(res.mig, res.new_gpu, st.ring_gpu[rc])
+        )
+        ring_aidx = st.ring_aidx.at[rc].set(
+            jnp.where(res.mig, res.new_aidx, st.ring_aidx[rc])
+        )
+        st = st._replace(
+            occ=occ, base=base, free=free,
+            ring_gpu=ring_gpu, ring_mask=ring_mask, ring_aidx=ring_aidx,
+        )
+        gpu = jnp.where(res.mig, res.gpu, gpu)
+        aidx = jnp.where(res.mig, res.aidx, aidx)
+        ok = ok | res.mig
+        return st, gpu, aidx, ok, res
+
+    def _stage_commit(
+        self, st: ReplicaState, pid_c, gpu, aidx, ok, exp_row, exp_col,
+        mig_res: Optional[MigrationResult],
+    ):
+        """Commit the accepted placement: occupancy/window/free updates, the
+        expiry-ring insert, the rescore of touched rows, the cursor."""
+        tables, midx, vg = self.tables, self.midx, self.vg
+        oki = ok.astype(jnp.int32)
+        gpu_c = jnp.where(ok, gpu, 0).astype(jnp.int32)
+        kg = midx[gpu_c]  # chosen GPU's model index
+        mask = tables.profile_masks[kg, pid_c, aidx] * oki  # (S,)
+        mwin = tables.maskwin[kg, pid_c, aidx] * oki.astype(jnp.float32)  # (N,)
+        occ = None if st.occ is None else st.occ.at[gpu_c].add(mask)
+        base = st.base.at[gpu_c].add(mwin)
+        free = st.free.at[gpu_c].add(-mask.sum())
+        f = st.f.at[gpu_c].set(
+            self.frag_fn(occ[gpu_c][None])[0]
+            if self.frag_fn is not None
+            else _frag_from_base(
+                base[gpu_c][None], free[gpu_c][None], self.metric, vg[gpu_c][None]
+            )[0]
+        )
+        if mig_res is not None:
+            # rescore the victim's landing GPU too (its old GPU is gpu_c)
+            g2 = jnp.where(mig_res.mig, mig_res.new_gpu, gpu_c)
+            f = f.at[g2].set(
+                self.frag_fn(occ[g2][None])[0]
+                if self.frag_fn is not None
+                else _frag_from_base(
+                    base[g2][None], free[g2][None], self.metric, vg[g2][None]
+                )[0]
+            )
+        rr = st.rr
+        if self.spec.stateful_cursor:  # advance the cursor past the chosen GPU
+            rr = jnp.where(ok, (gpu_c + 1) % midx.shape[0], rr).astype(jnp.int32)
+        ring_gpu = st.ring_gpu.at[exp_row, exp_col].set(
+            jnp.where(ok, gpu_c, st.ring_gpu[exp_row, exp_col])
+        )
+        ring_mask = st.ring_mask.at[exp_row, exp_col].add(mask)
+        ring_pid, ring_aidx = st.ring_pid, st.ring_aidx
+        if ring_pid is not None:
+            ring_pid = ring_pid.at[exp_row, exp_col].set(
+                jnp.where(ok, pid_c, ring_pid[exp_row, exp_col])
+            )
+            ring_aidx = ring_aidx.at[exp_row, exp_col].set(
+                jnp.where(ok, aidx.astype(jnp.int32), ring_aidx[exp_row, exp_col])
+            )
+        return ReplicaState(
+            occ=occ, base=base, free=free, f=f, rr=rr,
+            ring_gpu=ring_gpu, ring_mask=ring_mask,
+            ring_pid=ring_pid, ring_aidx=ring_aidx,
+        )
+
+    def _stage_post_measure(self, st: ReplicaState):
+        """Post-commit metrics (the cumulative protocol samples every event)."""
+        return st.f.mean(), st.free.sum(), (st.free < self.tables.slices[self.midx]).sum()
+
+    # -- the composed step ---------------------------------------------------
+    def step(self, st: ReplicaState, x):
+        pid, exp_row, exp_col, drain_row, new_slot = x
+
+        frag = free_sum = active = None
+        if self.protocol.boundary_metrics:
+            frag, free_sum, active = self._stage_boundary_measure(st)
+
+        st = self._stage_expire(st, drain_row, new_slot)
+
+        valid = pid >= 0
+        pid_c = jnp.maximum(pid, 0)
+        gpu, aidx, ok = self._stage_select(st, pid_c, valid)
+
+        mig_res = None
+        if self.spec.defrag:
+            st, gpu, aidx, ok, mig_res = self._stage_migrate(
+                st, pid_c, valid, gpu, aidx, ok
+            )
+
+        st = self._stage_commit(st, pid_c, gpu, aidx, ok, exp_row, exp_col, mig_res)
+
+        post_frag = post_free = post_active = None
+        if self.protocol.post_metrics:
+            post_frag, post_free, post_active = self._stage_post_measure(st)
+
+        neg1 = jnp.int32(-1)
+        trace = EventTrace(
+            ok=ok,
+            gpu=jnp.where(ok, gpu, 0).astype(jnp.int32),
+            aidx=aidx.astype(jnp.int32),
+            free_sum=free_sum,
+            active=active,
+            frag=frag,
+            post_free=post_free,
+            post_active=post_active,
+            post_frag=post_frag,
+            mig=None if mig_res is None else mig_res.mig,
+            mig_from_gpu=None if mig_res is None else jnp.where(
+                mig_res.mig, mig_res.vic_gpu, neg1
+            ),
+            mig_from_anchor=None if mig_res is None else jnp.where(
+                mig_res.mig, mig_res.vic_anchor, neg1
+            ),
+            mig_to_gpu=None if mig_res is None else jnp.where(
+                mig_res.mig, mig_res.new_gpu, neg1
+            ),
+            mig_to_anchor=None if mig_res is None else jnp.where(
+                mig_res.mig, mig_res.new_anchor, neg1
+            ),
+        )
+        return st, trace
 
 
 @functools.partial(
     jax.jit,
     static_argnames=(
         "policy", "metric", "num_gpus", "ring_rows", "ring_cols",
-        "use_kernel", "kernel_model",
+        "use_kernel", "kernel_model", "protocol",
     ),
 )
 def _simulate(
@@ -547,11 +1164,13 @@ def _simulate(
     ring_cols: int,
     use_kernel: bool,
     kernel_model: Optional[mig.DeviceModel] = None,
+    protocol: Union[str, Protocol] = "steady",
     midx: Optional[jax.Array] = None,
     tables: Optional[SpecTables] = None,
 ) -> Tuple[ReplicaState, EventTrace]:
     runs = events.pid.shape[1]
     pspec = resolve(policy, engine="batched")
+    proto = resolve_protocol(protocol)
     if tables is None:  # homogeneous A100-80GB default
         cspec = _default_spec(num_gpus)
         tables = spec_tables(cspec)
@@ -562,16 +1181,17 @@ def _simulate(
         else None
     )
     vg = tables.V[midx]  # (M, N) per-GPU window sizes, gathered once
-    step = jax.vmap(
-        functools.partial(
-            _event_step, spec=pspec, metric=metric, frag_fn=frag_fn,
-            tables=tables, midx=midx, vg=vg,
-        ),
-        in_axes=(0, 0),
+    core = EngineCore(
+        spec=pspec, protocol=proto, metric=metric, tables=tables,
+        midx=midx, vg=vg, frag_fn=frag_fn,
     )
+    step = jax.vmap(core.step, in_axes=(0, 0))
     init = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (runs,) + x.shape),
-        _init_state(tables, midx, ring_rows, ring_cols, track_occ=use_kernel),
+        _init_state(
+            tables, midx, ring_rows, ring_cols,
+            track_occ=use_kernel, track_alloc=pspec.defrag,
+        ),
     )
     # sample/measuring are host-side reduction flags — never shipped to the scan
     xs = (events.pid, events.exp_row, events.exp_col, events.drain_row, events.new_slot)
@@ -595,10 +1215,29 @@ def _rank_within_groups(keys: np.ndarray) -> np.ndarray:
     return ranks
 
 
+def _ring_columns(
+    is_arrival: np.ndarray, end: np.ndarray, span: int
+) -> Tuple[np.ndarray, int]:
+    """Collision-free ring columns: rank among same-(replica, end) arrivals.
+
+    ``span`` must exceed every end slot so the per-replica key blocks never
+    overlap.  Returns ``(exp_col, ring_cols)``.
+    """
+    runs, e_max = is_arrival.shape
+    exp_col = np.zeros((runs, e_max), dtype=np.int32)
+    flat = np.flatnonzero(is_arrival)  # C-order == per-replica arrival order
+    keys = (np.repeat(np.arange(runs), e_max)[flat].astype(np.int64) * span
+            + end.ravel()[flat])
+    ranks = _rank_within_groups(keys)
+    exp_col.ravel()[flat] = ranks
+    ring_cols = max(1, int(ranks.max()) + 1 if len(ranks) else 1)
+    return exp_col, ring_cols
+
+
 def presample_arrivals(
     cfg: SimConfig, runs: int, seed=None
 ) -> Tuple[EventStream, EventMeta, int, int]:
-    """Build per-replica event streams on host.
+    """Build per-replica steady-protocol event streams on host.
 
     Returns ``(events, meta, ring_rows, ring_cols)``.  One event per
     Poisson arrival plus one heartbeat per empty slot (so consecutive
@@ -607,6 +1246,7 @@ def presample_arrivals(
     lanes.
     """
     rng = np.random.default_rng(cfg.seed if seed is None else seed)
+    probs = request_probs(cfg)
     T, warm, meas, rate = steady_params(cfg)
     total_slots = warm + meas
     ring_k = T + 1  # end slots live in (t, t + T] — one ring revolution
@@ -629,23 +1269,14 @@ def presample_arrivals(
         )
         is_arr = within < counts[r, slots_r]
         na = int(is_arr.sum())
-        pid[r, :n][is_arr] = distributions.sample_profiles(
-            cfg.distribution, na, rng
-        )
+        pid[r, :n][is_arr] = distributions.sample_profile_probs(probs, na, rng)
         slot[r, :n] = slots_r
         new_slot[r, :n] = within == 0
         end[r, :n][is_arr] = slots_r[is_arr] + rng.integers(1, T + 1, size=na)
         new_slot[r, n] = True  # sentinel: drains/samples the final slot
 
     is_arrival = pid >= 0
-    # collision-free ring columns: rank among same-(replica, end-slot) arrivals
-    exp_col = np.zeros((runs, e_max), dtype=np.int32)
-    flat = np.flatnonzero(is_arrival)  # C-order == per-replica arrival order
-    keys = (np.repeat(np.arange(runs), e_max)[flat].astype(np.int64)
-            * (total_slots + T + 1) + end.ravel()[flat])
-    ranks = _rank_within_groups(keys)
-    exp_col.ravel()[flat] = ranks
-    ring_cols = max(1, int(ranks.max()) + 1 if len(ranks) else 1)
+    exp_col, ring_cols = _ring_columns(is_arrival, end, total_slots + T + 1)
 
     exp_row = np.where(is_arrival, end % ring_k, ring_k + 1).astype(np.int32)
     drain_row = (slot % ring_k).astype(np.int32)
@@ -668,25 +1299,109 @@ def presample_arrivals(
     return events, meta, ring_k + 2, ring_cols
 
 
+def presample_cumulative(
+    cfg: SimConfig, runs: int, seed=None
+) -> Tuple[EventStream, EventMeta, int, int]:
+    """Build per-replica cumulative-protocol event streams on host.
+
+    One arrival per slot (the paper-literal protocol — no heartbeats, no
+    padding), durations ``U[1, T]``.  Replica ``r`` consumes the *same*
+    RNG stream as the Python simulator's run ``r`` (seed
+    ``cfg.seed + r * 9973``, profiles then durations), so
+    :func:`run_batched` and :func:`repro.sim.simulator.run_many` simulate
+    identical arrival processes per seed — the cross-engine cumulative
+    parity is same-stream, not just statistical.
+    """
+    base_seed = cfg.seed if seed is None else seed
+    spec = cfg.spec()
+    cap = spec.total_mem_slices
+    probs = request_probs(cfg)
+    mean_mem = distributions.mean_mem_from_probs(probs)
+    T = int(np.ceil(cap / mean_mem))
+    n = int(np.ceil(cfg.max_demand * cap / mean_mem)) + 20
+    ring_k = T + 1
+
+    pid = np.zeros((runs, n), dtype=np.int32)
+    end = np.zeros((runs, n), dtype=np.int64)
+    for r in range(runs):
+        rng = np.random.default_rng(base_seed + r * 9973)
+        pid[r] = distributions.sample_profile_probs(probs, n, rng)
+        end[r] = np.arange(n) + rng.integers(1, T + 1, size=n)
+
+    slot = np.tile(np.arange(n, dtype=np.int32), (runs, 1))
+    new_slot = np.ones((runs, n), dtype=bool)
+    exp_col, ring_cols = _ring_columns(np.ones_like(pid, bool), end, n + T + 1)
+    exp_row = (end % ring_k).astype(np.int32)
+    drain_row = (slot % ring_k).astype(np.int32)
+
+    events = EventStream(
+        pid=pid.T,
+        exp_row=exp_row.T,
+        exp_col=exp_col.T,
+        drain_row=drain_row.T,
+        new_slot=new_slot.T,
+        sample=np.zeros((n, runs), dtype=bool),
+        measuring=np.ones((n, runs), dtype=bool),
+    )
+    meta = EventMeta(slot=slot.T, end=end.T)
+    return events, meta, ring_k + 2, ring_cols
+
+
+def shard_events(events, runs: int, shard: Optional[bool] = None):
+    """Split the replica axis of a device event stream across devices.
+
+    Replicas are embarrassingly parallel (no cross-replica arithmetic on
+    device), so placing the ``(E_max, R)`` inputs on a 1-D ``replicas``
+    mesh lets XLA partition the whole scan — bitwise-identical results,
+    R/D replicas of work per device.  ``shard=None`` (auto) shards when
+    more than one device is visible and ``runs`` divides evenly; ``True``
+    requires it (raises otherwise); ``False`` disables.
+    """
+    if shard is False:
+        return events
+    devices = jax.devices()
+    if len(devices) <= 1:
+        if shard:
+            raise ValueError(
+                "replica sharding requested but only one device is visible"
+            )
+        return events
+    if runs % len(devices) != 0:
+        if shard:
+            raise ValueError(
+                f"runs={runs} does not divide across {len(devices)} devices"
+            )
+        return events
+    mesh = jax.make_mesh((len(devices),), ("replicas",))
+    sharding = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec(None, "replicas")
+    )
+    return jax.tree.map(lambda x: jax.device_put(x, sharding), events)
+
+
 def run_batched(
     policy: PolicyLike,
     cfg: SimConfig,
     runs: int = 64,
     use_kernel: bool | None = None,
+    shard: Optional[bool] = None,
 ) -> Dict[str, float]:
     """Average ``runs`` replicas in one device program.
 
-    Drop-in for :func:`repro.sim.simulator.run_many` on the steady protocol
-    (same aggregate keys); ``policy`` is any batched-capable registered
+    Drop-in for :func:`repro.sim.simulator.run_many` on both protocols
+    (same aggregate keys; the cumulative protocol additionally returns the
+    demand-grid ``traces``); ``policy`` is any batched-capable registered
     policy name or an ad-hoc :class:`~repro.core.policy.PolicySpec`
     (validated through the registry's single path, like every other entry
-    point).  ``use_kernel`` routes fragmentation-severity sampling through
+    point) — defrag specs included (the migrate stage is compiled into the
+    scan).  ``use_kernel`` routes fragmentation-severity sampling through
     the Pallas ``fragscore`` kernel (default: only on TPU; homogeneous
     specs only — the kernel bakes in one model's placement table).
+    ``shard`` splits the replica axis across visible devices (see
+    :func:`shard_events`; default: auto).
     """
     policy = resolve(policy, engine="batched")
-    if cfg.protocol != "steady":
-        raise ValueError("run_batched implements the steady protocol only")
+    proto = resolve_protocol(cfg.protocol)
     spec = cfg.spec()
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu" and spec.is_homogeneous
@@ -696,10 +1411,14 @@ def run_batched(
             "fragscore kernel bakes in a single placement table)"
         )
 
-    events, _, ring_rows, ring_cols = presample_arrivals(cfg, runs)
+    presample = (
+        presample_arrivals if proto.name == "steady" else presample_cumulative
+    )
+    events, _, ring_rows, ring_cols = presample(cfg, runs)
+    events_dev = shard_events(jax.tree.map(jnp.asarray, events), runs, shard)
     _, trace = jax.device_get(
         _simulate(
-            jax.tree.map(jnp.asarray, events),
+            events_dev,
             policy=policy,
             metric=cfg.metric,
             num_gpus=cfg.num_gpus,
@@ -707,17 +1426,21 @@ def run_batched(
             ring_cols=ring_cols,
             use_kernel=use_kernel,
             kernel_model=spec.models[0] if use_kernel else None,
+            protocol=proto,
             midx=jnp.asarray(spec.model_index),
             tables=spec_tables(spec),
         )
     )
+    if proto.name == "cumulative":
+        return _aggregate_cumulative(events, trace, spec, runs, cfg)
     return aggregate(events, trace, spec, runs)
 
 
 def aggregate(
     events: EventStream, trace: EventTrace, spec, runs: int
 ) -> Dict[str, float]:
-    """Reduce per-event traces against host-known flags to ``run_many`` keys.
+    """Reduce per-event steady traces against host-known flags to
+    ``run_many`` keys.
 
     ``spec`` is the ClusterSpec (or an int GPU count, back-compat).
     """
@@ -748,4 +1471,77 @@ def aggregate(
         "frag_severity": float(frag.mean()),
         "rejects_by_profile": rejects_p / runs,
         "arrivals_by_profile": arrivals_p / runs,
+    }
+
+
+def _aggregate_cumulative(
+    events: EventStream, trace: EventTrace, spec, runs: int, cfg: SimConfig
+) -> Dict[str, float]:
+    """Reduce per-event cumulative traces to ``run_many`` keys + demand-grid
+    traces, replicating the Python simulator's grid-crossing and early-stop
+    semantics exactly (both are host-computable from the presampled pids).
+    """
+    cap = float(spec.total_mem_slices)
+    pid = np.asarray(events.pid)           # (E, R)
+    ok = np.asarray(trace.ok)
+    post_free = np.asarray(trace.post_free)
+    post_active = np.asarray(trace.post_active)
+    post_frag = np.asarray(trace.post_frag)
+    e_max, _ = pid.shape
+
+    frac = np.cumsum(mig.PROFILE_MEM[pid], axis=0) / cap  # (E, R)
+    acc_cum = np.cumsum(ok, axis=0)                       # (E, R)
+    arr_cum = np.arange(1, e_max + 1)[:, None]            # (E, 1)
+    util = (cap - post_free) / cap
+
+    grid = np.asarray(cfg.demand_grid, dtype=np.float64)
+    G = len(grid)
+    keys = (
+        "acceptance_rate", "allocated_workloads", "active_gpus",
+        "utilization", "frag_severity",
+    )
+    per_event = {
+        "acceptance_rate": acc_cum / arr_cum,
+        "allocated_workloads": acc_cum.astype(np.float64),
+        "active_gpus": post_active.astype(np.float64),
+        "utilization": util,
+        "frag_severity": post_frag.astype(np.float64),
+    }
+    traces = {k: np.zeros((G, runs)) for k in keys}
+    for i in range(G):
+        crossed = frac >= grid[i]             # (E, R)
+        hit = crossed.any(axis=0)             # (R,)
+        idx = np.argmax(crossed, axis=0)      # first crossing event (per replica)
+        for k in keys:
+            v = per_event[k][idx, np.arange(runs)]
+            if i > 0:  # tail-fill: an uncrossed point repeats the last recorded
+                v = np.where(hit, v, traces[k][i - 1])
+            else:
+                v = np.where(hit, v, 0.0)
+            traces[k][i] = v
+
+    # early stop: the Python loop breaks once demand reached max_demand AND
+    # every grid point was recorded — both depend only on the pid stream
+    stop_at = max(float(cfg.max_demand), float(grid[-1]) if G else 0.0)
+    stopped = frac >= stop_at
+    stop = np.where(stopped.any(axis=0), np.argmax(stopped, axis=0), e_max - 1)
+    ridx = np.arange(runs)
+    processed = np.arange(e_max)[:, None] <= stop[None, :]  # (E, R)
+
+    arrivals_p = np.stack(
+        [((pid == p) & processed).sum() for p in range(mig.NUM_PROFILES)]
+    )
+    rejects_p = np.stack(
+        [((pid == p) & processed & ~ok).sum() for p in range(mig.NUM_PROFILES)]
+    )
+    return {
+        "acceptance_rate": float(per_event["acceptance_rate"][stop, ridx].mean()),
+        "allocated_workloads": float(acc_cum[stop, ridx].mean()),
+        "active_gpus": float(post_active[stop, ridx].mean()),
+        "utilization": float(util[stop, ridx].mean()),
+        "frag_severity": float(post_frag[stop, ridx].mean()),
+        "rejects_by_profile": rejects_p / runs,
+        "arrivals_by_profile": arrivals_p / runs,
+        "traces": {k: v.mean(axis=1) for k, v in traces.items()},
+        "demand_grid": grid,
     }

@@ -4,21 +4,27 @@ The batched engine (:mod:`repro.sim.batched`) emits one decision per event
 (``EventTrace``); together with the host-known stream annotations
 (``EventStream``/``EventMeta``) the full occupancy trajectory of every
 replica is reproducible in plain numpy.  :func:`replay` re-executes the
-commits and releases and asserts the scheduling invariants the engine must
-uphold:
+commits, releases — and, for defrag specs, the migrations — and asserts
+the scheduling invariants the engine must uphold:
 
 * an accepted placement uses a *legal placement-table anchor* for its
   profile **on the model of the chosen GPU** (Table I on the A100-80GB,
   the model's own table on mixed fleets);
 * it never *double-books* a memory slice (its window is fully free);
 * a *release after expiry restores the exact pre-allocation occupancy*
-  (the window is fully occupied right before release and fully free after).
+  (the window is fully occupied right before release and fully free after);
+* a *migration never double-books or strands a workload*: the victim named
+  by the trace is a uniquely identified running workload, its old window
+  is fully occupied before the move, its new window is legal for its class
+  on the target model and fully free, and the workload stays tracked (same
+  expiry) at its new placement.
 
 :func:`host_decisions` additionally drives the *Python* schedulers over the
 same presampled event stream, producing a decision trace that must match
-the device trace decision-for-decision (the engines are exact-parity per
-step, and the stream fixes the arrival process) — the strongest
-cross-engine check we have, and it works on any ClusterSpec.
+the device trace decision-for-decision — migrations included
+(:func:`host_decisions_full` also returns the chosen migrations) — the
+strongest cross-engine check we have, and it works on any ClusterSpec and
+either protocol's stream.
 
 Tests use this to cross-check the device scan against an independent
 host implementation; it is also handy for debugging new policies.
@@ -26,7 +32,7 @@ host implementation; it is also handy for debugging new policies.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
@@ -43,6 +49,16 @@ def _spec_or_default(spec: Optional[mig.ClusterSpec], num_gpus: int) -> mig.Clus
     return spec
 
 
+class _Alive(NamedTuple):
+    """One still-allocated workload during a replay walk."""
+
+    end: int
+    gpu: int
+    anchor: int
+    mem: int
+    pid: int
+
+
 def _walk(
     events: EventStream,
     meta: EventMeta,
@@ -53,8 +69,9 @@ def _walk(
 ):
     """Shared event walk: returns (final_occ (R, M, S), alive sets per replica).
 
-    Each alive entry is ``(end_slot, gpu, anchor, mem)`` for a workload
-    still allocated when the stream ends.
+    Each alive entry is an :class:`_Alive` for a workload still allocated
+    when the stream ends.  Migrations recorded in the trace are re-executed
+    (and, with ``check``, validated) exactly like commits and releases.
     """
     spec = _spec_or_default(spec, num_gpus)
     e_max, runs = np.asarray(events.pid).shape
@@ -65,27 +82,68 @@ def _walk(
     aidx = np.asarray(trace.aidx)
     slot = np.asarray(meta.slot)
     end = np.asarray(meta.end)
+    has_mig = trace.mig is not None
+    if has_mig:
+        mig_flag = np.asarray(trace.mig)
+        mig_from_gpu = np.asarray(trace.mig_from_gpu)
+        mig_from_anchor = np.asarray(trace.mig_from_anchor)
+        mig_to_gpu = np.asarray(trace.mig_to_gpu)
+        mig_to_anchor = np.asarray(trace.mig_to_anchor)
 
     final = np.zeros((runs, num_gpus, spec.num_mem_slices), dtype=np.int32)
     alive_sets = []
     for r in range(runs):
         occ = final[r]
-        alive = []  # (end_slot, gpu, anchor, mem)
+        alive: List[_Alive] = []
         for e in range(e_max):
             if new_slot[e, r]:
                 t = slot[e, r]
-                expired = [w for w in alive if w[0] <= t]
-                alive = [w for w in alive if w[0] > t]
-                for _, g, a, m in expired:
+                expired = [w for w in alive if w.end <= t]
+                alive = [w for w in alive if w.end > t]
+                for w in expired:
                     if check:
-                        assert (occ[g, a : a + m] == 1).all(), (
-                            f"replica {r} event {e}: release of [{a},{a + m}) on "
-                            f"GPU {g} does not match a fully-occupied window"
+                        assert (occ[w.gpu, w.anchor : w.anchor + w.mem] == 1).all(), (
+                            f"replica {r} event {e}: release of "
+                            f"[{w.anchor},{w.anchor + w.mem}) on GPU {w.gpu} "
+                            f"does not match a fully-occupied window"
                         )
-                    occ[g, a : a + m] = 0
+                    occ[w.gpu, w.anchor : w.anchor + w.mem] = 0
             p = pid[e, r]
             if p < 0 or not ok[e, r]:
                 continue
+            if has_mig and mig_flag[e, r]:
+                # the migration commits before the request: find the unique
+                # victim, free its old window, re-place it on the target
+                vg, va = int(mig_from_gpu[e, r]), int(mig_from_anchor[e, r])
+                ng, na = int(mig_to_gpu[e, r]), int(mig_to_anchor[e, r])
+                victims = [
+                    i for i, w in enumerate(alive) if w.gpu == vg and w.anchor == va
+                ]
+                if check:
+                    assert len(victims) == 1, (
+                        f"replica {r} event {e}: migration victim at "
+                        f"GPU {vg} anchor {va} matches {len(victims)} running "
+                        f"workloads (must be exactly one)"
+                    )
+                w = alive[victims[0]]
+                vprof = spec.model_of(ng).profiles[w.pid]
+                if check:
+                    assert (occ[vg, va : va + w.mem] == 1).all(), (
+                        f"replica {r} event {e}: migration evicts a window "
+                        f"that is not fully occupied"
+                    )
+                occ[vg, va : va + w.mem] = 0
+                if check:
+                    assert na in vprof.anchors, (
+                        f"replica {r} event {e}: migration target anchor {na} "
+                        f"illegal for {vprof.name} on {spec.model_of(ng).name}"
+                    )
+                    assert (occ[ng, na : na + vprof.mem] == 0).all(), (
+                        f"replica {r} event {e}: migration double-books "
+                        f"slices on GPU {ng}"
+                    )
+                occ[ng, na : na + vprof.mem] = 1
+                alive[victims[0]] = _Alive(w.end, ng, na, vprof.mem, w.pid)
             g, j = int(gpu[e, r]), int(aidx[e, r])
             prof = spec.model_of(g).profiles[p]
             if check:
@@ -100,7 +158,7 @@ def _walk(
                     f"slices on GPU {g}"
                 )
             occ[g, anchor : anchor + prof.mem] = 1
-            alive.append((int(end[e, r]), g, anchor, prof.mem))
+            alive.append(_Alive(int(end[e, r]), g, anchor, prof.mem, int(p)))
         alive_sets.append(alive)
     return final, alive_sets
 
@@ -116,8 +174,9 @@ def replay(
     """Re-execute a decision trace on host; returns final occupancy (R, M, S).
 
     With ``check=True`` (default), raises ``AssertionError`` on any
-    invariant violation (illegal anchor, double-booking, inexact release).
-    ``spec`` selects the fleet (default: homogeneous A100-80GB).
+    invariant violation (illegal anchor, double-booking, inexact release,
+    inconsistent migration).  ``spec`` selects the fleet (default:
+    homogeneous A100-80GB).
     """
     final, _ = _walk(events, meta, trace, num_gpus, check, spec)
     return final
@@ -134,37 +193,54 @@ def drain_all(
 
     Returns ``(final_occ, drained_occ)``; ``drained_occ`` must be all-zero
     if and only if every release restores its exact allocation window —
-    the end-to-end form of the release-restores-occupancy invariant.
+    the end-to-end form of the release-restores-occupancy invariant (and,
+    for defrag specs, the no-stranded-workload half of the migration
+    invariant: a migrated workload still drains from its *new* placement).
     """
     final, alive_sets = _walk(events, meta, trace, num_gpus, check=True, spec=spec)
     drained = final.copy()
     for r, alive in enumerate(alive_sets):
-        for _, g, a, m in alive:
-            assert (drained[r, g, a : a + m] == 1).all()
-            drained[r, g, a : a + m] = 0
+        for w in alive:
+            assert (drained[r, w.gpu, w.anchor : w.anchor + w.mem] == 1).all()
+            drained[r, w.gpu, w.anchor : w.anchor + w.mem] = 0
     return final, drained
 
 
-def host_decisions(
+class HostTrace(NamedTuple):
+    """Reference decisions of the Python schedulers, shaped ``(E_max, R)``."""
+
+    ok: np.ndarray
+    gpu: np.ndarray
+    anchor: np.ndarray
+    mig: np.ndarray            # a migration accompanied the accept
+    mig_from_gpu: np.ndarray   # victim's old GPU (-1 where no migration)
+    mig_from_anchor: np.ndarray
+    mig_to_gpu: np.ndarray
+    mig_to_anchor: np.ndarray
+
+
+def host_decisions_full(
     events: EventStream,
     meta: EventMeta,
     policy: PolicyLike,
     num_gpus: int,
     metric: str = "blocked",
     spec: Optional[mig.ClusterSpec] = None,
-) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    **scheduler_kwargs,
+) -> HostTrace:
     """Drive the *Python* scheduler over a presampled event stream.
 
     ``policy`` is any registered policy name or ad-hoc
     :class:`~repro.core.policy.PolicySpec` (compiled per replica through
-    the registry).  Returns ``(ok, gpu, anchor)`` arrays shaped like the
-    stream (``(E_max, R)``): the reference decision for every arrival,
-    produced by the host-compiled scheduler on a
-    :class:`repro.core.mig.ClusterState` with the same arrivals, durations
-    and release schedule the batched engine consumed.  Since single-step
-    selection is exact-parity, the device trace must agree
-    element-for-element (``ok`` everywhere; ``gpu`` and ``anchor`` wherever
-    accepted).
+    the registry).  Returns a :class:`HostTrace` with the reference
+    decision for every arrival — and, for defrag schedulers, the chosen
+    migration — produced on a :class:`repro.core.mig.ClusterState` with the
+    same arrivals, durations and release schedule the batched engine
+    consumed.  Since single-step selection is exact-parity, the device
+    trace must agree element-for-element (``ok`` everywhere; ``gpu``,
+    ``anchor`` and the migration wherever accepted).  ``scheduler_kwargs``
+    reach the compiled scheduler (e.g. ``max_candidates=None`` to lift the
+    defrag budget to the batched engine's exhaustive search).
     """
     spec = _spec_or_default(spec, num_gpus)
     e_max, runs = np.asarray(events.pid).shape
@@ -176,9 +252,14 @@ def host_decisions(
     ok = np.zeros((e_max, runs), dtype=bool)
     gpu = np.full((e_max, runs), -1, dtype=np.int32)
     anchor = np.full((e_max, runs), -1, dtype=np.int32)
+    mig_flag = np.zeros((e_max, runs), dtype=bool)
+    mig_fg = np.full((e_max, runs), -1, dtype=np.int32)
+    mig_fa = np.full((e_max, runs), -1, dtype=np.int32)
+    mig_tg = np.full((e_max, runs), -1, dtype=np.int32)
+    mig_ta = np.full((e_max, runs), -1, dtype=np.int32)
     for r in range(runs):
         cluster = mig.ClusterState(spec=spec)
-        scheduler = make_scheduler(policy, metric)
+        scheduler = _make(policy, metric, scheduler_kwargs)
         alive = []  # (end_slot, workload_id)
         for e in range(e_max):
             if new_slot[e, r]:
@@ -192,6 +273,15 @@ def host_decisions(
             sel = scheduler.select(cluster, p)
             if sel is None:
                 continue
+            pending = getattr(scheduler, "pending_migration", None)
+            if pending is not None:
+                vwid, ng, na = pending
+                old_gpu, old_anchor, _ = cluster.migrate(vwid, ng, na)
+                mig_flag[e, r] = True
+                mig_fg[e, r] = old_gpu
+                mig_fa[e, r] = old_anchor
+                mig_tg[e, r] = ng
+                mig_ta[e, r] = na
             g, a = sel
             wid = e  # unique per replica stream
             cluster.allocate(wid, p, g, a)
@@ -199,4 +289,33 @@ def host_decisions(
             ok[e, r] = True
             gpu[e, r] = g
             anchor[e, r] = a
-    return ok, gpu, anchor
+    return HostTrace(ok, gpu, anchor, mig_flag, mig_fg, mig_fa, mig_tg, mig_ta)
+
+
+def _make(policy, metric, scheduler_kwargs):
+    if scheduler_kwargs:
+        from repro.core.policy import resolve
+        from repro.core.schedulers import MFIDefrag
+
+        spec = resolve(policy, engine="python")
+        if spec.defrag:
+            return MFIDefrag(metric=metric, spec=spec, **scheduler_kwargs)
+    return make_scheduler(policy, metric)
+
+
+def host_decisions(
+    events: EventStream,
+    meta: EventMeta,
+    policy: PolicyLike,
+    num_gpus: int,
+    metric: str = "blocked",
+    spec: Optional[mig.ClusterSpec] = None,
+    **scheduler_kwargs,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Back-compat 3-tuple form of :func:`host_decisions_full`:
+    ``(ok, gpu, anchor)`` arrays shaped like the stream (``(E_max, R)``)."""
+    t = host_decisions_full(
+        events, meta, policy, num_gpus, metric=metric, spec=spec,
+        **scheduler_kwargs,
+    )
+    return t.ok, t.gpu, t.anchor

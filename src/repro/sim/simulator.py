@@ -47,6 +47,11 @@ class SimConfig:
     # heterogeneous fleets: a ClusterSpec overrides num_gpus (the paper's
     # homogeneous A100-80GB setup is the default one-model spec)
     cluster_spec: Optional[mig.ClusterSpec] = None
+    # optional per-device-model demand-class mix (model name -> Table-II
+    # distribution name); models not listed keep ``distribution``.  The
+    # effective fleet-wide mix is the capacity-weighted mixture — see
+    # :func:`repro.sim.distributions.resolve_probs`.
+    model_distributions: Optional[Dict[str, str]] = None
     # steady protocol:
     offered_load: float = 0.85  # fraction of slice capacity offered concurrently
     warmup_horizons: int = 3    # warmup = this * T slots
@@ -80,8 +85,17 @@ class SimResult:
     traces: Optional[Dict[str, np.ndarray]] = None
 
 
-def _saturation_horizon(capacity: int, dist: str) -> int:
-    return int(np.ceil(capacity / distributions.mean_mem_demand(dist)))
+def request_probs(cfg: SimConfig) -> np.ndarray:
+    """Effective demand-class probabilities of a configuration.
+
+    The named Table-II mix by default; the capacity-weighted per-model
+    mixture when ``cfg.model_distributions`` is set.  Both engines sample
+    arrivals from this one vector, so per-model mixes stay same-stream
+    comparable across engines.
+    """
+    return distributions.resolve_probs(
+        cfg.distribution, cfg.spec(), cfg.model_distributions
+    )
 
 
 #: slots between metric samples in the steady measurement window
@@ -100,11 +114,17 @@ def steady_params(cfg: SimConfig) -> Tuple[int, int, int, float]:
     model-independent knob on mixed fleets.
     """
     cap = cfg.spec().total_mem_slices
-    mean_mem = distributions.mean_mem_demand(cfg.distribution)
-    T = _saturation_horizon(cap, cfg.distribution)
+    mean_mem = distributions.mean_mem_from_probs(request_probs(cfg))
+    T = int(np.ceil(cap / mean_mem))
     mean_dur = (1 + T) / 2
     rate = cfg.offered_load * cap / (mean_dur * mean_mem)
     return T, cfg.warmup_horizons * T, cfg.measure_horizons * T, rate
+
+
+def _apply_migration(cluster: mig.ClusterState, mig_req) -> None:
+    """Move a defrag scheduler's pending victim to its new placement."""
+    vwid, vg, va = mig_req
+    cluster.migrate(vwid, vg, va)
 
 
 def run_simulation(scheduler: Scheduler, cfg: SimConfig, seed: Optional[int] = None) -> SimResult:
@@ -120,6 +140,7 @@ def _run_steady(scheduler: Scheduler, cfg: SimConfig, seed: int) -> SimResult:
     scheduler.reset()
     spec = cfg.spec()
     cap = spec.total_mem_slices
+    probs = request_probs(cfg)
     T, warm, meas, rate = steady_params(cfg)
 
     cluster = mig.ClusterState(spec=spec)
@@ -136,7 +157,7 @@ def _run_steady(scheduler: Scheduler, cfg: SimConfig, seed: int) -> SimResult:
             _, w = heapq.heappop(expiry)
             cluster.release(w)
         for _ in range(rng.poisson(rate)):
-            pid = int(distributions.sample_profiles(cfg.distribution, 1, rng)[0])
+            pid = int(distributions.sample_profile_probs(probs, 1, rng)[0])
             measuring = t >= warm
             if measuring:
                 arr += 1
@@ -145,13 +166,7 @@ def _run_steady(scheduler: Scheduler, cfg: SimConfig, seed: int) -> SimResult:
             if sel is not None:
                 mig_req = getattr(scheduler, "pending_migration", None)
                 if mig_req is not None:  # mfi-defrag: move the victim first
-                    vwid, vg, va = mig_req
-                    vpid = None
-                    for g in cluster.gpus:
-                        if vwid in g.allocations:
-                            vpid = g.allocations[vwid].profile_id
-                    cluster.release(vwid)
-                    cluster.allocate(vwid, vpid, vg, va)
+                    _apply_migration(cluster, mig_req)
                 cluster.allocate(wid, pid, *sel)
                 heapq.heappush(expiry, (t + int(rng.integers(1, T + 1)), wid))
                 if measuring:
@@ -183,11 +198,12 @@ def _run_cumulative(scheduler: Scheduler, cfg: SimConfig, seed: int) -> SimResul
     scheduler.reset()
     spec = cfg.spec()
     cap = spec.total_mem_slices
-    mean_mem = distributions.mean_mem_demand(cfg.distribution)
-    T = _saturation_horizon(cap, cfg.distribution)
+    probs = request_probs(cfg)
+    mean_mem = distributions.mean_mem_from_probs(probs)
+    T = int(np.ceil(cap / mean_mem))
     n = int(np.ceil(cfg.max_demand * cap / mean_mem)) + 20
 
-    profiles = distributions.sample_profiles(cfg.distribution, n, rng)
+    profiles = distributions.sample_profile_probs(probs, n, rng)
     durations = rng.integers(1, T + 1, size=n)
 
     cluster = mig.ClusterState(spec=spec)
@@ -215,6 +231,9 @@ def _run_cumulative(scheduler: Scheduler, cfg: SimConfig, seed: int) -> SimResul
         cum += mig.PROFILE_MEM[pid]
         sel = scheduler.select(cluster, pid)
         if sel is not None:
+            mig_req = getattr(scheduler, "pending_migration", None)
+            if mig_req is not None:  # mfi-defrag: move the victim first
+                _apply_migration(cluster, mig_req)
             cluster.allocate(w, pid, *sel)
             heapq.heappush(expiry, (t + int(durations[w]), w))
             acc += 1

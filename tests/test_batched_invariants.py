@@ -9,7 +9,11 @@ the device decision trace):
 
 * a scan-step trajectory never double-books a memory slice;
 * accepted placements only use legal Table-I anchors;
-* ``release`` after expiry restores the exact pre-allocation occupancy.
+* ``release`` after expiry restores the exact pre-allocation occupancy;
+* a defrag **migration never double-books or strands a workload**: the
+  victim is a uniquely identified running workload, its evacuated window
+  was fully occupied, its landing window is legal and fully free, and it
+  still drains exactly from its new placement (``drain_all`` ends empty).
 """
 
 import numpy as np
@@ -64,6 +68,20 @@ class TestTrajectoryInvariants:
     @settings(max_examples=6, deadline=None)
     def test_release_restores_exact_occupancy(self, policy, seed):
         events, meta, trace, final, cfg = _run_trace(policy, seed, 0.9)
+        _, drained = replay.drain_all(events, meta, trace, cfg.num_gpus)
+        np.testing.assert_array_equal(drained, 0)
+
+    @given(st.integers(0, 2**16), st.sampled_from([1.0, 1.2, 1.5]))
+    @settings(max_examples=8, deadline=None)
+    def test_migration_never_double_books_or_strands(self, seed, load):
+        """Defrag trajectories: the replay validates every migration (unique
+        victim, fully-occupied evacuated window, legal + free landing
+        window) and `drain_all` proves migrated workloads still expire
+        exactly from their new placements — nothing is stranded."""
+        events, meta, trace, final, cfg = _run_trace("mfi-defrag", seed, load)
+        occ = replay.replay(events, meta, trace, cfg.num_gpus)
+        w = np.asarray(mig.PLACEMENT_MASKS, np.float32)
+        np.testing.assert_allclose(final.base, occ.astype(np.float32) @ w.T)
         _, drained = replay.drain_all(events, meta, trace, cfg.num_gpus)
         np.testing.assert_array_equal(drained, 0)
 

@@ -58,6 +58,9 @@ class TestSingleStepParity:
 
     @pytest.mark.slow
     def test_randomized_decisions_match_python(self):
+        from repro.core.policy import resolve
+        from repro.core.schedulers import MFIDefrag
+
         rng = np.random.default_rng(7)
         checked = 0
         for _ in range(220):
@@ -65,10 +68,21 @@ class TestSingleStepParity:
             cl = _random_cluster(rng, m)
             occ = cl.occupancy_matrix()
             pid = int(rng.integers(0, mig.NUM_PROFILES))
+            workloads = [
+                (g.gpu_id, a.profile_id, a.anchor)
+                for g in cl.gpus
+                for a in g.allocations.values()
+            ]
             for name in BATCHED_POLICIES:
-                ref = make_scheduler(name).select(cl, pid)
+                pspec = resolve(name)
+                sched = (
+                    MFIDefrag(spec=pspec, max_candidates=None)
+                    if pspec.defrag
+                    else make_scheduler(name)
+                )
+                ref = sched.select(cl, pid)
                 g, a, ok = batched.policy_select(
-                    jnp.asarray(occ), jnp.int32(pid), name
+                    jnp.asarray(occ), jnp.int32(pid), name, workloads=workloads
                 )
                 got = (int(g), int(a)) if bool(ok) else None
                 assert got == ref, (
@@ -188,16 +202,21 @@ class TestTrajectoryInvariants:
 
 class TestAPI:
     def test_unknown_policy_raises(self):
+        from repro.core.policy import PolicySpec
+
         # registry's single validation path: unknown names list every
         # registered policy with its engine support...
         with pytest.raises(ValueError, match=r"unknown policy 'nope'.*mfi \(python\+batched\)"):
             batched.run_batched("nope", SimConfig(num_gpus=2), runs=1)
-        # ...and host-only policies name the engines that do support them
+        # ...and engine-restricted specs name the engines that do support them
+        host_only = PolicySpec(
+            name="host-only", keys=("gpu", "anchor"), engines=("python",)
+        )
         with pytest.raises(
             ValueError,
-            match=r"'mfi-defrag' is not supported by the 'batched' engine",
+            match=r"'host-only' is not supported by the 'batched' engine",
         ):
-            batched.run_batched("mfi-defrag", SimConfig(num_gpus=2), runs=1)
+            batched.run_batched(host_only, SimConfig(num_gpus=2), runs=1)
 
     def test_rr_cursor_advances_like_python(self):
         """RR is stateful: the cursor carried through consecutive decisions
@@ -218,9 +237,9 @@ class TestAPI:
                 cursor = (ref[0] + 1) % cl.num_gpus
             assert cursor == rr._next
 
-    def test_cumulative_protocol_raises(self):
-        cfg = SimConfig(num_gpus=2, protocol="cumulative")
-        with pytest.raises(ValueError, match="steady"):
+    def test_unknown_protocol_raises(self):
+        cfg = SimConfig(num_gpus=2, protocol="bursty")
+        with pytest.raises(ValueError, match="unknown protocol"):
             batched.run_batched("mfi", cfg, runs=1)
 
     def test_deterministic_given_seed(self):

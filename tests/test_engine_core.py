@@ -1,0 +1,554 @@
+"""Staged batched-engine core tests (the PR-4 tentpole).
+
+Four layers of guarantees over :mod:`repro.sim.batched`'s staged pipeline
+(``arrival → select → migrate → commit → expire → measure``):
+
+* **bit-for-bit regression** — the steady homogeneous and mixed traces
+  recorded *before* the monolithic event step was split into stages
+  reproduce exactly through the staged pipeline (golden aggregates and
+  SHA-256 trace hashes, captured at commit ``ca345a6``);
+* **batched ``mfi-defrag``** — the migrate stage matches the host
+  scheduler's canonical ``(total F, victim gpu, victim anchor)`` search
+  single-step AND decision-for-decision over whole streams, migrations
+  included, and migrated trajectories pass the replay invariants (a
+  migration never double-books or strands a workload);
+* **cumulative protocol** — batched demand-grid traces match the Python
+  simulator on the *same* per-replica RNG streams;
+* **satellites** — per-model demand mixes, the non-8-slice H200-141GB
+  geometry, and replica-axis sharding (subprocess, 8 host devices).
+"""
+
+import hashlib
+import json
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mig
+from repro.core.schedulers import MFIDefrag
+from repro.sim import SimConfig, request_probs, run_many
+from repro.sim import batched, replay
+from repro.sim.distributions import DISTRIBUTIONS, resolve_probs
+
+PID = {name: i for i, name in enumerate(mig.PROFILE_NAMES)}
+
+MIXED = mig.ClusterSpec(((mig.A100_80GB, 3), (mig.A100_40GB, 3)))
+FOUR_MODEL = mig.ClusterSpec(
+    (
+        (mig.A100_80GB, 2),
+        (mig.A100_40GB, 2),
+        (mig.H100_96GB, 2),
+        (mig.H100_80GB, 2),
+    )
+)
+H200_MIX = mig.ClusterSpec(
+    ((mig.A100_80GB, 2), (mig.H200_141GB, 2), (mig.A100_40GB, 1))
+)
+
+
+def _sim(policy, cfg, spec=None, runs=2, protocol="steady"):
+    presample = (
+        batched.presample_arrivals
+        if protocol == "steady"
+        else batched.presample_cumulative
+    )
+    events, meta, rr, rc = presample(cfg, runs=runs)
+    kw = {}
+    if spec is not None:
+        kw = dict(
+            midx=jnp.asarray(spec.model_index), tables=batched.spec_tables(spec)
+        )
+    final, trace = jax.device_get(
+        batched._simulate(
+            jax.tree.map(jnp.asarray, events),
+            policy=policy,
+            metric=cfg.metric,
+            num_gpus=cfg.num_gpus,
+            ring_rows=rr,
+            ring_cols=rc,
+            use_kernel=False,
+            protocol=protocol,
+            **kw,
+        )
+    )
+    return events, meta, trace, final
+
+
+# ---------------------------------------------------------------------------
+# Bit-for-bit regression vs the pre-refactor monolithic event step
+# ---------------------------------------------------------------------------
+
+
+#: aggregates + decision-trace hashes recorded on the pre-refactor engine
+#: (monolithic `_event_step`, commit ca345a6) — the staged pipeline must
+#: reproduce them exactly, not approximately
+GOLDEN_AGGREGATES = {
+    ("homog_m6", "mfi"): {
+        "acceptance_rate": 0.835978120978121,
+        "active_gpus": 5.0,
+        "allocated_workloads": 37.25,
+        "frag_severity": 7.736111243565877,
+        "utilization": 0.6440972222222222,
+    },
+    ("mixed_k2", "rr"): {
+        "acceptance_rate": 0.705775877918735,
+        "active_gpus": 5.583333333333333,
+        "allocated_workloads": 31.25,
+        "frag_severity": 8.333333651224772,
+        "utilization": 0.6458333333333334,
+    },
+    ("four_k4", "bf-bi"): {
+        "acceptance_rate": 0.8497768071971659,
+        "active_gpus": 7.1875,
+        "allocated_workloads": 53.25,
+        "frag_severity": 7.015625,
+        "utilization": 0.68359375,
+    },
+}
+
+GOLDEN_CONFIGS = {
+    "homog_m6": lambda: SimConfig(num_gpus=6, offered_load=0.9, seed=12),
+    "mixed_k2": lambda: SimConfig(cluster_spec=MIXED, offered_load=0.9, seed=12),
+    "four_k4": lambda: SimConfig(
+        cluster_spec=FOUR_MODEL, offered_load=0.85, seed=3
+    ),
+}
+
+GOLDEN_TRACE_HASHES = {
+    "homog": "3f61871a2075ffe549c554a6820d3bccc437d8606c80dd6e471e9daa0ad00705",
+    "mixed": "fc5a944c82ab6c74ca8a49b6a1ca19981d1d3fe8953f9b35cce26e67a8678d62",
+}
+
+
+class TestPreRefactorBitForBit:
+    @pytest.mark.parametrize("tag,policy", sorted(GOLDEN_AGGREGATES))
+    def test_steady_aggregates_reproduce_exactly(self, tag, policy):
+        r = batched.run_batched(policy, GOLDEN_CONFIGS[tag](), runs=4)
+        for key, want in GOLDEN_AGGREGATES[(tag, policy)].items():
+            assert r[key] == want, f"{tag}/{policy}/{key}: {r[key]!r} != {want!r}"
+
+    @pytest.mark.parametrize(
+        "tag,cfg_fn,spec",
+        [
+            ("homog", lambda: SimConfig(num_gpus=5, offered_load=1.1, seed=7), None),
+            (
+                "mixed",
+                lambda: SimConfig(cluster_spec=MIXED, offered_load=1.0, seed=9),
+                MIXED,
+            ),
+        ],
+    )
+    def test_steady_decision_traces_hash_identically(self, tag, cfg_fn, spec):
+        _, _, trace, _ = _sim("mfi", cfg_fn(), spec, runs=3)
+        h = hashlib.sha256()
+        for a in (
+            trace.ok, trace.gpu, trace.aidx, trace.free_sum, trace.active,
+            trace.frag,
+        ):
+            h.update(np.ascontiguousarray(np.asarray(a)).tobytes())
+        assert h.hexdigest() == GOLDEN_TRACE_HASHES[tag]
+
+
+# ---------------------------------------------------------------------------
+# Protocol descriptor
+# ---------------------------------------------------------------------------
+
+
+class TestProtocolDescriptor:
+    def test_registry(self):
+        steady = batched.resolve_protocol("steady")
+        cumulative = batched.resolve_protocol("cumulative")
+        assert steady.boundary_metrics and not steady.post_metrics
+        assert cumulative.post_metrics and not cumulative.boundary_metrics
+        assert batched.resolve_protocol(steady) is steady
+        with pytest.raises(ValueError, match="unknown protocol"):
+            batched.resolve_protocol("bursty")
+
+    def test_trace_fields_follow_protocol(self):
+        cfg = SimConfig(num_gpus=3, offered_load=0.8, seed=1)
+        _, _, steady_trace, _ = _sim("ff", cfg, runs=2)
+        assert steady_trace.free_sum is not None
+        assert steady_trace.post_free is None and steady_trace.mig is None
+        ccfg = SimConfig(num_gpus=3, protocol="cumulative", seed=1)
+        _, _, cum_trace, _ = _sim("ff", ccfg, runs=2, protocol="cumulative")
+        assert cum_trace.post_free is not None
+        assert cum_trace.free_sum is None
+
+
+# ---------------------------------------------------------------------------
+# Batched mfi-defrag: the migrate stage
+# ---------------------------------------------------------------------------
+
+
+class TestBatchedDefrag:
+    def test_single_step_matches_host_search(self):
+        """The textbook scenario: a misplaced 1g.10gb blocks a 4g.40gb;
+        both engines choose the same victim and target."""
+        cl = mig.ClusterState(2)
+        cl.allocate(1, PID["1g.10gb"], 0, 1)
+        cl.allocate(2, PID["4g.40gb"], 1, 0)
+        cl.allocate(3, PID["2g.20gb"], 1, 4)
+        d = MFIDefrag(max_candidates=None)
+        sel = d.select(cl, PID["4g.40gb"])
+        assert sel is not None and d.pending_migration is not None
+        vwid, vg, va = d.pending_migration
+        workloads = [
+            (g.gpu_id, a.profile_id, a.anchor)
+            for g in cl.gpus
+            for a in g.allocations.values()
+        ]
+        res = batched.policy_select_full(
+            jnp.asarray(cl.occupancy_matrix()), jnp.int32(PID["4g.40gb"]),
+            "mfi-defrag", workloads=workloads,
+        )
+        assert bool(res.ok) and bool(res.mig)
+        assert (int(res.gpu), int(res.anchor)) == sel
+        assert (int(res.new_gpu), int(res.new_anchor)) == (vg, va)
+        assert (int(res.vic_gpu), int(res.vic_anchor)) == (0, 1)
+
+    def test_randomized_single_step_parity(self):
+        """Random clusters (homogeneous + mixed): decision AND migration
+        agree with the host's canonical unbounded search."""
+        rng = np.random.default_rng(17)
+        migrations = 0
+        for trial in range(40):
+            spec = None if trial % 2 == 0 else MIXED
+            cl = (
+                mig.ClusterState(int(rng.integers(1, 6)))
+                if spec is None
+                else mig.ClusterState(spec=spec)
+            )
+            wid = 0
+            density = rng.random() * 1.2
+            for g in range(cl.num_gpus):
+                for pid in rng.permutation(mig.NUM_PROFILES):
+                    if rng.random() < density:
+                        anchors = cl.gpus[g].feasible_anchors(int(pid))
+                        if anchors:
+                            cl.allocate(wid, int(pid), g, int(rng.choice(anchors)))
+                            wid += 1
+            pid = int(rng.integers(0, mig.NUM_PROFILES))
+            d = MFIDefrag(max_candidates=None)
+            ref = d.select(cl, pid)
+            workloads = [
+                (g.gpu_id, a.profile_id, a.anchor)
+                for g in cl.gpus
+                for a in g.allocations.values()
+            ]
+            res = batched.policy_select_full(
+                jnp.asarray(cl.occupancy_matrix()), jnp.int32(pid),
+                "mfi-defrag", spec=spec, workloads=workloads,
+            )
+            got = (int(res.gpu), int(res.anchor)) if bool(res.ok) else None
+            assert got == ref, f"trial {trial}: host={ref} batched={got}"
+            if d.pending_migration is not None:
+                migrations += 1
+                vwid, vg, va = d.pending_migration
+                old = next(
+                    (g.gpu_id, a.anchor)
+                    for g in cl.gpus
+                    for w, a in g.allocations.items()
+                    if w == vwid
+                )
+                assert bool(res.mig)
+                assert (int(res.vic_gpu), int(res.vic_anchor)) == old
+                assert (int(res.new_gpu), int(res.new_anchor)) == (vg, va)
+            else:
+                assert not bool(res.mig)
+        assert migrations >= 2  # the fuzz actually exercised the search
+
+    @pytest.mark.parametrize("spec", [None, MIXED], ids=["homog", "mixed"])
+    def test_same_stream_decisions_and_migrations_match(self, spec):
+        cfg = (
+            SimConfig(num_gpus=4, offered_load=1.1, seed=3)
+            if spec is None
+            else SimConfig(cluster_spec=spec, offered_load=1.0, seed=3)
+        )
+        events, meta, trace, _ = _sim("mfi-defrag", cfg, spec, runs=2)
+        assert np.asarray(trace.mig).sum() > 0  # migrations actually happened
+        ref = replay.host_decisions_full(
+            events, meta, "mfi-defrag", cfg.num_gpus, spec=spec,
+            max_candidates=None,
+        )
+        ok = np.asarray(trace.ok)
+        np.testing.assert_array_equal(ok, ref.ok)
+        np.testing.assert_array_equal(np.asarray(trace.gpu)[ok], ref.gpu[ok])
+        np.testing.assert_array_equal(np.asarray(trace.mig), ref.mig)
+        m = np.asarray(trace.mig)
+        for dev, host in (
+            (trace.mig_from_gpu, ref.mig_from_gpu),
+            (trace.mig_from_anchor, ref.mig_from_anchor),
+            (trace.mig_to_gpu, ref.mig_to_gpu),
+            (trace.mig_to_anchor, ref.mig_to_anchor),
+        ):
+            np.testing.assert_array_equal(np.asarray(dev)[m], host[m])
+
+    def test_migration_invariants_via_replay(self):
+        """Deterministic form of the hypothesis invariant: a migration
+        never double-books a slice and never strands a workload (the
+        migrated victim still drains exactly from its new placement)."""
+        for seed in (3, 5, 11):
+            cfg = SimConfig(num_gpus=4, offered_load=1.2, seed=seed)
+            events, meta, trace, final = _sim("mfi-defrag", cfg, runs=2)
+            occ = replay.replay(events, meta, trace, cfg.num_gpus)
+            w = np.asarray(mig.PLACEMENT_MASKS, np.float32)
+            np.testing.assert_allclose(final.base, occ.astype(np.float32) @ w.T)
+            _, drained = replay.drain_all(events, meta, trace, cfg.num_gpus)
+            np.testing.assert_array_equal(drained, 0)
+
+    def test_defrag_dominates_mfi_single_step(self):
+        """At any fixed cluster state, mfi-defrag accepts whenever plain MFI
+        does (it only ADDS acceptances via migration) — the single-step
+        dominance property.  Run-level acceptance is not monotone (a greedy
+        migration can worsen the future state), so this is the invariant.
+        """
+        rng = np.random.default_rng(23)
+        extra = 0
+        for _ in range(30):
+            cl = mig.ClusterState(3)
+            wid = 0
+            for g in range(3):
+                for pid in rng.permutation(mig.NUM_PROFILES):
+                    if rng.random() < 0.7:
+                        anchors = cl.gpus[g].feasible_anchors(int(pid))
+                        if anchors:
+                            cl.allocate(wid, int(pid), g, int(rng.choice(anchors)))
+                            wid += 1
+            occ = jnp.asarray(cl.occupancy_matrix())
+            workloads = [
+                (g.gpu_id, a.profile_id, a.anchor)
+                for g in cl.gpus
+                for a in g.allocations.values()
+            ]
+            for pid in range(mig.NUM_PROFILES):
+                _, _, ok_mfi = batched.policy_select(occ, jnp.int32(pid), "mfi")
+                _, _, ok_d = batched.policy_select(
+                    occ, jnp.int32(pid), "mfi-defrag", workloads=workloads
+                )
+                assert bool(ok_d) >= bool(ok_mfi)
+                extra += int(bool(ok_d) and not bool(ok_mfi))
+        assert extra > 0  # the migration search actually rescued rejects
+
+    def test_facade_runs_defrag_on_batched_engine(self):
+        from repro import api
+
+        r = api.simulate("mfi-defrag", engine="batched", num_gpus=3, runs=2)
+        assert 0.0 < r["acceptance_rate"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Cumulative protocol on the batched engine
+# ---------------------------------------------------------------------------
+
+
+class TestBatchedCumulative:
+    @pytest.mark.parametrize("policy", ["mfi", "ff", "rr"])
+    def test_traces_match_python_simulator_same_stream(self, policy):
+        """Replica r consumes the same RNG stream as run_many's run r, so
+        the demand-grid traces must agree to float tolerance — not just
+        statistically."""
+        cfg = SimConfig(num_gpus=4, protocol="cumulative", seed=5)
+        rb = batched.run_batched(policy, cfg, runs=3)
+        rp = run_many(policy, cfg, runs=3)
+        for k in (
+            "acceptance_rate", "allocated_workloads", "active_gpus",
+            "utilization", "frag_severity",
+        ):
+            np.testing.assert_allclose(rb[k], rp[k], rtol=1e-6, atol=1e-6)
+            np.testing.assert_allclose(
+                rb["traces"][k], rp["traces"][k], rtol=1e-6, atol=1e-6
+            )
+        np.testing.assert_array_equal(rb["demand_grid"], rp["demand_grid"])
+        np.testing.assert_allclose(
+            rb["rejects_by_profile"], rp["rejects_by_profile"]
+        )
+
+    def test_mixed_fleet_same_stream_decisions(self):
+        cfg = SimConfig(cluster_spec=MIXED, protocol="cumulative", seed=2)
+        events, meta, trace, _ = _sim(
+            "mfi", cfg, MIXED, runs=2, protocol="cumulative"
+        )
+        ok_ref, gpu_ref, _ = replay.host_decisions(
+            events, meta, "mfi", cfg.num_gpus, spec=MIXED
+        )
+        ok = np.asarray(trace.ok)
+        np.testing.assert_array_equal(ok, ok_ref)
+        np.testing.assert_array_equal(np.asarray(trace.gpu)[ok], gpu_ref[ok])
+        replay.replay(events, meta, trace, cfg.num_gpus, spec=MIXED)
+
+    def test_cumulative_defrag_composes(self):
+        """Protocol descriptor × defrag spec: both stages compile together;
+        the host reference (with the cumulative migration fix) agrees."""
+        cfg = SimConfig(num_gpus=2, protocol="cumulative", seed=8)
+        rb = batched.run_batched("mfi-defrag", cfg, runs=2)
+        rp = run_many("mfi-defrag", cfg, runs=2)
+        np.testing.assert_allclose(
+            rb["acceptance_rate"], rp["acceptance_rate"], rtol=1e-6
+        )
+        np.testing.assert_allclose(
+            rb["traces"]["utilization"], rp["traces"]["utilization"],
+            rtol=1e-6, atol=1e-6,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Satellite: per-model request distributions
+# ---------------------------------------------------------------------------
+
+
+class TestPerModelDistributions:
+    def test_mixture_is_capacity_weighted(self):
+        spec = mig.ClusterSpec(((mig.A100_80GB, 1), (mig.A100_40GB, 3)))
+        probs = resolve_probs(
+            "uniform", spec, {"a100-40": "skew-small"}
+        )
+        want = (8 / 32) * DISTRIBUTIONS["uniform"] + (24 / 32) * DISTRIBUTIONS[
+            "skew-small"
+        ]
+        np.testing.assert_allclose(probs, want)
+
+    def test_default_is_exact_named_mix(self):
+        cfg = SimConfig(num_gpus=4, distribution="skew-big")
+        assert request_probs(cfg) is DISTRIBUTIONS["skew-big"]
+
+    def test_validation(self):
+        spec = mig.ClusterSpec.homogeneous(mig.A100_80GB, 2)
+        with pytest.raises(ValueError, match="unknown device model"):
+            resolve_probs("uniform", spec, {"v100": "uniform"})
+        with pytest.raises(ValueError, match="not in the fleet"):
+            resolve_probs("uniform", spec, {"h100-96": "uniform"})
+        with pytest.raises(ValueError, match="unknown distribution"):
+            resolve_probs("uniform", spec, {"a100-80": "weird"})
+
+    def test_same_stream_parity_with_model_mixes(self):
+        """Both engines draw from the same mixture, so decision-for-decision
+        parity holds under per-model mixes too."""
+        cfg = SimConfig(
+            cluster_spec=MIXED,
+            offered_load=0.9,
+            seed=4,
+            model_distributions={"a100-40": "skew-small", "a100-80": "skew-big"},
+        )
+        events, meta, trace, _ = _sim("mfi", cfg, MIXED, runs=2)
+        ok_ref, gpu_ref, _ = replay.host_decisions(
+            events, meta, "mfi", cfg.num_gpus, spec=MIXED
+        )
+        ok = np.asarray(trace.ok)
+        np.testing.assert_array_equal(ok, ok_ref)
+        np.testing.assert_array_equal(np.asarray(trace.gpu)[ok], gpu_ref[ok])
+
+    def test_mix_shifts_the_sampled_classes(self):
+        cfg_small = SimConfig(
+            cluster_spec=MIXED, seed=0,
+            model_distributions={m.name: "skew-small" for m in MIXED.models},
+        )
+        cfg_big = SimConfig(
+            cluster_spec=MIXED, seed=0,
+            model_distributions={m.name: "skew-big" for m in MIXED.models},
+        )
+        ev_s, *_ = batched.presample_arrivals(cfg_small, runs=4)
+        ev_b, *_ = batched.presample_arrivals(cfg_big, runs=4)
+        mean_s = mig.PROFILE_MEM[ev_s.pid[ev_s.pid >= 0]].mean()
+        mean_b = mig.PROFILE_MEM[ev_b.pid[ev_b.pid >= 0]].mean()
+        assert mean_s < mean_b  # small-skewed demand really is smaller
+
+
+# ---------------------------------------------------------------------------
+# Satellite: non-8-slice H200-141GB geometry
+# ---------------------------------------------------------------------------
+
+
+class TestH200Geometry:
+    def test_registry_and_tables(self):
+        assert mig.DEVICE_MODELS["h200-141"] is mig.H200_141GB
+        m = mig.H200_141GB
+        assert m.num_mem_slices == 12
+        for prof in m.profiles:
+            for a in prof.anchors:
+                assert a + prof.mem <= 12
+        np.testing.assert_array_equal(
+            m.placement_masks.sum(axis=1), m.placement_mem
+        )
+        assert m.num_placements == 1 + 3 + 3 + 6 + 6 + 12
+        assert m.max_anchors == 12
+
+    def test_padded_width_tables(self):
+        tables = batched.spec_tables(H200_MIX)
+        assert tables.W.shape[2] == 12  # padded to the widest model
+        assert H200_MIX.num_mem_slices == 12
+        # A100 rows can never occupy the padding columns
+        k_a100 = H200_MIX.models.index(mig.A100_80GB)
+        assert np.asarray(tables.W)[k_a100, :, 8:].sum() == 0
+
+    def test_mixed_fleet_same_stream_parity(self):
+        cfg = SimConfig(cluster_spec=H200_MIX, offered_load=1.0, seed=6)
+        for policy in ("mfi", "bf-bi"):
+            events, meta, trace, _ = _sim(policy, cfg, H200_MIX, runs=2)
+            ok_ref, gpu_ref, _ = replay.host_decisions(
+                events, meta, policy, cfg.num_gpus, spec=H200_MIX
+            )
+            ok = np.asarray(trace.ok)
+            np.testing.assert_array_equal(ok, ok_ref)
+            np.testing.assert_array_equal(np.asarray(trace.gpu)[ok], gpu_ref[ok])
+            replay.replay(events, meta, trace, cfg.num_gpus, spec=H200_MIX)
+            _, drained = replay.drain_all(
+                events, meta, trace, cfg.num_gpus, spec=H200_MIX
+            )
+            np.testing.assert_array_equal(drained, 0)
+
+
+# ---------------------------------------------------------------------------
+# Satellite: replica-axis sharding
+# ---------------------------------------------------------------------------
+
+
+class TestReplicaSharding:
+    def test_single_device_fallbacks(self):
+        if len(jax.devices()) > 1:
+            pytest.skip("test targets the single-device fallback")
+        events, _, _, _ = batched.presample_arrivals(
+            SimConfig(num_gpus=2, seed=0), runs=2
+        )
+        dev = jax.tree.map(jnp.asarray, events)
+        assert batched.shard_events(dev, 2, None) is dev  # auto: no-op
+        assert batched.shard_events(dev, 2, False) is dev
+        with pytest.raises(ValueError, match="only one device"):
+            batched.shard_events(dev, 2, True)
+
+    @pytest.mark.slow
+    def test_multi_device_results_identical(self):
+        """8 forced host devices: the sharded run must produce bitwise the
+        same aggregates as the unsharded one (subprocess so the XLA_FLAGS
+        override never pollutes this process)."""
+        code = textwrap.dedent("""
+            import os
+            os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+            import sys, json
+            sys.path.insert(0, "src")
+            import jax
+            from repro.sim import SimConfig
+            from repro.sim.batched import run_batched
+            assert len(jax.devices()) == 8
+            cfg = SimConfig(num_gpus=4, offered_load=0.9, seed=2)
+            r_sharded = run_batched("mfi", cfg, runs=8, shard=True)
+            r_plain = run_batched("mfi", cfg, runs=8, shard=False)
+            print(json.dumps({
+                "sharded": {k: r_sharded[k] for k in
+                            ("acceptance_rate", "utilization", "frag_severity")},
+                "plain": {k: r_plain[k] for k in
+                          ("acceptance_rate", "utilization", "frag_severity")},
+            }))
+        """)
+        out = subprocess.run(
+            [sys.executable, "-c", code], capture_output=True, text=True,
+            timeout=600,
+        )
+        assert out.returncode == 0, out.stderr[-2000:]
+        res = json.loads(out.stdout.strip().splitlines()[-1])
+        assert res["sharded"] == res["plain"]

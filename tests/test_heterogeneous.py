@@ -156,6 +156,9 @@ class TestMixedParity:
     """Python vs batched on a mixed two-model spec."""
 
     def test_single_step_decisions_match(self):
+        from repro.core.policy import resolve
+        from repro.core.schedulers import MFIDefrag
+
         rng = np.random.default_rng(11)
         checked = 0
         for _ in range(60):
@@ -170,10 +173,22 @@ class TestMixedParity:
                             wid += 1
             occ = cl.occupancy_matrix()
             pid = int(rng.integers(0, mig.NUM_PROFILES))
+            workloads = [
+                (g.gpu_id, a.profile_id, a.anchor)
+                for g in cl.gpus
+                for a in g.allocations.values()
+            ]
             for name in BATCHED_POLICIES:
-                ref = make_scheduler(name).select(cl, pid)
+                pspec = resolve(name)
+                sched = (
+                    MFIDefrag(spec=pspec, max_candidates=None)
+                    if pspec.defrag
+                    else make_scheduler(name)
+                )
+                ref = sched.select(cl, pid)
                 g, a, ok = batched.policy_select(
-                    jnp.asarray(occ), jnp.int32(pid), name, spec=MIXED
+                    jnp.asarray(occ), jnp.int32(pid), name, spec=MIXED,
+                    workloads=workloads,
                 )
                 got = (int(g), int(a)) if bool(ok) else None
                 assert got == ref, f"{name}: pid={pid} python={ref} batched={got}"

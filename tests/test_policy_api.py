@@ -49,11 +49,25 @@ def _random_cluster(rng, spec):
     return cl
 
 
+def _host_reference(policy, cluster, pid):
+    """Host decision + migration on one cluster state (unbounded budget)."""
+    from repro.core.policy import resolve as _resolve
+
+    pspec = _resolve(policy)
+    if pspec.defrag:
+        sched = MFIDefrag(spec=pspec, max_candidates=None)
+    else:
+        sched = make_scheduler(policy)
+    sel = sched.select(cluster, pid)
+    return sel, getattr(sched, "pending_migration", None)
+
+
 def assert_cross_engine_parity(policy, trials=40, seed=123):
     """Generic parity harness: host compilation vs batched lowering.
 
     1. single-step: decisions agree on random occupancies (homogeneous and
-       mixed specs, including rejects);
+       mixed specs, including rejects and — for defrag specs — the chosen
+       migration victim and target);
     2. same-stream: driving the host scheduler over the batched engine's
        own presampled event stream reproduces the device decision trace
        element-for-element, and the trace passes the replay invariants.
@@ -61,18 +75,28 @@ def assert_cross_engine_parity(policy, trials=40, seed=123):
     Works for any batched-capable policy name or ad-hoc spec — this is what
     "a newly registered policy gets parity coverage for free" means.
     """
+    from repro.core.policy import resolve as _resolve
+
+    is_defrag = _resolve(policy).defrag
     rng = np.random.default_rng(seed)
     for spec in (mig.ClusterSpec.homogeneous(mig.A100_80GB, 4), MIXED):
         for _ in range(trials):
             cl = _random_cluster(rng, spec)
             occ = cl.occupancy_matrix()
             pid = int(rng.integers(0, mig.NUM_PROFILES))
-            ref = make_scheduler(policy).select(cl, pid)
-            g, a, ok = batched.policy_select(
-                jnp.asarray(occ), jnp.int32(pid), policy, spec=spec
+            workloads = [
+                (g.gpu_id, a.profile_id, a.anchor)
+                for g in cl.gpus
+                for a in g.allocations.values()
+            ]
+            ref, ref_mig = _host_reference(policy, cl, pid)
+            d = batched.policy_select_full(
+                jnp.asarray(occ), jnp.int32(pid), policy, spec=spec,
+                workloads=workloads,
             )
-            got = (int(g), int(a)) if bool(ok) else None
+            got = (int(d.gpu), int(d.anchor)) if bool(d.ok) else None
             assert got == ref, f"{policy}: pid={pid} host={ref} batched={got}\n{occ}"
+            assert bool(d.mig) == (ref_mig is not None)
     cfg = SimConfig(cluster_spec=MIXED, offered_load=0.9, seed=seed)
     events, meta, rr, rc = batched.presample_arrivals(cfg, runs=2)
     _, trace = jax.device_get(
@@ -88,8 +112,9 @@ def assert_cross_engine_parity(policy, trials=40, seed=123):
             tables=batched.spec_tables(MIXED),
         )
     )
+    kwargs = {"max_candidates": None} if is_defrag else {}
     ok_ref, gpu_ref, _ = replay.host_decisions(
-        events, meta, policy, cfg.num_gpus, spec=MIXED
+        events, meta, policy, cfg.num_gpus, spec=MIXED, **kwargs
     )
     ok_dev = np.asarray(trace.ok)
     np.testing.assert_array_equal(ok_dev, ok_ref)
@@ -102,10 +127,28 @@ class TestPolicySpec:
         assert set(list_policies()) >= {
             "mfi", "ff", "bf-bi", "wf-bi", "rr", "mfi-defrag",
         }
-        for name in ("mfi", "ff", "bf-bi", "wf-bi", "rr"):
+        # every built-in — the defrag variant included — runs on both engines
+        for name in ("mfi", "ff", "bf-bi", "wf-bi", "rr", "mfi-defrag"):
             assert policy_engines(name) == ("python", "batched")
-        assert policy_engines("mfi-defrag") == ("python",)
-        assert "mfi-defrag" not in list_policies(engine="batched")
+        assert "mfi-defrag" in list_policies(engine="batched")
+
+    def test_engines_field_opt_out(self):
+        """A spec may opt out of an engine; resolve() raises the unified
+        mismatch error for it."""
+        host_only = PolicySpec(
+            name="test-host-only", keys=("gpu", "anchor"), engines=("python",)
+        )
+        assert host_only.supports("python") and not host_only.supports("batched")
+        with pytest.raises(ValueError, match="not supported by the 'batched'"):
+            resolve(host_only, engine="batched")
+        with pytest.raises(ValueError, match="unknown engine"):
+            PolicySpec(name="bad", keys=("gpu",), engines=("quantum",))
+        with pytest.raises(ValueError, match="at least one engine"):
+            PolicySpec(name="bad", keys=("gpu",), engines=())
+
+    def test_defrag_rejects_rr_distance(self):
+        with pytest.raises(ValueError, match="defrag is incompatible"):
+            PolicySpec(name="bad", keys=("rr-distance", "anchor"), defrag=True)
 
     def test_derived_structure(self):
         assert get_policy("mfi").requires_delta_f
@@ -162,18 +205,30 @@ class TestUnifiedErrors:
         assert "unknown policy 'nope'" in msg
         for name in list_policies():
             assert name in msg
-        assert "mfi-defrag (python)" in msg and "(python+batched)" in msg
+        assert "(python+batched)" in msg
 
     def test_engine_mismatch_names_supported_engines(self):
-        for call in (
-            lambda: batched.run_batched("mfi-defrag", SimConfig(num_gpus=2), runs=1),
-            lambda: api.simulate("mfi-defrag", engine="batched", num_gpus=2, runs=1),
-        ):
-            with pytest.raises(ValueError, match=r"supports: python") as exc:
-                call()
-            assert "'mfi-defrag' is not supported by the 'batched' engine" in str(
-                exc.value
-            )
+        host_only = PolicySpec(
+            name="test-host-only", keys=("gpu", "anchor"), engines=("python",)
+        )
+        register_policy(host_only)
+        try:
+            for call in (
+                lambda: batched.run_batched(
+                    "test-host-only", SimConfig(num_gpus=2), runs=1
+                ),
+                lambda: api.simulate(
+                    "test-host-only", engine="batched", num_gpus=2, runs=1
+                ),
+            ):
+                with pytest.raises(ValueError, match=r"supports: python") as exc:
+                    call()
+                assert (
+                    "'test-host-only' is not supported by the 'batched' engine"
+                    in str(exc.value)
+                )
+        finally:
+            unregister_policy("test-host-only")
 
     def test_unknown_engine(self):
         with pytest.raises(ValueError, match="unknown engine"):

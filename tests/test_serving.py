@@ -44,6 +44,30 @@ class TestAdmission:
         s = ac.stats()
         assert s["accepted"] == 1 and s["active_gpus"] == 1
 
+    def test_defrag_policy_applies_migration(self):
+        """mfi-defrag admission migrates the blocking victim (and keeps its
+        placement record current) instead of double-booking."""
+        ac = AdmissionController(num_gpus=2, policy="mfi-defrag")
+        assert ac.admit(1, "1g.10gb") is not None
+        # misplace the blocker exactly like the scheduler-unit scenario
+        ac.release(1)
+        ac.cluster.allocate(1, mig.PROFILE_NAMES.index("1g.10gb"), 0, 1)
+        from repro.serving.admission import Placement
+
+        ac.placements[1] = Placement(1, "1g.10gb", 0, 1)
+        assert ac.admit(2, "4g.40gb") is not None
+        assert ac.admit(3, "2g.20gb") is not None
+        p = ac.admit(4, "4g.40gb")  # only feasible via migrating workload 1
+        assert p is not None
+        moved = ac.placements[1]
+        assert (moved.gpu, moved.anchor) != (0, 1)
+        # occupancy stays consistent with the placement table
+        for g in ac.cluster.gpus:
+            expect = np.zeros(mig.NUM_MEM_SLICES, np.int32)
+            for a in g.allocations.values():
+                expect[a.anchor : a.anchor + mig.PROFILES[a.profile_id].mem] = 1
+            np.testing.assert_array_equal(g.occupancy, expect)
+
 
 @pytest.mark.slow
 class TestServingEngine:
