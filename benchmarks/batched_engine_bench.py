@@ -19,6 +19,19 @@ throughput — ``mfi-defrag``'s migrate stage included — plus one
 **cumulative-protocol** run, so the uploaded artifact tracks the perf
 trajectory of every engine configuration, including policies registered
 after this benchmark was written (``--sweep``/``--no-sweep`` overrides).
+
+``--profile`` adds a per-stage wall-time breakdown of the ``EngineCore``
+pipeline (select / migrate / commit / expire, µs per event across the
+replica batch) for a defrag and a non-defrag spec, emitted under
+``stage_profile`` in the JSON payload — the view that shows *where* an
+engine configuration spends its scan step.
+
+``--baseline PATH`` diffs the run against a committed reference artifact
+(``benchmarks/BENCH_baseline.json``): the headline ``speedup_warm`` (the
+batched-vs-python ratio, machine-normalized) must not regress by more than
+20%, per-policy warm-throughput ratios are recorded under ``vs_baseline``
+in the payload, and the process exits non-zero on a gate failure — this is
+the CI perf-trajectory gate.
 """
 
 from __future__ import annotations
@@ -26,11 +39,15 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import sys
 import time
 
 from repro.core.policy import list_policies
 from repro.sim import SimConfig, run_many
 from repro.sim.batched import run_batched
+
+#: maximum tolerated relative drop of speedup_warm vs the baseline artifact
+REGRESSION_GATE = 0.20
 
 
 def sweep_policies(cfg: SimConfig, runs: int):
@@ -62,6 +79,135 @@ def bench_cumulative(cfg: SimConfig, runs: int):
     }
 
 
+def profile_stages(cfg: SimConfig, runs: int, policies=("mfi", "mfi-defrag")):
+    """Per-stage warm wall-time of the ``EngineCore`` pipeline.
+
+    Builds each policy's staged core, drives one full warm run to obtain a
+    *representative* replica state (steady state at the configured load),
+    then times every stage as its own jitted + vmapped program: µs per
+    event across the whole replica batch — exactly the work one scan step
+    does per stage.  The defrag spec's ``migrate`` row is the one the
+    factored search optimizes; non-defrag specs have no migrate stage.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.policy import resolve
+    from repro.sim import batched
+
+    spec = cfg.spec()
+    tables = batched.spec_tables(spec)
+    midx = jnp.asarray(spec.model_index)
+    vg = tables.V[midx]
+    events, _, ring_rows, ring_cols = batched.presample_arrivals(cfg, runs)
+    dev = jax.tree.map(jnp.asarray, events)
+
+    def timeit(fn, *args, iters=20):
+        jax.block_until_ready(fn(*args))  # compile + warm
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / iters * 1e6  # µs / event batch
+
+    out = {}
+    for policy in policies:
+        pspec = resolve(policy, engine="batched")
+        core = batched.EngineCore(
+            spec=pspec,
+            protocol=batched.resolve_protocol("steady"),
+            metric=cfg.metric,
+            tables=tables,
+            midx=midx,
+            vg=vg,
+        )
+        state, _ = batched._simulate(
+            dev, policy=policy, metric=cfg.metric, num_gpus=cfg.num_gpus,
+            ring_rows=ring_rows, ring_cols=ring_cols, use_kernel=False,
+            midx=midx, tables=tables,
+        )  # final (R,)-vmapped state: steady-state occupancy at this load
+        pid = jnp.full((runs,), 2, jnp.int32)
+        valid = jnp.ones((runs,), bool)
+        zeros = jnp.zeros((runs,), jnp.int32)
+        new_slot = jnp.ones((runs,), bool)
+
+        expire = jax.jit(jax.vmap(core._stage_expire))
+        select = jax.jit(jax.vmap(core._stage_select))
+        stages = {
+            "expire_us": timeit(expire, state, zeros, new_slot),
+            "select_us": timeit(select, state, pid, valid),
+        }
+        gpu, aidx, ok = select(state, pid, valid)
+        mig_res = None
+        if pspec.defrag:
+            migrate = jax.jit(jax.vmap(core._stage_migrate))
+            stages["migrate_us"] = timeit(migrate, state, pid, valid, gpu, aidx, ok)
+            state, gpu, aidx, ok, mig_res = migrate(state, pid, valid, gpu, aidx, ok)
+        commit = jax.jit(
+            jax.vmap(
+                lambda st, p, g, a, o, er, ec, mr=None: core._stage_commit(
+                    st, p, g, a, o, er, ec, mr
+                )
+            )
+            if mig_res is None
+            else jax.vmap(core._stage_commit)
+        )
+        args = (state, pid, gpu, aidx, ok, zeros, zeros)
+        if mig_res is not None:
+            args = args + (mig_res,)
+        stages["commit_us"] = timeit(commit, *args)
+        out[policy] = stages
+    return out
+
+
+def compare_baseline(payload: dict, baseline_path: str, gate: float = REGRESSION_GATE):
+    """Diff this run against a committed baseline artifact.
+
+    Returns ``(vs_baseline, ok)``: the comparison dict recorded in the JSON
+    payload, and whether the headline ``speedup_warm`` (machine-normalized:
+    batched warm throughput over the same host's Python engine) stayed
+    within ``gate`` of the baseline.  Per-policy raw warm-rps ratios are
+    informational (they compare across machines when the artifact was
+    recorded elsewhere).
+    """
+    with open(baseline_path) as fh:
+        base = json.load(fh)
+    cur, ref = payload["speedup_warm"], base["speedup_warm"]
+    vs = {
+        "baseline_path": baseline_path,
+        "speedup_warm": {"baseline": ref, "current": cur, "ratio": cur / ref},
+        "gate": gate,
+    }
+    mismatch = {
+        k: {"baseline": base.get(k), "current": payload.get(k)}
+        for k in ("num_gpus", "runs", "load", "smoke")
+        if base.get(k) != payload.get(k)
+    }
+    if mismatch:  # different problem size — ratios are meaningless, no gate
+        vs["config_mismatch"] = mismatch
+        vs["pass"] = True
+        print(
+            f"# vs baseline {baseline_path}: CONFIG MISMATCH "
+            f"({', '.join(sorted(mismatch))}) — comparison recorded, "
+            "regression gate skipped"
+        )
+        return vs, True
+    pol = {}
+    for name, p in (payload.get("policies") or {}).items():
+        b = (base.get("policies") or {}).get(name)
+        if b:
+            pol[name] = {
+                "baseline_rps": b["warm_rps"],
+                "current_rps": p["warm_rps"],
+                "ratio": p["warm_rps"] / b["warm_rps"],
+            }
+    if pol:
+        vs["policies"] = pol
+    ok = cur >= (1.0 - gate) * ref
+    vs["pass"] = ok
+    return vs, ok
+
+
 def bench_point(policy: str, cfg: SimConfig, runs: int, py_runs: int):
     t0 = time.perf_counter()
     rp = run_many(policy, cfg, runs=py_runs)
@@ -87,7 +233,8 @@ def bench_point(policy: str, cfg: SimConfig, runs: int, py_runs: int):
 
 def main(runs: int = 64, num_gpus: int = 100, load: float = 0.85,
          policy: str = "mfi", py_runs: int = 3, smoke: bool = False,
-         json_path: str | None = None, sweep: bool | None = None):
+         json_path: str | None = None, sweep: bool | None = None,
+         profile: bool = False, baseline: str | None = None):
     if smoke:
         runs, num_gpus, py_runs = min(runs, 8), min(num_gpus, 16), min(py_runs, 2)
     if sweep is None:
@@ -132,17 +279,45 @@ def main(runs: int = 64, num_gpus: int = 100, load: float = 0.85,
             f"sweep,batched-cumulative,mfi,{num_gpus},{runs},"
             f"{cumulative['warm_rps']:.2f},{cumulative['acceptance_rate']:.4f}"
         )
-    if json_path:
-        payload = dict(
-            r, policy=policy, num_gpus=num_gpus, runs=runs, load=load, smoke=smoke
+    payload = dict(
+        r, policy=policy, num_gpus=num_gpus, runs=runs, load=load, smoke=smoke
+    )
+    if per_policy is not None:
+        payload["policies"] = per_policy
+    if cumulative is not None:
+        payload["cumulative"] = cumulative
+    if profile:
+        stage_profile = profile_stages(cfg, runs)
+        payload["stage_profile"] = stage_profile
+        print("table,stage-profile,policy,stage,us_per_event")
+        for name, stages in stage_profile.items():
+            for stage, us in sorted(stages.items()):
+                print(f"profile,batched,{name},{stage.removesuffix('_us')},{us:.1f}")
+    gate_ok = True
+    if baseline:
+        vs, gate_ok = compare_baseline(payload, baseline)
+        payload["vs_baseline"] = vs
+        s = vs["speedup_warm"]
+        print(
+            f"# vs baseline {baseline}: speedup_warm {s['current']:.1f}x / "
+            f"{s['baseline']:.1f}x = {s['ratio']:.2f} "
+            f"-> {'PASS' if gate_ok else 'FAIL'} "
+            f"(>= {1 - REGRESSION_GATE:.2f} required)"
         )
-        if per_policy is not None:
-            payload["policies"] = per_policy
-        if cumulative is not None:
-            payload["cumulative"] = cumulative
+        for name, p in sorted(vs.get("policies", {}).items()):
+            print(
+                f"# vs baseline {name}: {p['current_rps']:.2f} rps / "
+                f"{p['baseline_rps']:.2f} rps = {p['ratio']:.2f}x"
+            )
+    if json_path:
         with open(json_path, "w") as fh:
             json.dump(payload, fh, indent=2, sort_keys=True)
         print(f"# wrote {json_path}")
+    if not gate_ok:
+        sys.exit(
+            f"FAIL: speedup_warm regressed more than "
+            f"{REGRESSION_GATE:.0%} vs {baseline}"
+        )
     return r
 
 
@@ -154,16 +329,27 @@ if __name__ == "__main__":
     ap.add_argument("--policy", default="mfi")
     ap.add_argument("--py-runs", type=int, default=3)
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized point (M=16, 8 replicas); records, never fails")
+                    help="CI-sized point (M=16, 8 replicas); records without "
+                         "enforcing the 10x bar (--baseline can still fail "
+                         "the run on a regression)")
     ap.add_argument("--json", dest="json_path", default=None,
                     help="write metrics JSON here (workflow artifact)")
     ap.add_argument("--sweep", dest="sweep", action="store_true", default=None,
                     help="per-policy warm throughput over every registered "
                          "batched-capable policy (default: on in smoke mode)")
     ap.add_argument("--no-sweep", dest="sweep", action="store_false")
+    ap.add_argument("--profile", action="store_true",
+                    help="per-stage wall-time breakdown of the EngineCore "
+                         "pipeline (select/migrate/commit/expire) for a "
+                         "defrag and a non-defrag spec")
+    ap.add_argument("--baseline", default=None,
+                    help="diff against a committed artifact (e.g. "
+                         "benchmarks/BENCH_baseline.json); exits non-zero on "
+                         ">20%% speedup_warm regression")
     args = ap.parse_args()
     main(
         runs=args.runs, num_gpus=args.num_gpus, load=args.load,
         policy=args.policy, py_runs=args.py_runs, smoke=args.smoke,
         json_path=args.json_path, sweep=args.sweep,
+        profile=args.profile, baseline=args.baseline,
     )

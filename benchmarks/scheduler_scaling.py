@@ -17,7 +17,6 @@ from benchmarks.common import ENGINES, time_fn
 from repro.core import cluster as jcluster
 from repro.core import mig
 from repro.core.schedulers import make_scheduler
-from repro.kernels.fragscore import ops as kops
 from repro.sim.batched import policy_select
 
 
@@ -43,9 +42,12 @@ def main(engine: str = "python"):
             us = time_fn(lambda: jax.block_until_ready(f(occ, pid)), warmup=2, iters=10)
             print(f"scaling,jax-jit,{m},{us:.1f},{1e6/us:.0f}")
 
-            # pallas kernel (interpret mode on CPU — TPU-shaped, not TPU-timed)
+            # pallas kernel via the unified entry point (interpret mode on
+            # CPU — TPU-shaped, not TPU-timed)
             us = time_fn(
-                lambda: jax.block_until_ready(kops.mfi_select(occ, pid)),
+                lambda: jax.block_until_ready(
+                    jcluster.mfi_select(occ, pid, use_kernel=True)
+                ),
                 warmup=1, iters=3,
             )
             print(f"scaling,pallas-interpret,{m},{us:.1f},{1e6/us:.0f}")

@@ -73,8 +73,11 @@ def simulate(
       runs: replicas to average (the paper uses 500).  The batched engine
         auto-shards the replica axis across visible devices when ``runs``
         divides evenly (see :func:`repro.sim.batched.shard_events`).
-      use_kernel: batched engine only — route fragmentation scoring
-        through the Pallas kernel (default: auto, TPU + homogeneous spec).
+      use_kernel: batched engine only — route scoring through the Pallas
+        kernels (default: auto on TPU): the fused ``delta_from_base`` ΔF
+        kernel with per-model dispatch on any fleet, plus the occupancy
+        ``fragscore`` rescore on homogeneous specs.  Specs with
+        ``kernel_lowering=False`` opt out (requesting it raises).
 
     Returns the same aggregate dict as :func:`repro.sim.run_many` /
     :func:`repro.sim.batched.run_batched`.

@@ -171,14 +171,22 @@ def placement_delta_f(
     return f_after - f_before[:, None]
 
 
-@functools.partial(jax.jit, static_argnames=("metric",))
+@functools.partial(jax.jit, static_argnames=("metric", "use_kernel", "interpret"))
 def mfi_select(
     occ: jax.Array,
     profile_id: jax.Array,
     metric: str = "blocked",
     tables: DeviceTables = None,
+    use_kernel: bool = False,
+    interpret: bool = None,
 ) -> MFIDecision:
     """Algorithm 2's argmin over all feasible (GPU, anchor) dry-runs.
+
+    The single entry point for both lowerings: the pure-jnp dense dry-run
+    (default) and the fused Pallas ``mfi_delta`` kernel (``use_kernel=True``
+    — feasibility + ΔF in one launch; ``interpret`` defaults to interpret
+    mode off-TPU).  Both produce the identical decision: scores are
+    integer-valued, the argmin's first-occurrence tie-break is shared.
 
     Args:
       occ: (M, S) int32 occupancy of same-model GPUs (``tables`` selects the
@@ -187,11 +195,25 @@ def mfi_select(
     """
     t = _DEFAULT_TABLES if tables is None else tables
     anchors = t.profile_anchors[profile_id]  # (A,)
-    feasible = placement_feasibility(occ, profile_id, tables)
-    delta = placement_delta_f(occ, profile_id, metric, tables=tables)
+    if use_kernel:
+        from repro.kernels.fragscore import fragscore as _k
 
-    big = jnp.float32(1e9)
-    scored = jnp.where(feasible, delta, big)
+        interp = jax.default_backend() != "tpu" if interpret is None else interpret
+        big = jnp.float32(1e30)  # the kernel's own infeasibility sentinel
+        scored = _k.mfi_delta(
+            occ,
+            t.placement_masks,
+            t.placement_mem,
+            t.profile_masks[profile_id],
+            t.profile_valid[profile_id].astype(jnp.float32),
+            metric=metric,
+            interpret=interp,
+        )
+    else:
+        feasible = placement_feasibility(occ, profile_id, tables)
+        delta = placement_delta_f(occ, profile_id, metric, tables=tables)
+        big = jnp.float32(1e9)
+        scored = jnp.where(feasible, delta, big)
     flat = scored.reshape(-1)
     k = jnp.argmin(flat)  # first occurrence == (gpu, anchor) lexicographic tie-break
     accepted = flat[k] < big

@@ -114,6 +114,14 @@ class PolicySpec:
       engines: engines this spec may be compiled to (default: all).  A
         spec can opt out of an engine, e.g. a host-side-only experiment;
         :func:`resolve` raises through the same message everywhere.
+      kernel_lowering: whether the batched engine may route this spec's
+        scoring through the Pallas kernels (``use_kernel=True``): the fused
+        per-model ``delta_from_base`` ΔF dispatch (specs whose keys consume
+        ``frag-delta``) and the occupancy-based ``fragscore`` rescore
+        (homogeneous fleets).  Default on — the kernels are bit-for-bit
+        with the pure-jnp lowering (integer-valued scores); a spec whose
+        custom semantics must never hit the kernel seam can opt out, and
+        ``run_batched(use_kernel=True)`` then raises.
       description: one-line human summary (shown by ``list_policies``
         consumers and docs).
     """
@@ -123,6 +131,7 @@ class PolicySpec:
     feasibility: str = "window-free"
     defrag: bool = False
     engines: Tuple[str, ...] = ENGINES
+    kernel_lowering: bool = True
     description: str = ""
 
     def __post_init__(self):

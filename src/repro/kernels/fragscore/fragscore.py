@@ -1,13 +1,30 @@
-"""Pallas TPU kernel for batched MIG fragmentation scoring (paper Alg. 1).
+"""Pallas TPU kernels for batched MIG fragmentation scoring (paper Alg. 1/2).
 
 TPU adaptation (DESIGN.md §5): the per-GPU python loop becomes bitmask
-algebra — an (BLK_M, 8) occupancy slab in VMEM against the constant
-placement-window matrix Wᵀ (8, 18), one small matmul per block plus VPU
+algebra — an (BLK_M, S) occupancy slab in VMEM against the constant
+placement-window matrix Wᵀ (S, N), one small matmul per block plus VPU
 predicates.  Cloud-scale schedulers score 10⁴–10⁶ GPUs per decision batch;
 the M axis is tiled in BLK_M-row slabs.
 
 Weights/constants are passed as operands (broadcast BlockSpec) so the same
-compiled kernel serves any placement table (e.g. other GPU models).
+compiled kernel serves any placement table: each :class:`DeviceModel`
+(including the non-8-slice H200-141GB, ``S = 12``) supplies its own
+``(N, S)`` window matrix — shapes are static per model, so a mixed fleet
+dispatches one compiled kernel per model group.
+
+Three kernels:
+
+* :func:`fragscore` — F(m) from raw ``(M, S)`` occupancy bitmaps (Alg. 1);
+* :func:`mfi_delta` — feasibility-masked ΔF over all (GPU, anchor)
+  dry-runs from raw occupancy (Alg. 2's inner loop);
+* :func:`delta_from_base` — the engine-hot-path form of the ΔF table: it
+  consumes the *window-count state* ``base = occ @ Wᵀ`` (+ free counts and
+  pre-scores) that :class:`repro.sim.batched.EngineCore` maintains
+  incrementally, fusing eligibility, the occupied/cross split and the
+  final subtraction into one launch — no occupancy materialization, no
+  per-anchor hypothetical matmuls.  Mirrors
+  :func:`repro.sim.batched._delta_from_base` bit-for-bit (all scores are
+  integer-valued, hence exact in float32).
 """
 
 from __future__ import annotations
@@ -18,24 +35,25 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-NUM_SLICES = 8
+NUM_SLICES = 8  # canonical A100-style geometry (kernels accept any S)
 BLK_M = 512  # GPUs per VMEM slab (512×8 f32 = 16 KiB)
 
 
 def _score_block(occ, w, v, metric: str):
-    """Score a (blk, 8) occupancy slab.  occ f32, w (18,8) f32, v (18,) f32."""
-    inwin = jnp.dot(occ, w.T, preferred_element_type=jnp.float32)  # (blk, 18)
+    """Score a (blk, S) occupancy slab.  occ f32, w (N, S) f32, v (N,) f32."""
+    num_slices = occ.shape[-1]
+    inwin = jnp.dot(occ, w.T, preferred_element_type=jnp.float32)  # (blk, N)
     if metric == "blocked":
         counted = inwin > 0
     else:  # partial
         counted = (inwin > 0) & (inwin < v[None, :])
-    free = NUM_SLICES - jnp.sum(occ, axis=-1, keepdims=True)  # (blk, 1)
+    free = num_slices - jnp.sum(occ, axis=-1, keepdims=True)  # (blk, 1)
     eligible = v[None, :] <= free
     return jnp.sum(jnp.where(counted & eligible, v[None, :], 0.0), axis=-1)
 
 
 def _fragscore_kernel(occ_ref, w_ref, v_ref, out_ref, *, metric: str):
-    occ = occ_ref[...].astype(jnp.float32)  # (BLK_M, 8)
+    occ = occ_ref[...].astype(jnp.float32)  # (BLK_M, S)
     out_ref[...] = _score_block(occ, w_ref[...], v_ref[...], metric)[:, None]
 
 
@@ -51,25 +69,25 @@ def fragscore(
     """F(m) for every GPU.
 
     Args:
-      occ: (M, 8) occupancy bitmap (any int/float dtype).
-      w: (18, 8) placement-window masks.
-      v: (18,) memory-slice weights.
+      occ: (M, S) occupancy bitmap (any int/float dtype, any slice count S).
+      w: (N, S) placement-window masks of the device model.
+      v: (N,) memory-slice weights.
       metric: "blocked" | "partial".
       interpret: run in interpret mode (CPU validation); False on real TPU.
 
     Returns:
       (M,) float32.
     """
-    m = occ.shape[0]
+    m, s = occ.shape
     m_pad = -(-m // BLK_M) * BLK_M
-    occ_p = jnp.zeros((m_pad, NUM_SLICES), occ.dtype).at[:m].set(occ)
+    occ_p = jnp.zeros((m_pad, s), occ.dtype).at[:m].set(occ)
 
     out = pl.pallas_call(
         functools.partial(_fragscore_kernel, metric=metric),
         grid=(m_pad // BLK_M,),
         in_specs=[
-            pl.BlockSpec((BLK_M, NUM_SLICES), lambda i: (i, 0)),
-            pl.BlockSpec((w.shape[0], NUM_SLICES), lambda i: (0, 0)),
+            pl.BlockSpec((BLK_M, s), lambda i: (i, 0)),
+            pl.BlockSpec((w.shape[0], s), lambda i: (0, 0)),
             pl.BlockSpec((v.shape[0],), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((BLK_M, 1), lambda i: (i, 0)),
@@ -81,13 +99,13 @@ def fragscore(
 
 def _mfi_delta_kernel(occ_ref, w_ref, v_ref, pm_ref, pv_ref, out_ref, *, metric: str, max_anchors: int):
     """ΔF of placing the requested profile at each anchor, +inf if infeasible."""
-    occ = occ_ref[...].astype(jnp.float32)  # (BLK_M, 8)
+    occ = occ_ref[...].astype(jnp.float32)  # (BLK_M, S)
     w = w_ref[...]
     v = v_ref[...]
     f_before = _score_block(occ, w, v, metric)  # (BLK_M,)
     big = jnp.float32(1e30)
-    for a in range(max_anchors):  # unrolled: A <= 7
-        mask = pm_ref[a, :]  # (8,)
+    for a in range(max_anchors):  # unrolled: A <= 12
+        mask = pm_ref[a, :]  # (S,)
         valid = pv_ref[a]  # scalar 0/1
         overlap = jnp.sum(occ * mask[None, :], axis=-1)  # (BLK_M,)
         feasible = (overlap == 0) & (valid > 0)
@@ -110,28 +128,28 @@ def mfi_delta(
     """Fused Algorithm-2 inner loop: ΔF over all (GPU, anchor) dry-runs.
 
     Args:
-      occ: (M, 8) occupancy.
+      occ: (M, S) occupancy.
       w, v: placement table as in :func:`fragscore`.
-      profile_masks: (A, 8) window masks of the *requested* profile's anchors
+      profile_masks: (A, S) window masks of the *requested* profile's anchors
         (padded rows are zero).
       profile_valid: (A,) 1.0 for real anchors, 0.0 for padding.
 
     Returns:
       (M, A) float32 ΔF, +1e30 where the placement is infeasible.
     """
-    m = occ.shape[0]
+    m, s = occ.shape
     a = profile_masks.shape[0]
     m_pad = -(-m // BLK_M) * BLK_M
-    occ_p = jnp.zeros((m_pad, NUM_SLICES), occ.dtype).at[:m].set(occ)
+    occ_p = jnp.zeros((m_pad, s), occ.dtype).at[:m].set(occ)
 
     out = pl.pallas_call(
         functools.partial(_mfi_delta_kernel, metric=metric, max_anchors=a),
         grid=(m_pad // BLK_M,),
         in_specs=[
-            pl.BlockSpec((BLK_M, NUM_SLICES), lambda i: (i, 0)),
-            pl.BlockSpec((w.shape[0], NUM_SLICES), lambda i: (0, 0)),
+            pl.BlockSpec((BLK_M, s), lambda i: (i, 0)),
+            pl.BlockSpec((w.shape[0], s), lambda i: (0, 0)),
             pl.BlockSpec((v.shape[0],), lambda i: (0,)),
-            pl.BlockSpec((a, NUM_SLICES), lambda i: (0, 0)),
+            pl.BlockSpec((a, s), lambda i: (0, 0)),
             pl.BlockSpec((a,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((BLK_M, a), lambda i: (i, 0)),
@@ -144,4 +162,115 @@ def mfi_delta(
         profile_masks.astype(jnp.float32),
         profile_valid.astype(jnp.float32),
     )
+    return out[:m]
+
+
+def _delta_from_base_kernel(
+    base_ref, free_ref, f_ref, v_ref, mw_ref, mp_ref, mem_ref, out_ref,
+    *, metric: str,
+):
+    """Fused ΔF dry-run table from the incremental window-count state.
+
+    Window counts after a feasible placement are ``base + mw`` (the anchor
+    window is disjoint from current occupancy), so for the "blocked" metric
+    the counted-predicate decomposes as ``(base > 0) | (mw > 0)`` and the
+    whole (BLK_M, A) tile is one (BLK_M, N) × (N, A) matmul on the MXU plus
+    VPU predicates; "partial" takes the dense (BLK_M, A, N) elementwise
+    path (A ≤ 12, N ≤ 31 — a few hundred KiB of VMEM).
+    """
+    base = base_ref[...]                     # (BLK_M, N) f32
+    free = free_ref[...][:, 0]               # (BLK_M,) f32
+    f_before = f_ref[...][:, 0]              # (BLK_M,) f32
+    v = v_ref[...]                           # (N,) f32
+    mw = mw_ref[...]                         # (A, N) f32
+    mp = mp_ref[...]                         # (A, N) f32
+    mem = mem_ref[0]                         # scalar f32 — request slice demand
+    free_after = free - mem                  # (BLK_M,) — same for every anchor
+    elig = v[None, :] <= free_after[:, None]  # (BLK_M, N)
+    if metric == "partial":
+        ba = base[:, None, :] + mw[None, :, :]  # (BLK_M, A, N)
+        counted = (ba > 0) & (ba < v[None, None, :])
+        f_after = jnp.sum(
+            jnp.where(counted & elig[:, None, :], v[None, None, :], 0.0), axis=-1
+        )
+    else:  # blocked: counted_after = (base > 0) | (mw > 0)
+        cb = base > 0                        # (BLK_M, N)
+        s_occ = jnp.sum(jnp.where(cb & elig, v[None, :], 0.0), axis=-1)  # (BLK_M,)
+        cross = jnp.dot(                     # (BLK_M, A)
+            jnp.where(~cb & elig, v[None, :], 0.0),
+            mp.T,
+            preferred_element_type=jnp.float32,
+        )
+        f_after = s_occ[:, None] + cross
+    out_ref[...] = f_after - f_before[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "interpret"))
+def delta_from_base(
+    base: jax.Array,
+    free: jax.Array,
+    v: jax.Array,
+    mw: jax.Array,
+    mp: jax.Array,
+    mem: jax.Array,
+    f_before: jax.Array,
+    *,
+    metric: str = "blocked",
+    interpret: bool = True,
+) -> jax.Array:
+    """ΔF of every anchor dry-run of one request, from window counts.
+
+    The Pallas form of :func:`repro.sim.batched._delta_from_base` for one
+    model group (all GPUs share the placement table ``v``); the batched
+    engine dispatches one call per :class:`~repro.core.mig.ClusterSpec`
+    model group.  Output is the *raw* ΔF (no feasibility masking) —
+    exactly what the engine's masked-refinement select consumes.
+
+    Args:
+      base: (M, N) float32 — occupied-slice count per placement window.
+      free: (M,) — free memory slices per GPU.
+      v: (N,) float32 — placement-window sizes (0 where padded).
+      mw: (A, N) float32 — slices the request's anchors add per window.
+      mp: (A, N) float32 — ``mw > 0`` indicator.
+      mem: scalar — the request's slice demand on this model.
+      f_before: (M,) float32 — current F(m) scores.
+      metric: "blocked" | "partial".
+      interpret: run in interpret mode (CPU validation); False on real TPU.
+
+    Returns:
+      (M, A) float32 ΔF table.
+    """
+    m, n = base.shape
+    a = mw.shape[0]
+    m_pad = -(-m // BLK_M) * BLK_M
+    base_p = jnp.zeros((m_pad, n), jnp.float32).at[:m].set(base)
+    free_p = jnp.zeros((m_pad, 1), jnp.float32).at[:m, 0].set(
+        free.astype(jnp.float32)
+    )
+    f_p = jnp.zeros((m_pad, 1), jnp.float32).at[:m, 0].set(f_before)
+
+    out = pl.pallas_call(
+        functools.partial(_delta_from_base_kernel, metric=metric),
+        grid=(m_pad // BLK_M,),
+        in_specs=[
+            pl.BlockSpec((BLK_M, n), lambda i: (i, 0)),
+            pl.BlockSpec((BLK_M, 1), lambda i: (i, 0)),
+            pl.BlockSpec((BLK_M, 1), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((a, n), lambda i: (0, 0)),
+            pl.BlockSpec((a, n), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((BLK_M, a), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_pad, a), jnp.float32),
+        interpret=interpret,
+    )(
+        base_p,
+        free_p,
+        f_p,
+        v.astype(jnp.float32),
+        mw.astype(jnp.float32),
+        mp.astype(jnp.float32),
+        jnp.reshape(mem, (1,)).astype(jnp.float32),
+        )
     return out[:m]

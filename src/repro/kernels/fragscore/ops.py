@@ -1,8 +1,9 @@
-"""Public jit'd wrappers for the fragscore / mfi_delta Pallas kernels."""
+"""Public jit'd wrappers for the fragscore / mfi_delta / delta_from_base
+Pallas kernels (A100-80GB table defaults; pass other models' tables to the
+kernels in :mod:`repro.kernels.fragscore.fragscore` directly)."""
 
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
@@ -43,15 +44,43 @@ def mfi_delta_f(occ: jax.Array, profile_id, metric: str = "blocked") -> jax.Arra
     )
 
 
+def delta_from_base_f(
+    base: jax.Array,
+    free: jax.Array,
+    profile_id,
+    f_before: jax.Array,
+    metric: str = "blocked",
+) -> jax.Array:
+    """Kernel-backed engine-hot-path ΔF table from window counts.
+
+    A100-80GB convenience wrapper over
+    :func:`repro.kernels.fragscore.fragscore.delta_from_base`; the batched
+    engine's per-model dispatch (:func:`repro.sim.batched.make_delta_fn`)
+    calls the kernel once per ClusterSpec model group with each group's
+    own tables.
+    """
+    tables = jcluster.tables_for(mig.A100_80GB)
+    maskwin = (
+        tables.profile_masks[profile_id].astype(jnp.float32) @ jnp.asarray(_W).T
+    )  # (A, N)
+    return _k.delta_from_base(
+        base,
+        free,
+        jnp.asarray(_V),
+        maskwin,
+        (maskwin > 0).astype(jnp.float32),
+        jnp.asarray(mig.PROFILE_MEM)[profile_id],
+        f_before,
+        metric=metric,
+        interpret=_use_interpret(),
+    )
+
+
 def mfi_select(occ: jax.Array, profile_id, metric: str = "blocked") -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Kernel-backed Algorithm 2: returns (gpu, anchor, accepted)."""
-    delta = mfi_delta_f(occ, profile_id, metric)  # (M, A)
-    flat = delta.reshape(-1)
-    k = jnp.argmin(flat)
-    accepted = flat[k] < 1e29
-    a = delta.shape[1]
-    gpu = jnp.where(accepted, k // a, -1).astype(jnp.int32)
-    anchor = jnp.where(
-        accepted, jcluster.PROFILE_ANCHORS[profile_id][k % a], -1
-    ).astype(jnp.int32)
-    return gpu, anchor, accepted
+    """Kernel-backed Algorithm 2 — thin alias for the unified entry point
+    :func:`repro.core.cluster.mfi_select` with ``use_kernel=True``.
+
+    Returns the legacy ``(gpu, anchor, accepted)`` tuple.
+    """
+    d = jcluster.mfi_select(occ, profile_id, metric, use_kernel=True)
+    return d.gpu, d.anchor, d.accepted

@@ -1,8 +1,12 @@
-"""Pure-jnp oracle for the fragscore kernel.
+"""Pure-jnp oracles for the fragscore kernels.
 
-Computes F(m) (paper Algorithm 1) for a batch of GPU occupancy bitmaps.
-Mirrors :func:`repro.core.cluster.frag_scores` but is kept dependency-light
-so the kernel test compares kernel vs. this file alone.
+Computes F(m) (paper Algorithm 1) and the ΔF dry-run table for a batch of
+GPUs.  Mirrors :func:`repro.core.cluster.frag_scores` /
+:func:`repro.sim.batched._delta_from_base` but is kept dependency-light so
+the kernel tests compare kernel vs. this file alone.  Every oracle takes
+the placement table as explicit ``(w, v)`` operands (defaulting to the
+A100-80GB table), so any registered :class:`~repro.core.mig.DeviceModel` —
+including the non-8-slice H200-141GB — can be checked with its own table.
 """
 
 from __future__ import annotations
@@ -19,24 +23,71 @@ V = np.asarray(mig.PLACEMENT_MEM, dtype=np.float32)          # (18,)
 NUM_SLICES = mig.NUM_MEM_SLICES
 
 
-def fragscore_ref(occ: jax.Array, metric: str = "blocked") -> jax.Array:
+def fragscore_ref(
+    occ: jax.Array,
+    metric: str = "blocked",
+    w: jax.Array = None,
+    v: jax.Array = None,
+) -> jax.Array:
     """F(m) for every GPU.
 
     Args:
-      occ: (M, 8) int/float occupancy bitmap.
+      occ: (M, S) int/float occupancy bitmap.
       metric: "blocked" | "partial".
+      w, v: (N, S) / (N,) placement table (default: A100-80GB).
 
     Returns:
       (M,) float32 fragmentation scores.
     """
+    w = W if w is None else jnp.asarray(w, jnp.float32)
+    v = V if v is None else jnp.asarray(v, jnp.float32)
     occf = occ.astype(jnp.float32)
-    inwin = occf @ W.T  # (M, 18) occupied count per window
+    inwin = occf @ w.T  # (M, N) occupied count per window
     if metric == "blocked":
         counted = inwin > 0
     elif metric == "partial":
-        counted = (inwin > 0) & (inwin < V[None, :])
+        counted = (inwin > 0) & (inwin < v[None, :])
     else:
         raise ValueError(metric)
-    free = NUM_SLICES - occf.sum(axis=-1, keepdims=True)
-    eligible = V[None, :] <= free
-    return jnp.sum(jnp.where(counted & eligible, V[None, :], 0.0), axis=-1)
+    free = occf.shape[-1] - occf.sum(axis=-1, keepdims=True)
+    eligible = v[None, :] <= free
+    return jnp.sum(jnp.where(counted & eligible, v[None, :], 0.0), axis=-1)
+
+
+def delta_from_base_ref(
+    base: jax.Array,
+    free: jax.Array,
+    v: jax.Array,
+    mw: jax.Array,
+    mem,
+    f_before: jax.Array,
+    metric: str = "blocked",
+) -> jax.Array:
+    """ΔF of every anchor dry-run, from window counts — dense oracle.
+
+    The straightforward (M, A, N) form: window counts after placement are
+    ``base + mw`` (feasible windows are disjoint from current occupancy),
+    eligibility compares window sizes against the post-allocation free
+    count.  The :func:`repro.kernels.fragscore.fragscore.delta_from_base`
+    kernel must match this bit-for-bit (integer-valued scores).
+
+    Args:
+      base: (M, N) occupied-slice count per placement window.
+      free: (M,) free slices per GPU.
+      v: (N,) window sizes.
+      mw: (A, N) slices each anchor of the request adds per window.
+      mem: scalar slice demand of the request.
+      f_before: (M,) current F scores.
+    """
+    v = jnp.asarray(v, jnp.float32)
+    ba = base[:, None, :] + jnp.asarray(mw, jnp.float32)[None, :, :]  # (M, A, N)
+    if metric == "blocked":
+        counted = ba > 0
+    elif metric == "partial":
+        counted = (ba > 0) & (ba < v[None, None, :])
+    else:
+        raise ValueError(metric)
+    free_after = free.astype(jnp.float32) - jnp.float32(mem)  # (M,)
+    eligible = v[None, None, :] <= free_after[:, None, None]
+    f_after = jnp.sum(jnp.where(counted & eligible, v[None, None, :], 0.0), axis=-1)
+    return f_after - f_before[:, None]

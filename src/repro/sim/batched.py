@@ -347,20 +347,108 @@ def _delta_from_base(
     return f_after - f_before[:, None]
 
 
+def _delta_from_base_all(
+    base: jax.Array,
+    free: jax.Array,
+    metric: str,
+    v: jax.Array,
+    mw_all: jax.Array,
+    mp_all: jax.Array,
+    mem_all: jax.Array,
+    f_before: jax.Array,
+) -> jax.Array:
+    """ΔF of every anchor dry-run of EVERY demand class: (P, M, A) float32.
+
+    The class-batched form of :func:`_delta_from_base` — ``mw_all/mp_all
+    (P, M, A, N)`` and ``mem_all (P, M)`` carry a leading class axis and the
+    whole table is one batched einsum over it (no per-class Python loop).
+    Bitwise identical to stacking the per-class calls: every contraction
+    sums the same integer-valued float32 terms.
+    """
+    freef = free.astype(jnp.float32)
+    free_after = freef[None, :] - mem_all           # (P, M)
+    elig = v[None] <= free_after[..., None]         # (P, M, N)
+    if metric == "partial":
+        ba = base[None, :, None, :] + mw_all        # (P, M, A, N)
+        counted = (ba > 0) & (ba < v[None, :, None, :])
+        f_after = jnp.sum(
+            jnp.where(counted & elig[:, :, None, :], v[None, :, None, :], 0.0),
+            axis=-1,
+        )
+    else:  # blocked: counted_after = (base > 0) | (mw > 0)
+        cb = base > 0                               # (M, N)
+        s_occ = jnp.sum(jnp.where(cb[None] & elig, v[None], 0.0), axis=-1)  # (P, M)
+        cross = jnp.einsum(
+            "pmn,pman->pma", jnp.where(~cb[None] & elig, v[None], 0.0), mp_all
+        )  # (P, M, A)
+        f_after = s_occ[..., None] + cross
+    return f_after - f_before[None, :, None]
+
+
 def make_frag_fn(
     metric: str = "blocked",
     use_kernel: bool = False,
     model: mig.DeviceModel = mig.A100_80GB,
+    interpret: Optional[bool] = None,
 ):
-    """(N, S) occupancy -> (N,) F scores; Pallas kernel when ``use_kernel``."""
+    """(N, S) occupancy -> (N,) F scores; Pallas kernel when ``use_kernel``
+    (``interpret`` defaults to interpret mode off-TPU)."""
     if use_kernel:
         from repro.kernels.fragscore import fragscore as _k
 
         w = jnp.asarray(model.placement_masks, dtype=jnp.float32)
         v = jnp.asarray(model.placement_mem, dtype=jnp.float32)
-        return lambda occ: _k.fragscore(occ, w, v, metric=metric, interpret=False)
+        interp = (jax.default_backend() != "tpu") if interpret is None else interpret
+        return lambda occ: _k.fragscore(occ, w, v, metric=metric, interpret=interp)
     tables = jcluster.tables_for(model)
     return functools.partial(jcluster.frag_scores, metric=metric, tables=tables)
+
+
+def make_delta_fn(
+    spec: mig.ClusterSpec,
+    metric: str = "blocked",
+    interpret: Optional[bool] = None,
+):
+    """Fused Pallas ΔF dispatch: ``(base, free, f, pid) -> (M, A)``.
+
+    Lowers the engine's dry-run ΔF table to the
+    :func:`repro.kernels.fragscore.fragscore.delta_from_base` kernel with
+    **per-model dispatch**: one launch per distinct
+    :class:`~repro.core.mig.DeviceModel` of ``spec`` (the group's GPU ids
+    are static, so each launch sees one placement table with static
+    shapes), scattered back into the padded ``(M, A)`` layout the
+    masked-refinement select consumes.  This is how ``use_kernel`` works on
+    *mixed* fleets — the occupancy-based ``fragscore`` kernel still
+    requires a homogeneous spec (it bakes in one table), but the ΔF path
+    only needs per-group window counts.  ``interpret`` defaults to
+    interpret mode off-TPU (CPU validation).
+    """
+    from repro.kernels.fragscore import fragscore as _k
+
+    tables = spec_tables(spec)
+    groups = spec.model_groups()  # static (model, numpy GPU-id array) pairs
+    a = int(tables.profile_rows.shape[-1])
+    interp = (jax.default_backend() != "tpu") if interpret is None else interpret
+
+    def delta_fn(base, free, f, pid):
+        out = jnp.zeros((base.shape[0], a), jnp.float32)
+        for k, (_, rows) in enumerate(groups):
+            ridx = jnp.asarray(rows)
+            d = _k.delta_from_base(
+                base[ridx],
+                free[ridx],
+                tables.V[k],
+                tables.maskwin[k, pid],
+                tables.maskpos[k, pid],
+                tables.profile_mem[k, pid],
+                f[ridx],
+                metric=metric,
+                interpret=interp,
+            )
+            out = out.at[ridx].set(d)
+        return out
+
+    return delta_fn
 
 
 # ---------------------------------------------------------------------------
@@ -430,18 +518,26 @@ def _feasibility(base: jax.Array, rows: jax.Array, valid: jax.Array) -> jax.Arra
     return (overlap == 0) & valid
 
 
-def _select(spec, base, free, f, metric, tables, midx, vg, pid, cursor):
-    """Shared decision path: returns (gpu, aidx, ok) for one request."""
+def _select(spec, base, free, f, metric, tables, midx, vg, pid, cursor,
+            delta_fn=None):
+    """Shared decision path: returns (gpu, aidx, ok) for one request.
+
+    ``delta_fn`` (from :func:`make_delta_fn`) routes the ΔF table through
+    the fused Pallas kernel; ``None`` uses the pure-jnp lowering.
+    """
     rows = tables.profile_rows[midx, pid]  # (M, A)
     valid = tables.profile_valid[midx, pid]  # (M, A)
     mem_g = tables.profile_mem[midx, pid]  # (M,)
     anchors_g = tables.profile_anchors[midx, pid]  # (M, A), -1 where padded
     feasible = _feasibility(base, rows, valid)
     if spec.requires_delta_f:  # ΔF table only for specs whose keys use it
-        delta = _delta_from_base(
-            base, free, metric, vg,
-            tables.maskwin[midx, pid], tables.maskpos[midx, pid], mem_g, f,
-        )
+        if delta_fn is not None:
+            delta = delta_fn(base, free, f, pid)
+        else:
+            delta = _delta_from_base(
+                base, free, metric, vg,
+                tables.maskwin[midx, pid], tables.maskpos[midx, pid], mem_g, f,
+            )
     else:
         delta = None
     return _lower_select(spec, feasible, free, mem_g, delta, anchors_g, cursor, midx)
@@ -473,7 +569,7 @@ def _key_rows(base_key, free, mem_g, delta, anchors_g, cursor, gidx, kidx, num_g
 
 
 def _refine_rows(spec, feasible, free, mem_g, delta, anchors_g, cursor, gidx,
-                 kidx, num_gpus):
+                 kidx, num_gpus, return_keys=False):
     """Per-row spec selection: one independent argmin along the anchor axis
     of every row of ``feasible (C, A)``.  Returns ``(aidx (C,), ok (C,))``.
 
@@ -481,8 +577,15 @@ def _refine_rows(spec, feasible, free, mem_g, delta, anchors_g, cursor, gidx,
     feasible set is confined to its own GPU (GPU-keyed scores are constant
     per row, so only anchor-varying keys act; the implicit ascending-anchor
     tie-break is the first surviving column).
+
+    With ``return_keys`` additionally returns the winner's key values
+    ``(C, L)`` (direction prefix applied) — the row's representative in a
+    cross-row lexicographic comparison: the grid-wide lex-min equals the
+    lex-min over per-row winners compared by ``(keys…, gpu)``, which is
+    what the factored migrate search exploits.
     """
     mask = feasible
+    vals = []
     for key in spec.keys:
         val = _key_rows(
             key_base(key), free, mem_g, delta, anchors_g, cursor, gidx, kidx,
@@ -490,9 +593,19 @@ def _refine_rows(spec, feasible, free, mem_g, delta, anchors_g, cursor, gidx,
         )
         if key.startswith("-"):
             val = -val
+        if return_keys:
+            vals.append(jnp.broadcast_to(val, feasible.shape))
         masked = jnp.where(mask, val, _BIG)
         mask = mask & (masked == masked.min(axis=-1, keepdims=True))
-    return jnp.argmax(mask, axis=-1), mask.any(axis=-1)
+    aidx = jnp.argmax(mask, axis=-1)
+    ok = mask.any(axis=-1)
+    if not return_keys:
+        return aidx, ok
+    keys = jnp.stack(
+        [jnp.take_along_axis(v, aidx[:, None], axis=1)[:, 0] for v in vals],
+        axis=-1,
+    )  # (C, L)
+    return aidx, ok, keys
 
 
 def _key_grid(base_key, free, mem_g, delta, anchors_g, cursor, midx):
@@ -563,7 +676,7 @@ class MigrationResult(NamedTuple):
     new_mwin: jax.Array       # (N,) float32 — window counts the new mask adds
 
 
-def _migrate_search(
+def _migrate_search_dense(
     spec: PolicySpec,
     metric: str,
     tables: SpecTables,
@@ -580,15 +693,13 @@ def _migrate_search(
     cursor: jax.Array,
     want: jax.Array,
 ) -> MigrationResult:
-    """Exhaustive masked single-migration search over live ring entries.
+    """Reference dense form of the single-migration search.
 
-    For every candidate victim (a running workload): evacuate it, re-select
-    the request on the victim's GPU (the only GPU where feasibility can
-    have appeared — the arrival was just rejected everywhere), re-place the
-    victim anywhere via the spec's keys, and score the candidate by the
-    total cluster fragmentation after both moves.  The winner minimizes
-    ``(total F, victim gpu, victim anchor)`` — the host search's canonical
-    order.  ``want`` gates the whole stage (scalar bool).
+    Materializes the full victim × cluster ``(C, M, A)`` re-placement grid
+    (``C`` = every ring slot, dead ones included) and lex-refines it per
+    victim — the semantics :func:`_migrate_search` factors into
+    ``O(P·M·A + C_live·A)`` work.  Kept as the oracle for the
+    factored-vs-dense equivalence test; not used on the engine hot path.
     """
     num_gpus = midx.shape[0]
     rows, cols = ring_gpu.shape
@@ -710,6 +821,260 @@ def _migrate_search(
         aidx=aidx_req[j].astype(jnp.int32),
         vic_row=(j // cols).astype(jnp.int32),
         vic_col=(j % cols).astype(jnp.int32),
+        vic_gpu=rg[j],
+        vic_anchor=vic_anchor[j],
+        vic_pid=rp[j],
+        new_gpu=new_gpu[j].astype(jnp.int32),
+        new_aidx=new_aidx[j].astype(jnp.int32),
+        new_anchor=tables.profile_anchors[kv[j], rp[j], new_aidx[j]],
+        old_mask=rm[j],
+        old_mwin=mwin_vic[j],
+        new_mask=mask_new[j],
+        new_mwin=mwin_new[j],
+    )
+
+
+def _lex_top2(keys: jax.Array, ok: jax.Array):
+    """Two lexicographically smallest valid columns per leading row.
+
+    ``keys (B, M, L)`` are ordered key vectors (direction already applied),
+    ``ok (B, M)`` their validity; remaining ties break by ascending column
+    index.  Returns ``(g1, ok1, g2, ok2)``, each ``(B,)``.
+    """
+    def best(mask):
+        for l in range(keys.shape[-1]):
+            masked = jnp.where(mask, keys[..., l], _BIG)
+            mask = mask & (masked == masked.min(axis=-1, keepdims=True))
+        return jnp.argmax(mask, axis=-1), mask.any(axis=-1)
+
+    g1, ok1 = best(ok)
+    m = keys.shape[1]
+    g2, ok2 = best(ok & (jnp.arange(m)[None, :] != g1[:, None]))
+    return g1, ok1, g2, ok2
+
+
+def _migrate_search(
+    spec: PolicySpec,
+    metric: str,
+    tables: SpecTables,
+    midx: jax.Array,
+    vg: jax.Array,
+    base: jax.Array,
+    free: jax.Array,
+    f: jax.Array,
+    ring_gpu: jax.Array,
+    ring_mask: jax.Array,
+    ring_pid: jax.Array,
+    ring_aidx: jax.Array,
+    pid_c: jax.Array,
+    cursor: jax.Array,
+    want: jax.Array,
+    delta_fn=None,
+) -> MigrationResult:
+    """Factored masked single-migration search over live ring entries.
+
+    For every candidate victim (a running workload): evacuate it, re-select
+    the request on the victim's GPU (the only GPU where feasibility can
+    have appeared — the arrival was just rejected everywhere), re-place the
+    victim anywhere via the spec's keys, and score the candidate by the
+    total cluster fragmentation after both moves.  The winner minimizes
+    ``(total F, victim gpu, victim anchor)`` — the host search's canonical
+    order.  ``want`` gates the whole stage (scalar bool).
+
+    Unlike :func:`_migrate_search_dense` (the reference oracle), the victim
+    re-placement never materializes a ``(C, M, A)`` grid.  Evacuating a
+    victim perturbs exactly one GPU row, so the re-placement candidates
+    split into the *patched* row (the victim's own GPU after evacuation +
+    request placement) and ``M - 1`` *untouched* rows shared by every
+    victim of the same demand class:
+
+    * once per event, a per-class ``(P, M, A)`` row refinement over the
+      untouched cluster reduces each GPU row to its winning anchor + key
+      vector, and :func:`_lex_top2` keeps the best and runner-up row per
+      class (the runner-up covers victims whose own GPU is the best row) —
+      ``O(P·M·A)``, the per-class table today's ``delta_all`` already paid
+      for and then re-broadcast;
+    * per victim, only its patched row is refined (``O(C_live·A)``) and
+      lex-compared against the class's surviving untouched row (the grid
+      lex-min equals the min over row winners compared by ``(keys…,
+      gpu)``, anchors having been resolved within each row).
+
+    Dead ring slots are compacted away first: the number of *live* entries
+    is bounded by the cluster's total slice count (every running workload
+    occupies at least one slice), a static budget ``C_live = min(C, M·S)``
+    that a stable argsort of the ``present`` mask fills with live entries
+    in ring order.  Decisions are bit-for-bit those of the dense search:
+    every key value is integer-valued, hence exact in float32, and the
+    winner is unique (two live workloads can never share a (gpu, anchor)).
+    """
+    num_gpus = midx.shape[0]
+    rows, cols = ring_gpu.shape
+    c_total = rows * cols
+    s = ring_mask.shape[-1]
+    rg = ring_gpu.reshape(c_total)                 # (C,) victim gpu
+    rm = ring_mask.reshape(c_total, s)             # (C, S) victim window
+    rp = ring_pid.reshape(c_total)                 # (C,) victim class
+    ra = ring_aidx.reshape(c_total)                # (C,) victim anchor index
+    present = rm.sum(axis=1) > 0                   # live entries only
+
+    # -- live-candidate compaction: dead ring slots cost nothing ------------
+    c_live = min(c_total, num_gpus * s)
+    if c_live < c_total:
+        live = jnp.argsort(~present)[:c_live]      # stable: live first, ring order
+        rg, rm, rp, ra = rg[live], rm[live], rp[live], ra[live]
+        present = present[live]
+    else:
+        live = jnp.arange(c_total, dtype=jnp.int32)
+    kc = midx[rg]                                  # (C,) victim model index
+    vgc = vg[rg]                                   # (C, N) window sizes
+
+    # -- evacuate the victim from its own GPU -------------------------------
+    mwin_vic = tables.maskwin[kc, rp, ra]          # (C, N)
+    mem_vic = rm.sum(axis=1)                       # (C,) int32
+    base_v = base[rg] - mwin_vic                   # (C, N)
+    free_v = free[rg] + mem_vic                    # (C,)
+    f_v = _frag_from_base(base_v, free_v, metric, vgc)  # (C,)
+
+    # -- re-select the request on the freed GPU -----------------------------
+    rows_req = tables.profile_rows[kc, pid_c]      # (C, A)
+    valid_req = tables.profile_valid[kc, pid_c]    # (C, A)
+    mem_req = tables.profile_mem[kc, pid_c]        # (C,) float32
+    anchors_req = tables.profile_anchors[kc, pid_c]  # (C, A)
+    overlap_req = jnp.take_along_axis(base_v, rows_req, axis=1)
+    feas_req = (overlap_req == 0) & valid_req
+    if spec.requires_delta_f:
+        delta_req = _delta_from_base(
+            base_v, free_v, metric, vgc,
+            tables.maskwin[kc, pid_c], tables.maskpos[kc, pid_c],
+            mem_req, f_v,
+        )
+    else:
+        delta_req = None
+    aidx_req, ok_req = _refine_rows(
+        spec, feas_req, free_v, mem_req, delta_req, anchors_req, cursor,
+        rg, kc, num_gpus,
+    )
+
+    # -- place the request on the freed GPU ---------------------------------
+    take = lambda t, i: jnp.take_along_axis(  # noqa: E731 — (C, A, ...) @ (C,)
+        t, i[:, None, None] if t.ndim == 3 else i[:, None], axis=1
+    )[:, 0]
+    mask_req = take(tables.profile_masks[kc, pid_c], aidx_req)   # (C, S)
+    mwin_req = take(tables.maskwin[kc, pid_c], aidx_req)         # (C, N)
+    base2 = base_v + mwin_req                                    # (C, N)
+    free2 = free_v - mask_req.sum(axis=1)                        # (C,)
+    f2 = _frag_from_base(base2, free2, metric, vgc)              # (C,)
+
+    # -- per-class row winners on the untouched cluster (once per event) ----
+    p_ = mig.NUM_PROFILES
+    a_ = tables.profile_rows.shape[-1]
+    rows_all = jnp.transpose(tables.profile_rows[midx], (1, 0, 2))      # (P, M, A)
+    valid_all = jnp.transpose(tables.profile_valid[midx], (1, 0, 2))
+    anchors_all = jnp.transpose(tables.profile_anchors[midx], (1, 0, 2))
+    mem_all = jnp.transpose(tables.profile_mem[midx], (1, 0))           # (P, M)
+    overlap_all = jnp.take_along_axis(base[None], rows_all, axis=2)     # (P, M, A)
+    feas_all = (overlap_all == 0) & valid_all
+    if spec.requires_delta_f:
+        if delta_fn is not None:  # fused Pallas ΔF, one launch per class
+            delta_all = jnp.stack([delta_fn(base, free, f, p) for p in range(p_)])
+        else:
+            mw_all = jnp.transpose(tables.maskwin[midx], (1, 0, 2, 3))  # (P, M, A, N)
+            mp_all = jnp.transpose(tables.maskpos[midx], (1, 0, 2, 3))
+            delta_all = _delta_from_base_all(
+                base, free, metric, vg, mw_all, mp_all, mem_all, f
+            )  # (P, M, A)
+    else:
+        delta_all = None
+    aw, okw, kw = _refine_rows(
+        spec,
+        feas_all.reshape(p_ * num_gpus, a_),
+        jnp.tile(free, p_),
+        mem_all.reshape(p_ * num_gpus),
+        None if delta_all is None else delta_all.reshape(p_ * num_gpus, a_),
+        anchors_all.reshape(p_ * num_gpus, a_),
+        cursor,
+        jnp.tile(jnp.arange(num_gpus, dtype=jnp.int32), p_),
+        jnp.tile(midx, p_),
+        num_gpus,
+        return_keys=True,
+    )
+    l_ = kw.shape[-1]
+    aw = aw.reshape(p_, num_gpus)
+    okw = okw.reshape(p_, num_gpus)
+    kw = kw.reshape(p_, num_gpus, l_)
+    g1, ok1, g2, ok2 = _lex_top2(kw, okw)          # best + runner-up per class
+    pa = jnp.arange(p_)
+    kw1, aw1 = kw[pa, g1], aw[pa, g1]              # (P, L), (P,)
+    kw2, aw2 = kw[pa, g2], aw[pa, g2]
+
+    # -- per victim: best untouched row (excluding its own GPU) -------------
+    use2 = g1[rp] == rg                            # own GPU was the best row
+    gu = jnp.where(use2, g2[rp], g1[rp])
+    oku = jnp.where(use2, ok2[rp], ok1[rp])
+    au = jnp.where(use2, aw2[rp], aw1[rp])
+    ku = jnp.where(use2[:, None], kw2[rp], kw1[rp])  # (C, L)
+
+    # -- per victim: refine its patched row ---------------------------------
+    rows_vic = tables.profile_rows[kc, rp]         # (C, A)
+    valid_vic = tables.profile_valid[kc, rp]       # (C, A)
+    mem_vic_c = tables.profile_mem[kc, rp]         # (C,) float32
+    anchors_vic = tables.profile_anchors[kc, rp]   # (C, A)
+    overlap_patch = jnp.take_along_axis(base2, rows_vic, axis=1)
+    feas_patch = (overlap_patch == 0) & valid_vic  # (C, A)
+    if spec.requires_delta_f:
+        delta_patch = _delta_from_base(
+            base2, free2, metric, vgc,
+            tables.maskwin[kc, rp], tables.maskpos[kc, rp],
+            mem_vic_c, f2,
+        )  # (C, A)
+    else:
+        delta_patch = None
+    ap, okp, kp = _refine_rows(
+        spec, feas_patch, free2, mem_vic_c, delta_patch, anchors_vic, cursor,
+        rg, kc, num_gpus, return_keys=True,
+    )
+
+    # -- lex-merge the two row winners: (keys…, gpu) ------------------------
+    ku_e = jnp.where(oku[:, None], ku, _BIG)
+    kp_e = jnp.where(okp[:, None], kp, _BIG)
+    lt = jnp.zeros(ku.shape[0], bool)
+    eq = jnp.ones(ku.shape[0], bool)
+    for l in range(l_):
+        lt = lt | (eq & (ku_e[:, l] < kp_e[:, l]))
+        eq = eq & (ku_e[:, l] == kp_e[:, l])
+    pick_u = oku & (lt | (eq & (gu < rg)))
+    new_gpu = jnp.where(pick_u, gu, rg)
+    new_aidx = jnp.where(pick_u, au, ap)
+    ok_vic = oku | okp
+
+    # -- score: total cluster fragmentation after both moves ----------------
+    kv = midx[new_gpu]                                           # (C,)
+    idx3 = (kv, rp, new_aidx)
+    mask_new = tables.profile_masks[idx3]                        # (C, S)
+    mwin_new = tables.maskwin[idx3]                              # (C, N)
+    same = new_gpu == rg
+    base_gv = jnp.where(same[:, None], base2, base[new_gpu])     # (C, N)
+    free_gv = jnp.where(same, free2, free[new_gpu])              # (C,)
+    f_gv_before = _frag_from_base(base_gv, free_gv, metric, vg[new_gpu])
+    f_gv_after = _frag_from_base(
+        base_gv + mwin_new, free_gv - mask_new.sum(axis=1), metric, vg[new_gpu]
+    )
+    total = f.sum() - f[rg] + f2 + f_gv_after - f_gv_before      # (C,)
+
+    # -- canonical choice: lex-min (total F, victim gpu, victim anchor) -----
+    vic_anchor = tables.profile_anchors[kc, rp, ra]              # (C,)
+    cmask = present & ok_req & ok_vic & want
+    for val in (total, rg.astype(jnp.float32), vic_anchor.astype(jnp.float32)):
+        masked = jnp.where(cmask, val, _BIG)
+        cmask = cmask & (masked == masked.min())
+    j = jnp.argmax(cmask)
+    orig = live[j]                                 # winner's original ring slot
+    return MigrationResult(
+        mig=cmask[j],
+        gpu=rg[j],
+        aidx=aidx_req[j].astype(jnp.int32),
+        vic_row=(orig // cols).astype(jnp.int32),
+        vic_col=(orig % cols).astype(jnp.int32),
         vic_gpu=rg[j],
         vic_anchor=vic_anchor[j],
         vic_pid=rp[j],
@@ -958,6 +1323,7 @@ class EngineCore:
     midx: jax.Array
     vg: jax.Array
     frag_fn: Optional[object] = None
+    delta_fn: Optional[object] = None
 
     # -- stages --------------------------------------------------------------
     def _stage_boundary_measure(self, st: ReplicaState):
@@ -997,7 +1363,7 @@ class EngineCore:
         """Place (or reject) the arrival; ``pid == -1`` lanes are no-ops."""
         gpu, aidx, ok = _select(
             self.spec, st.base, st.free, st.f, self.metric, self.tables,
-            self.midx, self.vg, pid_c, st.rr,
+            self.midx, self.vg, pid_c, st.rr, delta_fn=self.delta_fn,
         )
         return gpu, aidx, ok & valid
 
@@ -1007,7 +1373,7 @@ class EngineCore:
             self.spec, self.metric, self.tables, self.midx, self.vg,
             st.base, st.free, st.f,
             st.ring_gpu, st.ring_mask, st.ring_pid, st.ring_aidx,
-            pid_c, st.rr, want=valid & ~ok,
+            pid_c, st.rr, want=valid & ~ok, delta_fn=self.delta_fn,
         )
         mi = res.mig.astype(jnp.int32)
         mf = res.mig.astype(jnp.float32)
@@ -1151,7 +1517,7 @@ class EngineCore:
     jax.jit,
     static_argnames=(
         "policy", "metric", "num_gpus", "ring_rows", "ring_cols",
-        "use_kernel", "kernel_model", "protocol",
+        "use_kernel", "kernel_spec", "protocol",
     ),
 )
 def _simulate(
@@ -1163,7 +1529,7 @@ def _simulate(
     ring_rows: int,
     ring_cols: int,
     use_kernel: bool,
-    kernel_model: Optional[mig.DeviceModel] = None,
+    kernel_spec: Optional[mig.ClusterSpec] = None,
     protocol: Union[str, Protocol] = "steady",
     midx: Optional[jax.Array] = None,
     tables: Optional[SpecTables] = None,
@@ -1175,22 +1541,30 @@ def _simulate(
         cspec = _default_spec(num_gpus)
         tables = spec_tables(cspec)
         midx = jnp.asarray(cspec.model_index)
-    frag_fn = (
-        make_frag_fn(metric, True, kernel_model or mig.A100_80GB)
-        if use_kernel
-        else None
-    )
+    frag_fn = delta_fn = None
+    if use_kernel:
+        # Pallas dispatch rules (`kernel_spec` is the static ClusterSpec):
+        # the occupancy-based `fragscore` rescore kernel needs one placement
+        # table, so it compiles in on homogeneous specs only (mixed fleets
+        # keep the base-derived rescoring); the fused `delta_from_base` ΔF
+        # kernel dispatches per model group and serves any fleet, for specs
+        # whose keys consume ΔF.
+        kspec = kernel_spec if kernel_spec is not None else _default_spec(num_gpus)
+        if kspec.is_homogeneous:
+            frag_fn = make_frag_fn(metric, True, kspec.models[0])
+        if pspec.requires_delta_f:
+            delta_fn = make_delta_fn(kspec, metric)
     vg = tables.V[midx]  # (M, N) per-GPU window sizes, gathered once
     core = EngineCore(
         spec=pspec, protocol=proto, metric=metric, tables=tables,
-        midx=midx, vg=vg, frag_fn=frag_fn,
+        midx=midx, vg=vg, frag_fn=frag_fn, delta_fn=delta_fn,
     )
     step = jax.vmap(core.step, in_axes=(0, 0))
     init = jax.tree.map(
         lambda x: jnp.broadcast_to(x, (runs,) + x.shape),
         _init_state(
             tables, midx, ring_rows, ring_cols,
-            track_occ=use_kernel, track_alloc=pspec.defrag,
+            track_occ=frag_fn is not None, track_alloc=pspec.defrag,
         ),
     )
     # sample/measuring are host-side reduction flags — never shipped to the scan
@@ -1394,21 +1768,24 @@ def run_batched(
     policy name or an ad-hoc :class:`~repro.core.policy.PolicySpec`
     (validated through the registry's single path, like every other entry
     point) — defrag specs included (the migrate stage is compiled into the
-    scan).  ``use_kernel`` routes fragmentation-severity sampling through
-    the Pallas ``fragscore`` kernel (default: only on TPU; homogeneous
-    specs only — the kernel bakes in one model's placement table).
-    ``shard`` splits the replica axis across visible devices (see
-    :func:`shard_events`; default: auto).
+    scan).  ``use_kernel`` routes scoring through the Pallas kernels
+    (default: only on TPU): the fused ``delta_from_base`` ΔF kernel with
+    per-model dispatch on any fleet (for specs whose keys consume ΔF), plus
+    the occupancy-based ``fragscore`` rescore kernel on homogeneous specs
+    (it bakes in one model's placement table).  A spec may opt out via
+    ``PolicySpec.kernel_lowering=False`` (requesting ``use_kernel=True``
+    for such a spec raises).  ``shard`` splits the replica axis across
+    visible devices (see :func:`shard_events`; default: auto).
     """
     policy = resolve(policy, engine="batched")
     proto = resolve_protocol(cfg.protocol)
     spec = cfg.spec()
     if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu" and spec.is_homogeneous
-    if use_kernel and not spec.is_homogeneous:
+        use_kernel = jax.default_backend() == "tpu" and policy.kernel_lowering
+    if use_kernel and not policy.kernel_lowering:
         raise ValueError(
-            "use_kernel requires a homogeneous ClusterSpec (the Pallas "
-            "fragscore kernel bakes in a single placement table)"
+            f"policy {policy.name!r} opts out of Pallas kernel lowering "
+            "(PolicySpec.kernel_lowering=False); run with use_kernel=False"
         )
 
     presample = (
@@ -1425,7 +1802,7 @@ def run_batched(
             ring_rows=ring_rows,
             ring_cols=ring_cols,
             use_kernel=use_kernel,
-            kernel_model=spec.models[0] if use_kernel else None,
+            kernel_spec=spec if use_kernel else None,
             protocol=proto,
             midx=jnp.asarray(spec.model_index),
             tables=spec_tables(spec),

@@ -398,6 +398,217 @@ class TestBatchedCumulative:
 
 
 # ---------------------------------------------------------------------------
+# Factored migrate-stage lowering (the PR-5 tentpole)
+# ---------------------------------------------------------------------------
+
+
+def _random_cluster(rng, spec=None, num_gpus=None, density=0.7):
+    """A randomized occupancy state + its (gpu, pid, anchor) workload list."""
+    cl = (
+        mig.ClusterState(num_gpus)
+        if spec is None
+        else mig.ClusterState(spec=spec)
+    )
+    wid = 0
+    for g in range(cl.num_gpus):
+        for pid in rng.permutation(mig.NUM_PROFILES):
+            if rng.random() < density:
+                anchors = cl.gpus[g].feasible_anchors(int(pid))
+                if anchors:
+                    cl.allocate(wid, int(pid), g, int(rng.choice(anchors)))
+                    wid += 1
+    workloads = [
+        (g.gpu_id, a.profile_id, a.anchor)
+        for g in cl.gpus
+        for a in g.allocations.values()
+    ]
+    return cl, workloads
+
+
+def _search_args(cl, workloads, pid, ring_shape, rng, metric="blocked"):
+    """Scatter the workloads into a random ring layout and derive the
+    window-count state `_migrate_search` consumes."""
+    spec = cl.spec
+    tables = batched.spec_tables(spec)
+    midx = jnp.asarray(spec.model_index)
+    occ = cl.occupancy_matrix()
+    base = jnp.einsum(
+        "ms,mns->mn", jnp.asarray(occ, jnp.float32), tables.W[midx]
+    )
+    free = tables.slices[midx] - occ.sum(axis=1).astype(np.int32)
+    vg = tables.V[midx]
+    f = batched._frag_from_base(base, free, metric, vg)
+
+    rows, cols = ring_shape
+    s = int(tables.W.shape[2])
+    ring_gpu = np.zeros((rows, cols), np.int32)
+    ring_mask = np.zeros((rows, cols, s), np.int32)
+    ring_pid = np.zeros((rows, cols), np.int32)
+    ring_aidx = np.zeros((rows, cols), np.int32)
+    slots = rng.choice(rows * cols, size=len(workloads), replace=False)
+    for slot, (g, p, anchor) in zip(slots, workloads):
+        model = spec.model_of(int(g))
+        j = model.profiles[int(p)].anchors.index(int(anchor))
+        r, c = divmod(int(slot), cols)
+        ring_gpu[r, c] = g
+        ring_mask[r, c, anchor:anchor + model.profiles[int(p)].mem] = 1
+        ring_pid[r, c] = p
+        ring_aidx[r, c] = j
+    return dict(
+        spec=batched.resolve("mfi-defrag"),
+        metric=metric,
+        tables=tables,
+        midx=midx,
+        vg=vg,
+        base=base,
+        free=free,
+        f=f,
+        ring_gpu=jnp.asarray(ring_gpu),
+        ring_mask=jnp.asarray(ring_mask),
+        ring_pid=jnp.asarray(ring_pid),
+        ring_aidx=jnp.asarray(ring_aidx),
+        pid_c=jnp.int32(pid),
+        cursor=jnp.int32(0),
+        want=jnp.asarray(True),
+    )
+
+
+class TestFactoredMigrateSearch:
+    """The factored lowering must return the *same* MigrationResult as the
+    dense (C, M, A) reference on arbitrary states — including rings much
+    larger than the live-entry budget (the compaction path)."""
+
+    FIELDS = [
+        "gpu", "aidx", "vic_row", "vic_col", "vic_gpu", "vic_anchor",
+        "vic_pid", "new_gpu", "new_aidx", "new_anchor", "old_mask",
+        "old_mwin", "new_mask", "new_mwin",
+    ]
+
+    @pytest.mark.parametrize("metric", ["blocked", "partial"])
+    @pytest.mark.parametrize(
+        "spec", [None, MIXED, H200_MIX], ids=["homog", "mixed", "h200"]
+    )
+    def test_equivalence_randomized(self, spec, metric):
+        rng = np.random.default_rng(29)
+        migrations = 0
+        for trial in range(25):
+            cl, workloads = _random_cluster(
+                rng,
+                spec=spec,
+                num_gpus=int(rng.integers(2, 6)) if spec is None else None,
+                density=rng.random() * 1.2,
+            )
+            if not workloads:
+                continue
+            pid = int(rng.integers(0, mig.NUM_PROFILES))
+            # ring deliberately oversized: mostly dead slots -> the factored
+            # search must compact them away without changing the decision
+            rows = int(rng.integers(1, 40))
+            cols = -(-max(1, len(workloads)) // rows) + int(rng.integers(0, 4))
+            args = _search_args(cl, workloads, pid, (rows, cols), rng, metric)
+            got = batched._migrate_search(**args)
+            want = batched._migrate_search_dense(**args)
+            assert bool(got.mig) == bool(want.mig), f"trial {trial}"
+            if bool(want.mig):
+                migrations += 1
+                for field in self.FIELDS:
+                    np.testing.assert_array_equal(
+                        np.asarray(getattr(got, field)),
+                        np.asarray(getattr(want, field)),
+                        err_msg=f"trial {trial}: {field}",
+                    )
+        assert migrations >= 3  # the fuzz actually exercised the search
+
+    def test_want_false_is_noop(self):
+        rng = np.random.default_rng(5)
+        cl, workloads = _random_cluster(rng, num_gpus=3)
+        args = _search_args(cl, workloads, 0, (4, max(1, len(workloads))), rng)
+        args["want"] = jnp.asarray(False)
+        assert not bool(batched._migrate_search(**args).mig)
+
+    def test_compaction_budget_bounds_live_entries(self):
+        """Every running workload occupies >= 1 slice, so M*S bounds the
+        live-entry count: a full cluster's workload list always fits the
+        static budget."""
+        rng = np.random.default_rng(11)
+        cl, workloads = _random_cluster(rng, num_gpus=4, density=1.2)
+        spec = cl.spec
+        assert len(workloads) <= spec.num_gpus * spec.num_mem_slices
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel lowering of the ΔF hot path (use_kernel end to end)
+# ---------------------------------------------------------------------------
+
+
+class TestKernelLowering:
+    """`use_kernel=True` (interpret mode on CPU) must reproduce the pure-jnp
+    decisions bit-for-bit — homogeneous and mixed fleets, defrag included."""
+
+    @pytest.mark.parametrize(
+        "policy,spec",
+        [("mfi", None), ("mfi", MIXED), ("mfi-defrag", None),
+         ("mfi-defrag", H200_MIX)],
+        ids=["mfi-homog", "mfi-mixed", "defrag-homog", "defrag-h200"],
+    )
+    def test_same_decisions_as_pure_jnp(self, policy, spec):
+        cfg = (
+            SimConfig(num_gpus=4, offered_load=1.0, seed=3)
+            if spec is None
+            else SimConfig(cluster_spec=spec, offered_load=1.0, seed=3)
+        )
+        cspec = cfg.spec()
+        events, meta, rr, rc = batched.presample_arrivals(cfg, runs=2)
+        dev = jax.tree.map(jnp.asarray, events)
+        kw = dict(
+            policy=policy, metric=cfg.metric, num_gpus=cfg.num_gpus,
+            ring_rows=rr, ring_cols=rc,
+            midx=jnp.asarray(cspec.model_index),
+            tables=batched.spec_tables(cspec),
+        )
+        _, ref = jax.device_get(batched._simulate(dev, use_kernel=False, **kw))
+        _, got = jax.device_get(
+            batched._simulate(dev, use_kernel=True, kernel_spec=cspec, **kw)
+        )
+        ok = np.asarray(ref.ok)
+        np.testing.assert_array_equal(np.asarray(got.ok), ok)
+        np.testing.assert_array_equal(
+            np.asarray(got.gpu)[ok], np.asarray(ref.gpu)[ok]
+        )
+        np.testing.assert_array_equal(np.asarray(got.frag), np.asarray(ref.frag))
+        if ref.mig is not None:
+            np.testing.assert_array_equal(
+                np.asarray(got.mig), np.asarray(ref.mig)
+            )
+            m = np.asarray(ref.mig)
+            np.testing.assert_array_equal(
+                np.asarray(got.mig_to_gpu)[m], np.asarray(ref.mig_to_gpu)[m]
+            )
+
+    def test_run_batched_kernel_on_mixed_fleet(self):
+        """The former homogeneous-only restriction is gone: mixed fleets
+        dispatch the ΔF kernel per model group."""
+        cfg = SimConfig(cluster_spec=MIXED, offered_load=0.9, seed=1)
+        r_k = batched.run_batched("mfi", cfg, runs=2, use_kernel=True)
+        r_j = batched.run_batched("mfi", cfg, runs=2, use_kernel=False)
+        assert r_k["acceptance_rate"] == r_j["acceptance_rate"]
+
+    def test_kernel_lowering_opt_out(self):
+        from repro.core.policy import PolicySpec
+
+        no_kernel = PolicySpec(
+            name="no-kernel", keys=("frag-delta", "gpu", "anchor"),
+            kernel_lowering=False,
+        )
+        cfg = SimConfig(num_gpus=2, offered_load=0.8, seed=0)
+        with pytest.raises(ValueError, match="opts out of Pallas kernel"):
+            batched.run_batched(no_kernel, cfg, runs=1, use_kernel=True)
+        # auto never picks the kernel for an opted-out spec
+        r = batched.run_batched(no_kernel, cfg, runs=1)
+        assert 0.0 <= r["acceptance_rate"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
 # Satellite: per-model request distributions
 # ---------------------------------------------------------------------------
 

@@ -14,10 +14,14 @@ import jax.numpy as jnp
 from repro.core import cluster as jcluster
 from repro.core import fragmentation as frag_np
 from repro.core import mig, schedulers
+from repro.kernels.fragscore import fragscore as frag_k
 from repro.kernels.fragscore import ops as frag_ops
-from repro.kernels.fragscore.ref import fragscore_ref
+from repro.kernels.fragscore.ref import delta_from_base_ref, fragscore_ref
 from repro.kernels.decode_attention.decode_attention import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
+
+#: every registered device model once (the registry aliases short names)
+DEVICE_MODELS = sorted(set(mig.DEVICE_MODELS.values()), key=lambda m: m.name)
 
 
 class TestFragscoreKernel:
@@ -71,6 +75,153 @@ class TestMFIDeltaKernel:
             assert bool(acc) == bool(d.accepted)
             if bool(acc):
                 assert (int(g), int(a)) == (int(d.gpu), int(d.anchor))
+
+    def test_unified_entry_point_kernel_flag(self):
+        """cluster.mfi_select is the single seam: use_kernel=True routes the
+        same decision through the fused Pallas kernel (the ops.py alias
+        delegates here)."""
+        rng = np.random.default_rng(7)
+        occ = jnp.asarray((rng.random((64, 8)) < 0.5).astype(np.int32))
+        for pid in range(mig.NUM_PROFILES):
+            d_jnp = jcluster.mfi_select(occ, jnp.int32(pid))
+            d_k = jcluster.mfi_select(occ, jnp.int32(pid), use_kernel=True)
+            assert bool(d_jnp.accepted) == bool(d_k.accepted)
+            if bool(d_jnp.accepted):
+                assert (int(d_jnp.gpu), int(d_jnp.anchor)) == (
+                    int(d_k.gpu), int(d_k.anchor)
+                )
+                np.testing.assert_array_equal(d_jnp.delta_f, d_k.delta_f)
+
+
+def _model_tables(model):
+    """(w, v) placement table + per-profile (A, S) anchor masks of a model."""
+    w = model.placement_masks.astype(np.float32)
+    v = model.placement_mem.astype(np.float32)
+    masks = np.zeros((mig.NUM_PROFILES, model.max_anchors, model.num_mem_slices),
+                     np.float32)
+    for pid, prof in enumerate(model.profiles):
+        for j, a in enumerate(prof.anchors):
+            masks[pid, j, a:a + prof.mem] = 1
+    return w, v, masks
+
+
+class TestPerModelKernelParity:
+    """Kernel-vs-ref parity on every registered DeviceModel — the padded
+    non-8-slice H200-141GB (S = 12) included."""
+
+    @pytest.mark.parametrize("model", DEVICE_MODELS, ids=lambda m: m.name)
+    @pytest.mark.parametrize("metric", ["blocked", "partial"])
+    def test_fragscore_matches_ref(self, model, metric):
+        rng = np.random.default_rng(len(model.name))
+        s = model.num_mem_slices
+        occ = (rng.random((73, s)) < 0.4).astype(np.int32)
+        w, v, _ = _model_tables(model)
+        got = np.asarray(
+            frag_k.fragscore(
+                jnp.asarray(occ), jnp.asarray(w), jnp.asarray(v),
+                metric=metric, interpret=True,
+            )
+        )
+        want = np.asarray(fragscore_ref(jnp.asarray(occ), metric, w, v))
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("model", DEVICE_MODELS, ids=lambda m: m.name)
+    @pytest.mark.parametrize("metric", ["blocked", "partial"])
+    def test_delta_from_base_matches_ref(self, model, metric):
+        """The fused ΔF kernel on the model's own window-count state: every
+        demand class, raw (unmasked) ΔF values bit-for-bit."""
+        rng = np.random.default_rng(1 + len(model.name))
+        s = model.num_mem_slices
+        occ = (rng.random((41, s)) < 0.35).astype(np.int32)
+        w, v, pmasks = _model_tables(model)
+        base = occ.astype(np.float32) @ w.T
+        free = s - occ.sum(axis=1)
+        f = np.asarray(fragscore_ref(jnp.asarray(occ), metric, w, v))
+        for pid in range(mig.NUM_PROFILES):
+            mw = pmasks[pid] @ w.T  # (A, N)
+            mem = float(model.profiles[pid].mem)
+            got = np.asarray(
+                frag_k.delta_from_base(
+                    jnp.asarray(base), jnp.asarray(free), jnp.asarray(v),
+                    jnp.asarray(mw), jnp.asarray((mw > 0).astype(np.float32)),
+                    mem, jnp.asarray(f), metric=metric, interpret=True,
+                )
+            )
+            want = np.asarray(
+                delta_from_base_ref(
+                    jnp.asarray(base), jnp.asarray(free), v, mw, mem,
+                    jnp.asarray(f), metric,
+                )
+            )
+            np.testing.assert_array_equal(got, want)
+
+    def test_ops_wrapper_matches_engine_lowering(self):
+        """The A100 convenience wrapper (`ops.delta_from_base_f`) agrees
+        with the batched engine's pure-jnp `_delta_from_base` on the same
+        window-count state."""
+        from repro.sim import batched
+
+        model = mig.A100_80GB
+        spec = mig.ClusterSpec.homogeneous(model, 6)
+        tables = batched.spec_tables(spec)
+        midx = jnp.asarray(spec.model_index)
+        rng = np.random.default_rng(13)
+        occ = (rng.random((6, 8)) < 0.4).astype(np.int32)
+        base = jnp.einsum(
+            "ms,mns->mn", jnp.asarray(occ, jnp.float32), tables.W[midx]
+        )
+        free = tables.slices[midx] - occ.sum(axis=1).astype(np.int32)
+        vg = tables.V[midx]
+        f = batched._frag_from_base(base, free, "blocked", vg)
+        for pid in range(mig.NUM_PROFILES):
+            got = np.asarray(frag_ops.delta_from_base_f(base, free, pid, f))
+            want = np.asarray(
+                batched._delta_from_base(
+                    base, free, "blocked", vg,
+                    tables.maskwin[midx, pid], tables.maskpos[midx, pid],
+                    tables.profile_mem[midx, pid], f,
+                )
+            )
+            np.testing.assert_array_equal(got, want)
+
+    def test_delta_from_base_padded_tables(self):
+        """The batched engine hands the kernel *padded* per-spec tables
+        (common N/A across models, zero-padded windows); padded rows and
+        anchors must not perturb the scores of the real ones."""
+        from repro.sim import batched
+
+        spec = mig.ClusterSpec(((mig.A100_80GB, 2), (mig.H200_141GB, 2)))
+        tables = batched.spec_tables(spec)
+        rng = np.random.default_rng(3)
+        for k, model in enumerate(spec.models):
+            s = model.num_mem_slices
+            occ = np.zeros((5, spec.num_mem_slices), np.int32)
+            occ[:, :s] = (rng.random((5, s)) < 0.4).astype(np.int32)
+            w_pad = np.asarray(tables.W[k])  # (N_pad, S_pad) zero-padded
+            v_pad = np.asarray(tables.V[k])
+            base = occ.astype(np.float32) @ w_pad.T
+            free = s - occ.sum(axis=1)
+            f = np.asarray(fragscore_ref(jnp.asarray(occ[:, :s]), "blocked",
+                                         *_model_tables(model)[:2]))
+            for pid in range(mig.NUM_PROFILES):
+                got = np.asarray(
+                    frag_k.delta_from_base(
+                        jnp.asarray(base), jnp.asarray(free),
+                        jnp.asarray(v_pad),
+                        tables.maskwin[k, pid], tables.maskpos[k, pid],
+                        float(model.profiles[pid].mem), jnp.asarray(f),
+                        metric="blocked", interpret=True,
+                    )
+                )
+                want = np.asarray(
+                    delta_from_base_ref(
+                        jnp.asarray(base), jnp.asarray(free), v_pad,
+                        np.asarray(tables.maskwin[k, pid]),
+                        float(model.profiles[pid].mem), jnp.asarray(f),
+                        "blocked",
+                    )
+                )
+                np.testing.assert_array_equal(got, want)
 
 
 class TestDecodeAttentionKernel:
