@@ -16,9 +16,11 @@ workflow artifact.  Smoke mode records the numbers without enforcing the
 additionally sweeps **every registered batched-capable policy**
 (``repro.core.policy.list_policies(engine="batched")``) for warm per-policy
 throughput — ``mfi-defrag``'s migrate stage included — plus one
-**cumulative-protocol** run, so the uploaded artifact tracks the perf
-trajectory of every engine configuration, including policies registered
-after this benchmark was written (``--sweep``/``--no-sweep`` overrides).
+**cumulative-protocol** run and one **steady-queued** run (above
+saturation, recording p50/p99 wait, fairness and queue admits next to
+throughput), so the uploaded artifact tracks the perf trajectory of every
+engine configuration, including policies registered after this benchmark
+was written (``--sweep``/``--no-sweep`` overrides).
 
 ``--profile`` adds a per-stage wall-time breakdown of the ``EngineCore``
 pipeline (select / migrate / commit / expire, µs per event across the
@@ -49,6 +51,10 @@ from repro.sim.batched import run_batched
 #: maximum tolerated relative drop of speedup_warm vs the baseline artifact
 REGRESSION_GATE = 0.20
 
+#: queue metrics are deterministic for a fixed seed/config — tolerate only
+#: float noise, so behavioral drift in the wait/park stages fails the gate
+QUEUED_METRIC_TOL = 1e-6
+
 
 def sweep_policies(cfg: SimConfig, runs: int):
     """Warm replica throughput of every registered batched-capable policy."""
@@ -76,6 +82,31 @@ def bench_cumulative(cfg: SimConfig, runs: int):
         "warm_rps": runs / dt,
         "acceptance_rate": float(r["acceptance_rate"]),
         "final_utilization": float(r["utilization"]),
+    }
+
+
+def bench_queued(cfg: SimConfig, runs: int):
+    """Warm throughput + queue metrics of one steady-queued batched run.
+
+    Run above saturation (load >= 1.1) so the wait ring actually cycles;
+    the metrics are deterministic for a fixed seed/config, so the baseline
+    diff can gate on them tightly — a silent change to the wait/park
+    stages shows up as metric drift here before any parity test runs.
+    """
+    qcfg = dataclasses.replace(
+        cfg, protocol="steady-queued", offered_load=max(cfg.offered_load, 1.1)
+    )
+    run_batched("mfi", qcfg, runs=runs)  # compile + warm the cache
+    t0 = time.perf_counter()
+    r = run_batched("mfi", qcfg, runs=runs)
+    dt = time.perf_counter() - t0
+    return {
+        "warm_rps": runs / dt,
+        "acceptance_rate": float(r["acceptance_rate"]),
+        "wait_p50": float(r["wait_p50"]),
+        "wait_p99": float(r["wait_p99"]),
+        "fairness": float(r["fairness"]),
+        "queue_admits": float(r["queue_admits"]),
     }
 
 
@@ -204,6 +235,23 @@ def compare_baseline(payload: dict, baseline_path: str, gate: float = REGRESSION
     if pol:
         vs["policies"] = pol
     ok = cur >= (1.0 - gate) * ref
+    qb, qc = base.get("queued"), payload.get("queued")
+    if qb and qc:
+        # queue metrics are seed-deterministic: any drift means the wait or
+        # park stage changed behavior, not just performance
+        drift = {
+            k: {"baseline": qb[k], "current": qc[k]}
+            for k in (
+                "acceptance_rate", "wait_p50", "wait_p99", "fairness",
+                "queue_admits",
+            )
+            if k in qb
+            and abs(qc[k] - qb[k]) > QUEUED_METRIC_TOL * max(1.0, abs(qb[k]))
+        }
+        vs["queued"] = {"tolerance": QUEUED_METRIC_TOL, "drift": drift,
+                        "pass": not drift}
+        if drift:
+            ok = False
     vs["pass"] = ok
     return vs, ok
 
@@ -279,6 +327,19 @@ def main(runs: int = 64, num_gpus: int = 100, load: float = 0.85,
             f"sweep,batched-cumulative,mfi,{num_gpus},{runs},"
             f"{cumulative['warm_rps']:.2f},{cumulative['acceptance_rate']:.4f}"
         )
+        queued = bench_queued(cfg, runs)
+        print(
+            f"sweep,batched-queued,mfi,{num_gpus},{runs},"
+            f"{queued['warm_rps']:.2f},{queued['acceptance_rate']:.4f}"
+        )
+        print(
+            f"# queued point: wait_p50={queued['wait_p50']:.2f} "
+            f"wait_p99={queued['wait_p99']:.2f} "
+            f"fairness={queued['fairness']:.4f} "
+            f"queue_admits={queued['queue_admits']:.2f}"
+        )
+    else:
+        queued = None
     payload = dict(
         r, policy=policy, num_gpus=num_gpus, runs=runs, load=load, smoke=smoke
     )
@@ -286,6 +347,8 @@ def main(runs: int = 64, num_gpus: int = 100, load: float = 0.85,
         payload["policies"] = per_policy
     if cumulative is not None:
         payload["cumulative"] = cumulative
+    if queued is not None:
+        payload["queued"] = queued
     if profile:
         stage_profile = profile_stages(cfg, runs)
         payload["stage_profile"] = stage_profile
@@ -309,14 +372,23 @@ def main(runs: int = 64, num_gpus: int = 100, load: float = 0.85,
                 f"# vs baseline {name}: {p['current_rps']:.2f} rps / "
                 f"{p['baseline_rps']:.2f} rps = {p['ratio']:.2f}x"
             )
+        q = vs.get("queued")
+        if q is not None:
+            drifted = ", ".join(sorted(q["drift"])) or "none"
+            print(
+                f"# vs baseline queued point: drifted metrics: {drifted} "
+                f"-> {'PASS' if q['pass'] else 'FAIL'} "
+                f"(tolerance {q['tolerance']:g})"
+            )
     if json_path:
         with open(json_path, "w") as fh:
             json.dump(payload, fh, indent=2, sort_keys=True)
         print(f"# wrote {json_path}")
     if not gate_ok:
         sys.exit(
-            f"FAIL: speedup_warm regressed more than "
-            f"{REGRESSION_GATE:.0%} vs {baseline}"
+            f"FAIL: perf or queued-metric regression vs {baseline} "
+            f"(speedup_warm gate {REGRESSION_GATE:.0%}; queued metric "
+            f"tolerance {QUEUED_METRIC_TOL:g})"
         )
     return r
 

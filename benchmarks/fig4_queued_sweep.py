@@ -1,0 +1,136 @@
+"""Queued-admission load sweep (fig4-style, beyond-paper).
+
+Sweeps offered load through the ``steady-queued`` protocol — the
+multi-tenant waiting-queue front-end layered on the paper's steady-state
+churn — and reports acceptance alongside the queue-delay/fairness metrics
+(p50/p99 wait, Jain fairness over per-tenant acceptance, wait-queue
+admissions per replica).  A second pass runs the same points through the
+plain accept-or-drop ``steady`` protocol, so each row quantifies exactly
+how much acceptance the waiting queue buys at that load (queueing only
+matters above saturation; below it the queue stays empty and the deltas
+collapse to zero).
+
+``--engine batched`` (default ``python``) runs each point through the
+batched JAX engine's wait/park stages (:mod:`repro.sim.batched`); the
+Python engine drains greedily per slot, so small statistical differences
+between engines are expected — decision-for-decision parity is asserted
+by the test suite, not here.
+
+``--policies`` accepts any registered non-defrag policy set; the default
+adds ``mfi-queued`` (priority + wait-age queue ordering on top of MFI
+placement) to the paper set.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from benchmarks.common import (
+    CLUSTERS,
+    ENGINES,
+    PAPER_POLICIES,
+    resolve_cluster,
+    resolve_policies,
+    run_engine,
+)
+from repro.core.policy import resolve
+from repro.sim import SimConfig
+
+QUEUED_POLICIES = PAPER_POLICIES + ("mfi-queued",)
+
+#: queueing is interesting above saturation — the sweep brackets it
+DEFAULT_LOADS = (0.9, 1.0, 1.1, 1.25, 1.4)
+
+
+def run(runs: int = 30, num_gpus: int = 100, loads=DEFAULT_LOADS,
+        seed: int = 0, engine: str = "python", cluster: str | None = None,
+        policies: str | None = None, wait_capacity: int = 8,
+        wait_patience: int = 16, num_tenants: int = 4):
+    spec, num_gpus = resolve_cluster(cluster, num_gpus)
+    names = resolve_policies(policies, default=QUEUED_POLICIES)
+    for name in names:
+        if resolve(name).defrag:
+            raise ValueError(
+                f"policy {name!r}: defrag composes with the waiting queue "
+                "only on the Python engine; drop it from --policies"
+            )
+    rows = []
+    results = {}
+    for load in loads:
+        for name in names:
+            cfg = SimConfig(
+                num_gpus=num_gpus, distribution="uniform",
+                offered_load=load, seed=seed, cluster_spec=spec,
+                protocol="steady-queued", wait_capacity=wait_capacity,
+                wait_patience=wait_patience, num_tenants=num_tenants,
+            )
+            r = run_engine(engine, name, cfg, runs=runs)
+            drop = run_engine(
+                engine, name, dataclasses.replace(cfg, protocol="steady"),
+                runs=runs,
+            )
+            r = dict(r, acceptance_drop=drop["acceptance_rate"])
+            results[(name, load)] = r
+            rows.append(
+                f"fig4q,{name},{load},{r['acceptance_rate']:.4f},"
+                f"{r['acceptance_drop']:.4f},{r['wait_p50']:.2f},"
+                f"{r['wait_p99']:.2f},{r['fairness']:.4f},"
+                f"{r['queue_admits']:.1f}"
+            )
+    return rows, results
+
+
+def main(runs: int = 30, engine: str = "python", cluster: str | None = None,
+         policies: str | None = None, wait_capacity: int = 8,
+         wait_patience: int = 16, num_tenants: int = 4):
+    print(
+        "table,scheduler,load,acceptance_queued,acceptance_drop,"
+        "wait_p50,wait_p99,fairness,queue_admits"
+    )
+    rows, results = run(
+        runs=runs, engine=engine, cluster=cluster, policies=policies,
+        wait_capacity=wait_capacity, wait_patience=wait_patience,
+        num_tenants=num_tenants,
+    )
+    for row in rows:
+        print(row)
+    names = resolve_policies(policies, default=QUEUED_POLICIES)
+    heavy = max(load for (_, load) in results)
+    gains = {
+        name: results[(name, heavy)]["acceptance_rate"]
+        - results[(name, heavy)]["acceptance_drop"]
+        for name in names
+    }
+    best = max(gains, key=gains.get)
+    print(
+        f"# queueing gain @ {heavy:.0%} load (acceptance, queued - drop): "
+        + ", ".join(f"{n}={g:+.4f}" for n, g in sorted(gains.items()))
+    )
+    print(f"# largest gain: {best} ({gains[best]:+.4f})")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", type=int, default=30)
+    ap.add_argument("--engine", choices=ENGINES, default="python")
+    ap.add_argument(
+        "--cluster", default=None,
+        help=f"named scenario {sorted(CLUSTERS)} or spec string "
+             "'a100-80:50,a100-40:50'",
+    )
+    ap.add_argument(
+        "--policies", default=None,
+        help="comma list of registered non-defrag policies, or 'all' "
+             "(default: paper set + mfi-queued)",
+    )
+    ap.add_argument("--wait-capacity", type=int, default=8,
+                    help="waiting-queue slots per cluster")
+    ap.add_argument("--wait-patience", type=int, default=16,
+                    help="max slots a request may wait before final reject")
+    ap.add_argument("--num-tenants", type=int, default=4,
+                    help="tenant ids sampled per arrival (fairness metric)")
+    args = ap.parse_args()
+    main(runs=args.runs, engine=args.engine, cluster=args.cluster,
+         policies=args.policies, wait_capacity=args.wait_capacity,
+         wait_patience=args.wait_patience, num_tenants=args.num_tenants)

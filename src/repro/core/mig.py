@@ -464,10 +464,20 @@ class ClusterState:
         return out
 
     def allocate(self, workload_id: int, profile_id: int, gpu_id: int, anchor: int):
+        if workload_id in self._placement_of:
+            raise ValueError(
+                f"workload {workload_id} is already placed on GPU "
+                f"{self._placement_of[workload_id]}; release it before "
+                "re-allocating (a duplicate allocate would orphan its slices)"
+            )
         self.gpus[gpu_id].allocate(workload_id, profile_id, anchor)
         self._placement_of[workload_id] = gpu_id
 
     def release(self, workload_id: int) -> None:
+        if workload_id not in self._placement_of:
+            raise KeyError(
+                f"workload {workload_id} is not placed on this cluster"
+            )
         gpu_id = self._placement_of.pop(workload_id)
         self.gpus[gpu_id].release(workload_id)
 

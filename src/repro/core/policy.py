@@ -46,6 +46,13 @@ Key vocabulary
                     cursor advances past each accepted GPU)
     ``model-group`` index of the GPU's device model in the spec's model
                     list (mixed fleets: steer demand across generations)
+    ``tenant``      request-scoped: id of the submitting tenant (constant
+                    across candidates — orders competing *requests*, not
+                    placements; see :data:`REQUEST_KEYS`)
+    ``priority``    request-scoped: the request's declared priority class
+                    (ascending: 0 admits first)
+    ``wait-age``    request-scoped: slots the request has waited since
+                    arrival (``-wait-age`` = oldest first)
     ==============  =========================================================
 
 The six shipped policies (``mfi``, ``ff``, ``bf-bi``, ``wf-bi``, ``rr``,
@@ -75,7 +82,27 @@ KEY_VOCABULARY: Tuple[str, ...] = (
     "anchor",
     "rr-distance",
     "model-group",
+    "tenant",
+    "priority",
+    "wait-age",
 )
+
+#: request-scoped scoring keys: their value is a property of the REQUEST
+#: being placed (the submitting tenant, its declared priority, how long the
+#: request has waited), not of the candidate ``(gpu, anchor)``.  Within one
+#: request's placement argmin they are constant across every candidate, so
+#: both engines compile them to constant columns — adding them to a spec
+#: never changes which placement wins.  Their effect is *cross-request*:
+#: wherever several requests compete for the next admission slot (the
+#: serving front-end's wait queue, the batched engine's wait ring under the
+#: ``steady-queued`` protocol), the request-scoped keys of the spec order
+#: the competitors (see :func:`queue_order`).
+REQUEST_KEYS: Tuple[str, ...] = ("tenant", "priority", "wait-age")
+
+#: queue ordering used when a spec names no request-scoped keys: lowest
+#: priority value first (0 = most urgent), then oldest wait first
+#: (descending wait-age), then arrival order.
+DEFAULT_QUEUE_ORDER: Tuple[str, ...] = ("priority", "-wait-age")
 
 #: feasibility filters (currently the single built-in rule)
 FEASIBILITY_FILTERS: Tuple[str, ...] = ("window-free",)
@@ -84,6 +111,20 @@ FEASIBILITY_FILTERS: Tuple[str, ...] = ("window-free",)
 def key_base(key: str) -> str:
     """Strip the optional ``-`` direction prefix off a scoring key."""
     return key[1:] if key.startswith("-") else key
+
+
+def queue_order(spec: "PolicySpec") -> Tuple[str, ...]:
+    """The cross-request admission ordering a spec implies.
+
+    Returns the spec's request-scoped keys (:data:`REQUEST_KEYS` bases, in
+    spec order, direction prefixes preserved), or
+    :data:`DEFAULT_QUEUE_ORDER` when the spec names none.  Queued admission
+    paths — the serving front-end's wait queue and the batched engine's
+    ``steady-queued`` wait ring — admit the waiting request minimizing this
+    key tuple (ties broken by arrival order).
+    """
+    keys = tuple(k for k in spec.keys if key_base(k) in REQUEST_KEYS)
+    return keys if keys else DEFAULT_QUEUE_ORDER
 
 
 @dataclasses.dataclass(frozen=True)
@@ -342,6 +383,19 @@ MFI_DEFRAG_SPEC = register_policy(
         description=(
             "BEYOND-PAPER: MFI plus an opportunistic single-migration "
             "defrag search on reject (both engines)"
+        ),
+    )
+)
+
+MFI_QUEUED_SPEC = register_policy(
+    PolicySpec(
+        name="mfi-queued",
+        keys=("priority", "-wait-age", "frag-delta", "gpu", "anchor"),
+        description=(
+            "BEYOND-PAPER: MFI placement with an explicit queue order — "
+            "priority class first, then oldest wait (placement-identical "
+            "to mfi; the request-scoped keys order waiting requests under "
+            "queued admission)"
         ),
     )
 )

@@ -27,7 +27,13 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.core import fragmentation, mig
-from repro.core.policy import PolicyLike, PolicySpec, key_base, resolve
+from repro.core.policy import (
+    REQUEST_KEYS,
+    PolicyLike,
+    PolicySpec,
+    key_base,
+    resolve,
+)
 
 Placement = Tuple[int, int]  # (gpu_id, anchor)
 
@@ -122,6 +128,12 @@ class SpecScheduler(Scheduler):
             col = ((gpus - self._next) % cluster.num_gpus).astype(np.float64)
         elif base == "model-group":
             col = cluster.spec.model_index[gpus].astype(np.float64)
+        elif base in REQUEST_KEYS:
+            # request-scoped keys (tenant / priority / wait-age) are
+            # constant over the candidates of one request — a zero column
+            # never changes the lexsort outcome.  Their semantics live in
+            # the cross-request queue order (policy.queue_order).
+            col = np.zeros(len(gpus), dtype=np.float64)
         else:  # unreachable: PolicySpec validates the vocabulary
             raise ValueError(f"unknown scoring key {key!r}")
         return -col if key.startswith("-") else col

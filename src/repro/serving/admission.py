@@ -6,28 +6,41 @@ its model's memory footprint); the controller consults a scheduling policy
 cluster, commits accepted placements and releases them on completion —
 reproducing the arrival/termination churn of paper Fig. 1 inside a real
 serving loop.
+
+Beyond accept-or-drop, the controller is a tenant-aware queued front-end:
+requests carry ``(tenant, priority, patience)``, rejected requests park in
+a bounded waiting queue ordered by the policy's queue keys
+(:func:`repro.core.policy.queue_order` — priority first, oldest wait-age
+breaking ties by default), per-tenant concurrency quotas cap how much of
+the fleet one tenant can hold, and every release re-drives admission so
+parked requests dispatch as capacity frees up.  This mirrors the batched
+engine's ``steady-queued`` protocol (:mod:`repro.sim.batched`) on the
+serving path.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core import mig
-from repro.core.policy import PolicyLike
+from repro.core.policy import (
+    DEFAULT_QUEUE_ORDER,
+    PolicyLike,
+    key_base,
+    queue_order,
+)
 from repro.core.schedulers import Scheduler, make_scheduler
-
-# model HBM footprint (GiB) -> smallest sufficient MIG profile
-_PROFILE_BY_GIB = [
-    (10, "1g.10gb"),
-    (20, "1g.20gb"),  # picked when compute demand is low; else 2g.20gb
-    (40, "3g.40gb"),
-    (80, "7g.80gb"),
-]
 
 
 def profile_for_model(param_bytes: int, kv_bytes: int = 0, compute_heavy: bool = False) -> str:
-    """Map a model's memory footprint to the smallest fitting MIG profile."""
+    """Map a model's memory footprint to the smallest fitting MIG profile.
+
+    Raises :class:`ValueError` when the footprint (with activation
+    headroom) exceeds the largest MIG profile (80 GiB) — an unplaceable
+    demand must fail loudly at submission, not silently degrade into a
+    ``7g.80gb`` that can never hold the model.
+    """
     gib = (param_bytes + kv_bytes) / 2**30 * 1.2  # + activation headroom
     if gib <= 10:
         return "1g.10gb"
@@ -35,7 +48,12 @@ def profile_for_model(param_bytes: int, kv_bytes: int = 0, compute_heavy: bool =
         return "2g.20gb" if compute_heavy else "1g.20gb"
     if gib <= 40:
         return "4g.40gb" if compute_heavy else "3g.40gb"
-    return "7g.80gb"
+    if gib <= 80:
+        return "7g.80gb"
+    raise ValueError(
+        f"model footprint {gib:.1f} GiB (with headroom) exceeds the largest "
+        "MIG profile (7g.80gb, 80 GiB); it cannot be served on one slice"
+    )
 
 
 @dataclasses.dataclass
@@ -44,6 +62,21 @@ class Placement:
     profile: str
     gpu: int
     anchor: int
+    tenant: str = "default"
+    priority: int = 0
+
+
+@dataclasses.dataclass
+class QueueEntry:
+    """One parked request in the admission waiting queue."""
+
+    workload_id: int
+    profile: str
+    tenant: str
+    priority: int
+    patience: int   # max clock ticks it may wait before final rejection
+    arrival: int    # controller clock at submission
+    seq: int        # submission order — final FIFO tie-break
 
 
 class AdmissionController:
@@ -58,6 +91,17 @@ class AdmissionController:
     canonical profile names — each GPU's device model realizes the demand
     with its own placement table (an 80 GiB demand is simply infeasible on
     every A100-40GB, for example).
+
+    Queued admission: :meth:`submit` admits, parks (``patience > 0`` and
+    queue room) or rejects.  The queue is ordered by the policy's
+    request-scoped keys (:func:`~repro.core.policy.queue_order`); each
+    :meth:`release` re-drives admission from the queue head until the
+    first failure (head-of-line order is part of the contract), and
+    :meth:`tick` advances the wait clock, expiring entries past their
+    patience.  Dispatches and expiries triggered in the background are
+    collected with :meth:`drain_dispatched` / :meth:`drain_expired`.
+    ``tenant_quotas`` caps concurrently placed workloads per tenant
+    (requests over quota queue or reject without consulting the policy).
     """
 
     def __init__(
@@ -66,35 +110,201 @@ class AdmissionController:
         policy: PolicyLike = "mfi",
         metric: str = "blocked",
         cluster_spec: Optional[mig.ClusterSpec] = None,
+        queue_capacity: int = 64,
+        tenant_quotas: Optional[Dict[str, int]] = None,
     ):
         self.cluster = mig.ClusterState(num_gpus, spec=cluster_spec)
         self.scheduler: Scheduler = make_scheduler(policy, metric)
         self.placements: Dict[int, Placement] = {}
+        self.queue: List[QueueEntry] = []
+        self.queue_capacity = queue_capacity
+        self.tenant_quotas = dict(tenant_quotas or {})
         self.accepted = 0
         self.rejected = 0
+        self.clock = 0
+        self._seq = 0
+        self._active_by_tenant: Dict[str, int] = {}
+        self._tenant_submitted: Dict[str, int] = {}
+        self._tenant_accepted: Dict[str, int] = {}
+        self._waits: List[int] = []
+        self._drained_dispatched: List[Placement] = []
+        self._drained_expired: List[int] = []
+
+    # -- queue ordering ------------------------------------------------------
+
+    @property
+    def _queue_order(self) -> Tuple[str, ...]:
+        spec = getattr(self.scheduler, "spec", None)
+        return queue_order(spec) if spec is not None else DEFAULT_QUEUE_ORDER
+
+    def _entry_key(self, entry: QueueEntry):
+        key = []
+        for k in self._queue_order:
+            base = key_base(k)
+            if base == "priority":
+                v: float = entry.priority
+            elif base == "wait-age":
+                v = self.clock - entry.arrival
+            else:  # tenant — stable hash-free ordering by name
+                v = 0.0
+            key.append(-v if k.startswith("-") else v)
+        key.append(entry.seq)  # FIFO tie-break
+        return tuple(key)
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(
+        self,
+        workload_id: int,
+        profile: str,
+        tenant: str = "default",
+        priority: int = 0,
+        patience: int = 0,
+    ) -> Optional[Placement]:
+        """Admit, park or reject one request.
+
+        Returns the :class:`Placement` on immediate admission, ``None``
+        otherwise — distinguish a parked request (later surfacing via
+        :meth:`drain_dispatched` or :meth:`drain_expired`) from a final
+        reject with :meth:`in_queue`.
+        """
+        if workload_id in self.placements:
+            raise ValueError(
+                f"workload {workload_id} is already placed "
+                f"({self.placements[workload_id]}); duplicate admission "
+                "would orphan its MIG slices"
+            )
+        if any(e.workload_id == workload_id for e in self.queue):
+            raise ValueError(
+                f"workload {workload_id} is already waiting in the "
+                "admission queue"
+            )
+        if profile not in mig.PROFILE_NAMES:
+            raise ValueError(
+                f"unknown MIG profile {profile!r} "
+                f"(valid: {', '.join(mig.PROFILE_NAMES)})"
+            )
+        self._tenant_submitted[tenant] = self._tenant_submitted.get(tenant, 0) + 1
+        placement = self._try_dispatch(workload_id, profile, tenant, priority)
+        if placement is not None:
+            self._waits.append(0)
+            return placement
+        if patience > 0 and len(self.queue) < self.queue_capacity:
+            self.queue.append(
+                QueueEntry(
+                    workload_id, profile, tenant, priority,
+                    patience, self.clock, self._seq,
+                )
+            )
+            self._seq += 1
+            return None
+        self.rejected += 1
+        return None
 
     def admit(self, workload_id: int, profile: str) -> Optional[Placement]:
+        """Back-compat accept-or-drop admission (``patience=0``)."""
+        return self.submit(workload_id, profile)
+
+    def _try_dispatch(
+        self, workload_id: int, profile: str, tenant: str, priority: int
+    ) -> Optional[Placement]:
+        quota = self.tenant_quotas.get(tenant)
+        if quota is not None and self._active_by_tenant.get(tenant, 0) >= quota:
+            return None
         pid = mig.PROFILE_NAMES.index(profile)
         sel = self.scheduler.select(self.cluster, pid)
         if sel is None:
-            self.rejected += 1
             return None
         pending = getattr(self.scheduler, "pending_migration", None)
         if pending is not None:  # defrag policies: move the victim first
             vwid, vgpu, vanchor = pending
             self.cluster.migrate(vwid, vgpu, vanchor)
             old = self.placements[vwid]
-            self.placements[vwid] = Placement(vwid, old.profile, vgpu, vanchor)
+            self.placements[vwid] = dataclasses.replace(
+                old, gpu=vgpu, anchor=vanchor
+            )
         gpu, anchor = sel
         self.cluster.allocate(workload_id, pid, gpu, anchor)
-        placement = Placement(workload_id, profile, gpu, anchor)
+        placement = Placement(workload_id, profile, gpu, anchor, tenant, priority)
         self.placements[workload_id] = placement
         self.accepted += 1
+        self._active_by_tenant[tenant] = self._active_by_tenant.get(tenant, 0) + 1
+        self._tenant_accepted[tenant] = self._tenant_accepted.get(tenant, 0) + 1
         return placement
 
+    # -- queue progress ------------------------------------------------------
+
+    def _expire_overdue(self) -> None:
+        keep: List[QueueEntry] = []
+        for e in self.queue:
+            if self.clock - e.arrival > e.patience:
+                self.rejected += 1
+                self._drained_expired.append(e.workload_id)
+            else:
+                keep.append(e)
+        self.queue = keep
+
+    def _readmit(self) -> None:
+        """Dispatch from the queue head until the first failure."""
+        self._expire_overdue()
+        while self.queue:
+            self.queue.sort(key=self._entry_key)
+            head = self.queue[0]
+            placement = self._try_dispatch(
+                head.workload_id, head.profile, head.tenant, head.priority
+            )
+            if placement is None:
+                break  # head-of-line blocking: later entries wait their turn
+            self.queue.pop(0)
+            self._waits.append(self.clock - head.arrival)
+            self._drained_dispatched.append(placement)
+
+    def tick(self, steps: int = 1) -> None:
+        """Advance the wait clock, expiring overdue entries and re-driving
+        admission (wait-age ordering can change the queue head)."""
+        self.clock += steps
+        self._readmit()
+
     def release(self, workload_id: int) -> None:
-        self.placements.pop(workload_id)
+        if workload_id not in self.placements:
+            raise KeyError(
+                f"workload {workload_id} has no active placement to release"
+            )
+        placement = self.placements.pop(workload_id)
         self.cluster.release(workload_id)
+        self._active_by_tenant[placement.tenant] -= 1
+        self._readmit()
+
+    # -- drain buffers -------------------------------------------------------
+
+    def in_queue(self, workload_id: int) -> bool:
+        return any(e.workload_id == workload_id for e in self.queue)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    def drain_dispatched(self) -> List[Placement]:
+        """Placements dispatched from the queue since the last drain."""
+        out, self._drained_dispatched = self._drained_dispatched, []
+        return out
+
+    def drain_expired(self) -> List[int]:
+        """Workload ids finally rejected (patience exhausted) since the
+        last drain."""
+        out, self._drained_expired = self._drained_expired, []
+        return out
+
+    def flush_queue(self) -> List[int]:
+        """Finally reject every waiting entry (e.g. at shutdown, or when no
+        running workload remains to ever free capacity)."""
+        wids = [e.workload_id for e in self.queue]
+        self.rejected += len(wids)
+        self._drained_expired.extend(wids)
+        self.queue = []
+        return wids
+
+    # -- metrics -------------------------------------------------------------
 
     @property
     def acceptance_rate(self) -> float:
@@ -102,8 +312,17 @@ class AdmissionController:
         return self.accepted / total if total else 1.0
 
     def stats(self) -> Dict[str, float]:
-        from repro.core import fragmentation
+        import numpy as np
 
+        from repro.core import fragmentation
+        from repro.sim.simulator import jain_fairness
+
+        waits = np.asarray(self._waits, dtype=np.float64)
+        rates = [
+            self._tenant_accepted.get(t, 0) / n
+            for t, n in self._tenant_submitted.items()
+            if n > 0
+        ]
         return {
             "accepted": self.accepted,
             "rejected": self.rejected,
@@ -115,4 +334,8 @@ class AdmissionController:
                 self.scheduler.metric,
                 spec=self.cluster.spec,
             ),
+            "queue_depth": float(len(self.queue)),
+            "wait_p50": float(np.percentile(waits, 50)) if waits.size else 0.0,
+            "wait_p99": float(np.percentile(waits, 99)) if waits.size else 0.0,
+            "fairness": jain_fairness(rates),
         }

@@ -34,6 +34,9 @@ class Request:
     prompt: np.ndarray                 # (S,) int32 — equal S within a wave
     max_new_tokens: int
     profile: str = "1g.10gb"           # MIG demand of the tenant workload
+    tenant: str = "default"
+    priority: int = 0                  # 0 = most urgent
+    patience: int = 0                  # waves it may queue before final reject
     output: Optional[List[int]] = None
     admitted: bool = False
     rejected: bool = False
@@ -74,8 +77,15 @@ class ServingEngine:
         for r in wave:
             r.output = []
 
-        max_new = max(r.max_new_tokens for r in wave)
         alive = list(range(n))
+        for i in list(alive):  # zero-token requests finish at prefill
+            if wave[i].max_new_tokens <= 0:
+                wave[i].finished = True
+                self.admission.release(wave[i].request_id)
+                alive.remove(i)
+        if not alive:
+            return
+        max_new = max(wave[i].max_new_tokens for i in alive)
         for step in range(min(max_new, self.max_len - plen - 1)):
             for i in list(alive):
                 wave[i].output.append(int(tokens[i]))
@@ -94,23 +104,59 @@ class ServingEngine:
             self.admission.release(wave[i].request_id)
 
     def run(self, requests: List[Request]) -> Dict:
-        """Serve a FIFO queue: admit up to num_slots via the MIG scheduler,
-        serve the wave, release, repeat.  Rejected requests drop (paper
-        semantics: no retry)."""
-        queue = list(requests)
+        """Serve the request list in admission-controlled waves.
+
+        Each request submits with its ``(tenant, priority, patience)``;
+        the MIG scheduler admits it, parks it in the controller's waiting
+        queue (``patience > 0``), or finally rejects it.  Releases at wave
+        completion re-drive admission, so parked requests join later waves
+        in queue order; the controller clock ticks once per iteration and
+        expires entries past their patience.  Every terminal request ends
+        with ``output`` as a list (``[]`` when rejected or expired) and
+        ``finished=True``.
+        """
+        pending = list(requests)
+        by_id = {r.request_id: r for r in pending}
+        ready: List[Request] = []  # admitted, awaiting a wave slot
         waves = 0
-        while queue:
-            wave: List[Request] = []
-            while queue and len(wave) < self.num_slots:
-                req = queue.pop(0)
-                placement = self.admission.admit(req.request_id, req.profile)
-                if placement is None:
+        while pending or ready or self.admission.queue_depth:
+            while pending and len(ready) < self.num_slots:
+                req = pending.pop(0)
+                placement = self.admission.submit(
+                    req.request_id,
+                    req.profile,
+                    tenant=req.tenant,
+                    priority=req.priority,
+                    patience=req.patience,
+                )
+                if placement is not None:
+                    req.admitted = True
+                    ready.append(req)
+                elif not self.admission.in_queue(req.request_id):
                     req.rejected = True
                     req.finished = True
-                    continue
-                req.admitted = True
-                wave.append(req)
+                    req.output = []
+            wave = ready[: self.num_slots]
+            ready = ready[len(wave):]
             if wave:
-                self._serve_wave(wave)
+                # wave boundary: waiting requests age one tick BEFORE the
+                # wave's releases re-drive admission, so their recorded
+                # wait counts the wave they sat out
+                self.admission.tick()
+                self._serve_wave(wave)  # releases re-drive queue admission
                 waves += 1
+            elif not pending and not ready:
+                # no running work will ever free capacity — flush the queue
+                self.admission.flush_queue()
+            else:
+                self.admission.tick()
+            for placement in self.admission.drain_dispatched():
+                req = by_id[placement.workload_id]
+                req.admitted = True
+                ready.append(req)
+            for wid in self.admission.drain_expired():
+                req = by_id[wid]
+                req.rejected = True
+                req.finished = True
+                req.output = []
         return {"waves": waves, **self.admission.stats()}

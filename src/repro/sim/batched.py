@@ -155,12 +155,14 @@ from repro.core.policy import (
     PolicySpec,
     key_base,
     list_policies,
+    queue_order,
     resolve,
 )
 from repro.sim import distributions
 from repro.sim.simulator import (
     SAMPLE_EVERY,
     SimConfig,
+    jain_fairness,
     request_probs,
     steady_params,
 )
@@ -185,18 +187,26 @@ class Protocol:
     at slot boundaries *before* the drain (the steady protocol's
     time-averaged metrics, reduced host-side against the ``sample``
     flags); ``post_metrics`` samples them *after* the commit of every
-    event (the cumulative protocol's demand-grid traces).  Instances are
-    frozen/hashable so a protocol doubles as a jit static argument.
+    event (the cumulative protocol's demand-grid traces); ``queued``
+    compiles the wait-ring stages into the step (the ``steady-queued``
+    protocol: rejected arrivals park in a fixed-capacity wait ring with a
+    patience budget and re-enter selection ahead of later arrivals — see
+    :meth:`EngineCore._stage_wait`).  Instances are frozen/hashable so a
+    protocol doubles as a jit static argument.
     """
 
     name: str
     boundary_metrics: bool
     post_metrics: bool
+    queued: bool = False
 
 
 PROTOCOLS: Dict[str, Protocol] = {
     "steady": Protocol("steady", boundary_metrics=True, post_metrics=False),
     "cumulative": Protocol("cumulative", boundary_metrics=False, post_metrics=True),
+    "steady-queued": Protocol(
+        "steady-queued", boundary_metrics=True, post_metrics=False, queued=True
+    ),
 }
 
 
@@ -482,6 +492,11 @@ def _key_tensor(base_key, feasible, free, mem_g, delta, anchors_g, cursor, midx)
         return prio.astype(jnp.float32)[:, None]
     if base_key == "model-group":
         return midx.astype(jnp.float32)[:, None]
+    if base_key in ("tenant", "priority", "wait-age"):
+        # request-scoped keys are constant over one request's candidates —
+        # a zero tensor never changes the refinement.  Their semantics are
+        # cross-request (the wait ring's queue order, policy.queue_order).
+        return jnp.zeros((1, 1), jnp.float32)
     raise ValueError(f"unknown scoring key {base_key!r}")  # unreachable
 
 
@@ -565,6 +580,8 @@ def _key_rows(base_key, free, mem_g, delta, anchors_g, cursor, gidx, kidx, num_g
         return prio.astype(jnp.float32)[:, None]
     if base_key == "model-group":
         return kidx.astype(jnp.float32)[:, None]
+    if base_key in ("tenant", "priority", "wait-age"):
+        return jnp.zeros((1, 1), jnp.float32)  # request-scoped: constant per request
     raise ValueError(f"unknown scoring key {base_key!r}")  # unreachable
 
 
@@ -627,6 +644,8 @@ def _key_grid(base_key, free, mem_g, delta, anchors_g, cursor, midx):
         return prio.astype(jnp.float32)[None, :, None]
     if base_key == "model-group":
         return midx.astype(jnp.float32)[None, :, None]
+    if base_key in ("tenant", "priority", "wait-age"):
+        return jnp.zeros((1, 1, 1), jnp.float32)  # request-scoped: constant per request
     raise ValueError(f"unknown scoring key {base_key!r}")  # unreachable
 
 
@@ -1227,6 +1246,21 @@ class ReplicaState(NamedTuple):
     ring_mask: jax.Array  # (K+2, E, S) int32
     ring_pid: jax.Array   # (K+2, E) int32 — defrag specs only, else None
     ring_aidx: jax.Array  # (K+2, E) int32 — defrag specs only, else None
+    # wait ring (queued protocols only, else None): parked rejected
+    # arrivals, -1 pid marks a free slot.  Each entry keeps its original
+    # host-assigned expiry-ring coordinates and absolute end slot — a
+    # wait-admit commits with them unchanged (admission is only legal while
+    # ``end > t``, so the row is still < one ring revolution ahead and the
+    # column stays collision-free).
+    wait_pid: jax.Array = None   # (Q,) int32 — demand class, -1 = free slot
+    wait_arr: jax.Array = None   # (Q,) int32 — arrival slot
+    wait_end: jax.Array = None   # (Q,) int32 — absolute lease deadline
+    wait_row: jax.Array = None   # (Q,) int32 — original expiry-ring row
+    wait_col: jax.Array = None   # (Q,) int32 — original expiry-ring column
+    wait_prio: jax.Array = None  # (Q,) int32 — priority class
+    wait_ten: jax.Array = None   # (Q,) int32 — tenant id
+    wait_eidx: jax.Array = None  # (Q,) int32 — original event index
+    ev: jax.Array = None         # () int32 — running event index (queued only)
 
 
 class EventStream(NamedTuple):
@@ -1239,6 +1273,12 @@ class EventStream(NamedTuple):
     new_slot: np.ndarray   # first event of its slot (drain + maybe sample)
     sample: np.ndarray     # sample metrics of the just-finished slot
     measuring: np.ndarray  # arrival inside the measurement window
+    # queued protocols only (None otherwise; shipped to device):
+    slot: np.ndarray = None    # int32 — event slot (the wait stage's clock)
+    end: np.ndarray = None     # int32 — absolute end slot of the arrival
+    prio: np.ndarray = None    # int32 — priority class of the arrival
+    tenant: np.ndarray = None  # int32 — tenant id of the arrival
+    wlive: np.ndarray = None   # bool — real event (not padding/sentinel)
 
 
 class EventMeta(NamedTuple):
@@ -1277,6 +1317,11 @@ class EventTrace(NamedTuple):
     mig_from_anchor: jax.Array = None  # victim's old anchor value
     mig_to_gpu: jax.Array = None       # victim's new GPU
     mig_to_anchor: jax.Array = None    # victim's new anchor value
+    # queued protocols only: the wait-ring stage's outputs at this event
+    parked: jax.Array = None       # rejected arrival entered the wait ring
+    wadm_eidx: jax.Array = None    # original event index of the wait-admit (-1 none)
+    wadm_gpu: jax.Array = None     # wait-admit's chosen GPU (-1 none)
+    wadm_aidx: jax.Array = None    # wait-admit's chosen anchor index (-1 none)
 
 
 def _init_state(
@@ -1286,10 +1331,13 @@ def _init_state(
     ring_cols: int,
     track_occ: bool,
     track_alloc: bool,
+    wait_slots: int = 0,
 ) -> ReplicaState:
     num_gpus = midx.shape[0]
     s = tables.W.shape[2]
     n = tables.W.shape[1]
+    q = wait_slots
+    zq = jnp.zeros((q,), jnp.int32) if q else None
     return ReplicaState(
         occ=jnp.zeros((num_gpus, s), jnp.int32) if track_occ else None,
         base=jnp.zeros((num_gpus, n), jnp.float32),
@@ -1300,6 +1348,15 @@ def _init_state(
         ring_mask=jnp.zeros((ring_rows, ring_cols, s), jnp.int32),
         ring_pid=jnp.zeros((ring_rows, ring_cols), jnp.int32) if track_alloc else None,
         ring_aidx=jnp.zeros((ring_rows, ring_cols), jnp.int32) if track_alloc else None,
+        wait_pid=jnp.full((q,), -1, jnp.int32) if q else None,
+        wait_arr=zq,
+        wait_end=zq,
+        wait_row=zq,
+        wait_col=zq,
+        wait_prio=zq,
+        wait_ten=zq,
+        wait_eidx=zq,
+        ev=jnp.int32(0) if q else None,
     )
 
 
@@ -1324,6 +1381,7 @@ class EngineCore:
     vg: jax.Array
     frag_fn: Optional[object] = None
     delta_fn: Optional[object] = None
+    wait_patience: int = 0  # queued protocols: max slots a request may wait
 
     # -- stages --------------------------------------------------------------
     def _stage_boundary_measure(self, st: ReplicaState):
@@ -1449,10 +1507,87 @@ class EngineCore:
             ring_aidx = ring_aidx.at[exp_row, exp_col].set(
                 jnp.where(ok, aidx.astype(jnp.int32), ring_aidx[exp_row, exp_col])
             )
-        return ReplicaState(
+        return st._replace(
             occ=occ, base=base, free=free, f=f, rr=rr,
             ring_gpu=ring_gpu, ring_mask=ring_mask,
             ring_pid=ring_pid, ring_aidx=ring_aidx,
+        )
+
+    def _stage_wait(self, st: ReplicaState, t, wlive):
+        """Queued protocols: prune the wait ring, then try to admit its head.
+
+        Entries whose lease deadline passed (``end <= t``) or whose wait
+        exceeded the patience budget are dropped — final rejects (they
+        simply never appear as a wait-admit in the trace).  Among the
+        survivors the *head* is the lexicographic minimum of the spec's
+        queue order (:func:`repro.core.policy.queue_order`; the original
+        event index breaks ties FIFO).  The head re-enters the spec's
+        placement selection; on acceptance it commits with its original
+        host-assigned ring coordinates (its absolute end slot is
+        unchanged, so the expiry row is still less than one ring
+        revolution ahead and the column is collision-free).  One admission
+        attempt per event — waiting requests drain across the stream's
+        events (heartbeats included), always ahead of the concurrent
+        arrival.  ``wlive`` gates the stage to real events (padding and
+        sentinel lanes have no host-side clock).
+        """
+        present = st.wait_pid >= 0
+        age = t - st.wait_arr
+        drop = wlive & ((st.wait_end <= t) | (age > self.wait_patience))
+        keep = present & ~drop
+
+        mask = keep & wlive
+        for key in queue_order(self.spec):
+            base_k = key_base(key)
+            if base_k == "priority":
+                val = st.wait_prio.astype(jnp.float32)
+            elif base_k == "wait-age":
+                val = age.astype(jnp.float32)
+            else:  # tenant
+                val = st.wait_ten.astype(jnp.float32)
+            if key.startswith("-"):
+                val = -val
+            masked = jnp.where(mask, val, _BIG)
+            mask = mask & (masked == masked.min())
+        fifo = jnp.where(mask, st.wait_eidx, jnp.int32(2**31 - 1))
+        j = jnp.argmin(fifo)
+        head = mask.any()
+
+        pid_w = jnp.maximum(st.wait_pid[j], 0)
+        gpu, aidx, sel_ok = _select(
+            self.spec, st.base, st.free, st.f, self.metric, self.tables,
+            self.midx, self.vg, pid_w, st.rr, delta_fn=self.delta_fn,
+        )
+        ok_w = sel_ok & head
+        st = self._stage_commit(
+            st, pid_w, gpu, aidx, ok_w, st.wait_row[j], st.wait_col[j], None
+        )
+        wait_pid = jnp.where(keep, st.wait_pid, jnp.int32(-1))
+        wait_pid = wait_pid.at[j].set(jnp.where(ok_w, jnp.int32(-1), wait_pid[j]))
+        st = st._replace(wait_pid=wait_pid)
+        eidx = jnp.where(ok_w, st.wait_eidx[j], jnp.int32(-1))
+        return st, eidx, gpu.astype(jnp.int32), aidx.astype(jnp.int32), ok_w
+
+    def _stage_park(
+        self, st: ReplicaState, pid_c, can, t, end, prio, ten, exp_row, exp_col
+    ):
+        """Insert a rejected arrival into the first free wait-ring slot
+        (``can`` already folds in validity, rejection and free capacity)."""
+        freeslot = st.wait_pid < 0
+        j = jnp.argmax(freeslot)
+
+        def put(arr, v):
+            return arr.at[j].set(jnp.where(can, v, arr[j]))
+
+        return st._replace(
+            wait_pid=put(st.wait_pid, pid_c),
+            wait_arr=put(st.wait_arr, t),
+            wait_end=put(st.wait_end, end),
+            wait_row=put(st.wait_row, exp_row),
+            wait_col=put(st.wait_col, exp_col),
+            wait_prio=put(st.wait_prio, prio),
+            wait_ten=put(st.wait_ten, ten),
+            wait_eidx=put(st.wait_eidx, st.ev),
         )
 
     def _stage_post_measure(self, st: ReplicaState):
@@ -1461,13 +1596,23 @@ class EngineCore:
 
     # -- the composed step ---------------------------------------------------
     def step(self, st: ReplicaState, x):
-        pid, exp_row, exp_col, drain_row, new_slot = x
+        if self.protocol.queued:
+            (pid, exp_row, exp_col, drain_row, new_slot,
+             t, end, prio, ten, wlive) = x
+        else:
+            pid, exp_row, exp_col, drain_row, new_slot = x
 
         frag = free_sum = active = None
         if self.protocol.boundary_metrics:
             frag, free_sum, active = self._stage_boundary_measure(st)
 
         st = self._stage_expire(st, drain_row, new_slot)
+
+        wadm_eidx = wadm_gpu = wadm_aidx = parked = None
+        if self.protocol.queued:  # waiting requests admit ahead of the arrival
+            st, wadm_eidx, wadm_gpu, wadm_aidx, ok_w = self._stage_wait(st, t, wlive)
+            wadm_gpu = jnp.where(ok_w, wadm_gpu, -1)
+            wadm_aidx = jnp.where(ok_w, wadm_aidx, -1)
 
         valid = pid >= 0
         pid_c = jnp.maximum(pid, 0)
@@ -1480,6 +1625,13 @@ class EngineCore:
             )
 
         st = self._stage_commit(st, pid_c, gpu, aidx, ok, exp_row, exp_col, mig_res)
+
+        if self.protocol.queued:
+            parked = valid & ~ok & wlive & (st.wait_pid < 0).any()
+            st = self._stage_park(
+                st, pid_c, parked, t, end, prio, ten, exp_row, exp_col
+            )
+            st = st._replace(ev=st.ev + 1)
 
         post_frag = post_free = post_active = None
         if self.protocol.post_metrics:
@@ -1509,6 +1661,10 @@ class EngineCore:
             mig_to_anchor=None if mig_res is None else jnp.where(
                 mig_res.mig, mig_res.new_anchor, neg1
             ),
+            parked=parked,
+            wadm_eidx=wadm_eidx,
+            wadm_gpu=wadm_gpu,
+            wadm_aidx=wadm_aidx,
         )
         return st, trace
 
@@ -1517,7 +1673,7 @@ class EngineCore:
     jax.jit,
     static_argnames=(
         "policy", "metric", "num_gpus", "ring_rows", "ring_cols",
-        "use_kernel", "kernel_spec", "protocol",
+        "use_kernel", "kernel_spec", "protocol", "wait_slots", "wait_patience",
     ),
 )
 def _simulate(
@@ -1531,12 +1687,26 @@ def _simulate(
     use_kernel: bool,
     kernel_spec: Optional[mig.ClusterSpec] = None,
     protocol: Union[str, Protocol] = "steady",
+    wait_slots: int = 0,
+    wait_patience: int = 0,
     midx: Optional[jax.Array] = None,
     tables: Optional[SpecTables] = None,
 ) -> Tuple[ReplicaState, EventTrace]:
     runs = events.pid.shape[1]
     pspec = resolve(policy, engine="batched")
     proto = resolve_protocol(protocol)
+    if proto.queued:
+        if pspec.defrag:
+            raise ValueError(
+                f"policy {pspec.name!r}: defrag specs are not supported under "
+                "the queued protocol (the migrate stage's victim table does "
+                "not cover parked requests)"
+            )
+        if wait_slots <= 0:
+            raise ValueError(
+                f"protocol {proto.name!r} needs wait_slots > 0 "
+                "(SimConfig.wait_capacity)"
+            )
     if tables is None:  # homogeneous A100-80GB default
         cspec = _default_spec(num_gpus)
         tables = spec_tables(cspec)
@@ -1558,6 +1728,7 @@ def _simulate(
     core = EngineCore(
         spec=pspec, protocol=proto, metric=metric, tables=tables,
         midx=midx, vg=vg, frag_fn=frag_fn, delta_fn=delta_fn,
+        wait_patience=wait_patience,
     )
     step = jax.vmap(core.step, in_axes=(0, 0))
     init = jax.tree.map(
@@ -1565,10 +1736,13 @@ def _simulate(
         _init_state(
             tables, midx, ring_rows, ring_cols,
             track_occ=frag_fn is not None, track_alloc=pspec.defrag,
+            wait_slots=wait_slots if proto.queued else 0,
         ),
     )
     # sample/measuring are host-side reduction flags — never shipped to the scan
     xs = (events.pid, events.exp_row, events.exp_col, events.drain_row, events.new_slot)
+    if proto.queued:  # the wait stage's clock + per-arrival queue attributes
+        xs = xs + (events.slot, events.end, events.prio, events.tenant, events.wlive)
     return jax.lax.scan(lambda st, x: step(st, x), init, xs)
 
 
@@ -1609,7 +1783,7 @@ def _ring_columns(
 
 
 def presample_arrivals(
-    cfg: SimConfig, runs: int, seed=None
+    cfg: SimConfig, runs: int, seed=None, queued: bool = False
 ) -> Tuple[EventStream, EventMeta, int, int]:
     """Build per-replica steady-protocol event streams on host.
 
@@ -1618,6 +1792,13 @@ def presample_arrivals(
     events never skip a slot), plus a trailing sentinel that samples the
     final slot; streams are right-padded to the longest replica with no-op
     lanes.
+
+    ``queued`` additionally populates the stream's queued-protocol fields
+    (slot clock, absolute end slots, per-arrival tenant/priority draws and
+    the live-event mask).  The tenant/priority draws happen strictly
+    *after* the shared arrival sampling, so the arrival process — and
+    every non-queued field — is byte-identical with ``queued=False``
+    (golden steady traces are unaffected).
     """
     rng = np.random.default_rng(cfg.seed if seed is None else seed)
     probs = request_probs(cfg)
@@ -1660,6 +1841,18 @@ def presample_arrivals(
     )
     measuring = is_arrival & (slot >= warm)
 
+    prio = tenant = wlive = None
+    if queued:  # drawn after the shared stream: arrival sampling unchanged
+        tenant = np.zeros((runs, e_max), dtype=np.int32)
+        prio = np.zeros((runs, e_max), dtype=np.int32)
+        for r in range(runs):
+            sel = is_arrival[r]
+            na = int(sel.sum())
+            tenant[r, sel] = rng.integers(0, max(1, cfg.num_tenants), size=na)
+            prio[r, sel] = rng.integers(0, max(1, cfg.num_priorities), size=na)
+        wlive = slot < total_slots  # padding/sentinel lanes have no clock
+        tenant, prio, wlive = tenant.T, prio.T, wlive.T
+
     events = EventStream(
         pid=pid.T,
         exp_row=exp_row.T,
@@ -1668,6 +1861,11 @@ def presample_arrivals(
         new_slot=new_slot.T,
         sample=sample.T,
         measuring=measuring.T,
+        slot=slot.T.astype(np.int32) if queued else None,
+        end=end.T.astype(np.int32) if queued else None,
+        prio=prio,
+        tenant=tenant,
+        wlive=wlive,
     )
     meta = EventMeta(slot=slot.T, end=end.T)
     return events, meta, ring_k + 2, ring_cols
@@ -1788,10 +1986,12 @@ def run_batched(
             "(PolicySpec.kernel_lowering=False); run with use_kernel=False"
         )
 
-    presample = (
-        presample_arrivals if proto.name == "steady" else presample_cumulative
-    )
-    events, _, ring_rows, ring_cols = presample(cfg, runs)
+    if proto.name == "cumulative":
+        events, _, ring_rows, ring_cols = presample_cumulative(cfg, runs)
+    else:
+        events, _, ring_rows, ring_cols = presample_arrivals(
+            cfg, runs, queued=proto.queued
+        )
     events_dev = shard_events(jax.tree.map(jnp.asarray, events), runs, shard)
     _, trace = jax.device_get(
         _simulate(
@@ -1804,12 +2004,16 @@ def run_batched(
             use_kernel=use_kernel,
             kernel_spec=spec if use_kernel else None,
             protocol=proto,
+            wait_slots=cfg.wait_capacity if proto.queued else 0,
+            wait_patience=cfg.wait_patience if proto.queued else 0,
             midx=jnp.asarray(spec.model_index),
             tables=spec_tables(spec),
         )
     )
     if proto.name == "cumulative":
         return _aggregate_cumulative(events, trace, spec, runs, cfg)
+    if proto.queued:
+        return _aggregate_queued(events, trace, spec, runs)
     return aggregate(events, trace, spec, runs)
 
 
@@ -1848,6 +2052,83 @@ def aggregate(
         "frag_severity": float(frag.mean()),
         "rejects_by_profile": rejects_p / runs,
         "arrivals_by_profile": arrivals_p / runs,
+    }
+
+
+def _aggregate_queued(
+    events: EventStream, trace: EventTrace, spec, runs: int
+) -> Dict[str, float]:
+    """Reduce queued-protocol traces: acceptance folds in wait-admits, plus
+    p50/p99 wait and Jain per-tenant fairness.
+
+    The device trace records each wait-admit's *original* event index
+    (``wadm_eidx``), so late acceptances and their waits reconstruct
+    host-side: arrival ``e`` was ultimately accepted iff it was accepted
+    in place (``ok``) or some later event admitted it from the wait ring;
+    its wait is the slot distance between the two events (0 when
+    immediate).  Acceptance/fairness attribute to the original arrival's
+    measurement-window membership, exactly like the host simulator
+    (:func:`repro.sim.simulator._run_steady_queued`).
+    """
+    if isinstance(spec, int):
+        spec = _default_spec(spec)
+    cap = float(spec.total_mem_slices)
+    ok = np.asarray(trace.ok)
+    wadm = np.asarray(trace.wadm_eidx)   # (E, R)
+    slot = np.asarray(events.slot)
+    tenant = np.asarray(events.tenant)
+    meas = events.measuring
+    samp = events.sample
+
+    late_ok = np.zeros_like(ok)
+    wait = np.zeros(ok.shape, np.float64)
+    for r in range(runs):
+        adm = np.flatnonzero(wadm[:, r] >= 0)
+        orig = wadm[adm, r]
+        late_ok[orig, r] = True
+        wait[orig, r] = slot[adm, r] - slot[orig, r]
+    acc_all = ok | late_ok
+
+    arrived = np.maximum(meas.sum(axis=0), 1)  # (R,)
+    accepted = (acc_all & meas).sum(axis=0)
+    nsamp = np.maximum(samp.sum(axis=0), 1)
+    util = ((cap - trace.free_sum) / cap * samp).sum(axis=0) / nsamp
+    active = (trace.active * samp).sum(axis=0) / nsamp
+    frag = (trace.frag * samp).sum(axis=0) / nsamp
+
+    p50 = np.zeros(runs)
+    p99 = np.zeros(runs)
+    fair = np.zeros(runs)
+    for r in range(runs):
+        w = wait[:, r][acc_all[:, r] & meas[:, r]]
+        p50[r] = np.percentile(w, 50) if len(w) else 0.0
+        p99[r] = np.percentile(w, 99) if len(w) else 0.0
+        tm = meas[:, r]
+        rates = [
+            (acc_all[:, r] & tm & (tenant[:, r] == tn)).sum()
+            / (tm & (tenant[:, r] == tn)).sum()
+            for tn in np.unique(tenant[:, r][tm])
+        ]
+        fair[r] = jain_fairness(rates)
+
+    arrivals_p = np.stack(
+        [((events.pid == p) & meas).sum() for p in range(mig.NUM_PROFILES)]
+    )
+    rejects_p = np.stack(
+        [((events.pid == p) & meas & ~acc_all).sum() for p in range(mig.NUM_PROFILES)]
+    )
+    return {
+        "acceptance_rate": float((accepted / arrived).mean()),
+        "allocated_workloads": float(accepted.mean()),
+        "active_gpus": float(active.mean()),
+        "utilization": float(util.mean()),
+        "frag_severity": float(frag.mean()),
+        "rejects_by_profile": rejects_p / runs,
+        "arrivals_by_profile": arrivals_p / runs,
+        "wait_p50": float(p50.mean()),
+        "wait_p99": float(p99.mean()),
+        "fairness": float(fair.mean()),
+        "queue_admits": float((late_ok & meas).sum(axis=0).mean()),
     }
 
 

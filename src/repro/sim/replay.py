@@ -37,7 +37,7 @@ from typing import List, NamedTuple, Optional, Tuple
 import numpy as np
 
 from repro.core import mig
-from repro.core.policy import PolicyLike
+from repro.core.policy import PolicyLike, key_base, queue_order, resolve
 from repro.core.schedulers import make_scheduler
 from repro.sim.batched import EventMeta, EventStream, EventTrace
 
@@ -89,6 +89,11 @@ def _walk(
         mig_from_anchor = np.asarray(trace.mig_from_anchor)
         mig_to_gpu = np.asarray(trace.mig_to_gpu)
         mig_to_anchor = np.asarray(trace.mig_to_anchor)
+    has_wadm = trace.wadm_eidx is not None
+    if has_wadm:
+        wadm_eidx = np.asarray(trace.wadm_eidx)
+        wadm_gpu = np.asarray(trace.wadm_gpu)
+        wadm_aidx = np.asarray(trace.wadm_aidx)
 
     final = np.zeros((runs, num_gpus, spec.num_mem_slices), dtype=np.int32)
     alive_sets = []
@@ -108,6 +113,35 @@ def _walk(
                             f"does not match a fully-occupied window"
                         )
                     occ[w.gpu, w.anchor : w.anchor + w.mem] = 0
+            if has_wadm and wadm_eidx[e, r] >= 0:
+                # a parked arrival admits from the wait ring at this event:
+                # commit it with its ORIGINAL profile and end slot (the
+                # lease deadline is unchanged by waiting)
+                e0 = int(wadm_eidx[e, r])
+                p0 = int(pid[e0, r])
+                g0, j0 = int(wadm_gpu[e, r]), int(wadm_aidx[e, r])
+                prof0 = spec.model_of(g0).profiles[p0]
+                if check:
+                    assert p0 >= 0 and not ok[e0, r], (
+                        f"replica {r} event {e}: wait-admit references event "
+                        f"{e0}, which is not a rejected arrival"
+                    )
+                    assert int(end[e0, r]) > int(slot[e, r]), (
+                        f"replica {r} event {e}: wait-admit past the lease "
+                        f"deadline of event {e0}"
+                    )
+                    assert 0 <= j0 < prof0.num_placements, (
+                        f"replica {r} event {e}: wait-admit anchor index "
+                        f"{j0} illegal for {prof0.name}"
+                    )
+                a0 = prof0.anchors[j0]
+                if check:
+                    assert (occ[g0, a0 : a0 + prof0.mem] == 0).all(), (
+                        f"replica {r} event {e}: wait-admit {prof0.name}@{a0} "
+                        f"double-books slices on GPU {g0}"
+                    )
+                occ[g0, a0 : a0 + prof0.mem] = 1
+                alive.append(_Alive(int(end[e0, r]), g0, a0, prof0.mem, p0))
             p = pid[e, r]
             if p < 0 or not ok[e, r]:
                 continue
@@ -319,3 +353,156 @@ def host_decisions(
         **scheduler_kwargs,
     )
     return t.ok, t.gpu, t.anchor
+
+
+class QueuedHostTrace(NamedTuple):
+    """Reference decisions of the queued protocol, shaped ``(E_max, R)``.
+
+    ``ok`` is the in-place accept of each arrival; ``parked`` marks
+    rejected arrivals that entered the wait queue; ``wadm_*`` record, per
+    *event*, the wait-queue admission that happened there (the original
+    arrival's event index, its GPU and its anchor VALUE; ``-1`` when
+    none).
+    """
+
+    ok: np.ndarray
+    gpu: np.ndarray
+    anchor: np.ndarray
+    parked: np.ndarray
+    wadm_eidx: np.ndarray
+    wadm_gpu: np.ndarray
+    wadm_anchor: np.ndarray
+
+
+class _Waiting(NamedTuple):
+    """One parked request in the queued host reference."""
+
+    eidx: int   # original event index (= its workload id)
+    pid: int
+    arr: int    # arrival slot
+    end: int    # absolute lease deadline
+    prio: int
+    tenant: int
+
+
+def queued_host_decisions(
+    events: EventStream,
+    meta: EventMeta,
+    policy: PolicyLike,
+    num_gpus: int,
+    metric: str = "blocked",
+    spec: Optional[mig.ClusterSpec] = None,
+    capacity: int = 8,
+    patience: int = 16,
+) -> QueuedHostTrace:
+    """Drive the Python scheduler over a queued presampled stream.
+
+    The independent host reference of the batched ``steady-queued``
+    protocol (:mod:`repro.sim.batched`), event-for-event: at every live
+    event, *before* the arrival, prune wait entries past their lease
+    deadline or the patience budget, then attempt ONE admission of the
+    queue head — the lexicographic minimum of the policy's queue order
+    (:func:`repro.core.policy.queue_order`; arrival order breaks ties) —
+    committing it with its original profile and deadline.  The arrival
+    then selects as usual; a rejected arrival parks if the queue
+    (``capacity`` entries) has room.  The device trace must agree
+    element-for-element: ``ok``/``parked`` everywhere, placements wherever
+    accepted, and the wait admissions (event, origin, placement) exactly.
+
+    The stream must have been presampled with ``queued=True``
+    (:func:`repro.sim.batched.presample_arrivals`).
+    """
+    if events.prio is None:
+        raise ValueError(
+            "queued_host_decisions needs a queued stream "
+            "(presample_arrivals(..., queued=True))"
+        )
+    spec = _spec_or_default(spec, num_gpus)
+    pspec = resolve(policy, engine="python")
+    order = queue_order(pspec)
+    e_max, runs = np.asarray(events.pid).shape
+    pid = np.asarray(events.pid)
+    new_slot = np.asarray(events.new_slot)
+    slot = np.asarray(meta.slot)
+    end = np.asarray(meta.end)
+    prio = np.asarray(events.prio)
+    tenant = np.asarray(events.tenant)
+    wlive = np.asarray(events.wlive)
+
+    ok = np.zeros((e_max, runs), dtype=bool)
+    gpu = np.full((e_max, runs), -1, dtype=np.int32)
+    anchor = np.full((e_max, runs), -1, dtype=np.int32)
+    parked = np.zeros((e_max, runs), dtype=bool)
+    wadm_eidx = np.full((e_max, runs), -1, dtype=np.int32)
+    wadm_gpu = np.full((e_max, runs), -1, dtype=np.int32)
+    wadm_anchor = np.full((e_max, runs), -1, dtype=np.int32)
+
+    def head_key(t):
+        def key_fn(w: _Waiting):
+            key = []
+            for k in order:
+                base = key_base(k)
+                if base == "priority":
+                    v = w.prio
+                elif base == "wait-age":
+                    v = t - w.arr
+                else:  # tenant
+                    v = w.tenant
+                key.append(-v if k.startswith("-") else v)
+            key.append(w.eidx)  # FIFO tie-break
+            return tuple(key)
+
+        return key_fn
+
+    for r in range(runs):
+        cluster = mig.ClusterState(spec=spec)
+        scheduler = make_scheduler(pspec, metric)
+        alive = []  # (end_slot, workload_id)
+        waiting: List[_Waiting] = []
+        for e in range(e_max):
+            if new_slot[e, r]:
+                t = slot[e, r]
+                for tend, wid in [w for w in alive if w[0] <= t]:
+                    cluster.release(wid)
+                alive = [w for w in alive if w[0] > t]
+            if wlive[e, r]:
+                t = int(slot[e, r])
+                # prune, then one admission attempt of the queue head
+                waiting = [
+                    w for w in waiting
+                    if w.end > t and t - w.arr <= patience
+                ]
+                if waiting:
+                    w = min(waiting, key=head_key(t))
+                    sel = scheduler.select(cluster, w.pid)
+                    if sel is not None:
+                        waiting.remove(w)
+                        g, a = sel
+                        cluster.allocate(w.eidx, w.pid, g, a)
+                        alive.append((w.end, w.eidx))
+                        wadm_eidx[e, r] = w.eidx
+                        wadm_gpu[e, r] = g
+                        wadm_anchor[e, r] = a
+            p = int(pid[e, r])
+            if p < 0:
+                continue
+            sel = scheduler.select(cluster, p)
+            if sel is not None:
+                g, a = sel
+                cluster.allocate(e, p, g, a)
+                alive.append((int(end[e, r]), e))
+                ok[e, r] = True
+                gpu[e, r] = g
+                anchor[e, r] = a
+            elif wlive[e, r] and len(waiting) < capacity:
+                waiting.append(
+                    _Waiting(
+                        eidx=e, pid=p, arr=int(slot[e, r]),
+                        end=int(end[e, r]), prio=int(prio[e, r]),
+                        tenant=int(tenant[e, r]),
+                    )
+                )
+                parked[e, r] = True
+    return QueuedHostTrace(
+        ok, gpu, anchor, parked, wadm_eidx, wadm_gpu, wadm_anchor
+    )

@@ -19,8 +19,20 @@ calibration analysis):
   capacity at 100% demand, so every packing scheduler accepts ~everything —
   we keep it for reference.
 
+* ``"steady-queued"`` (beyond-paper): the steady protocol with a waiting
+  queue instead of accept-or-drop.  Rejected requests park in a
+  fixed-capacity queue with a patience budget and re-enter selection ahead
+  of new arrivals, ordered by the policy's queue order
+  (:func:`repro.core.policy.queue_order` — priority class, then wait age,
+  by default).  Each request keeps a *lease deadline*: its end slot is
+  fixed at arrival, so a queued request is only admissible while the
+  deadline has not passed — the same duration semantics the batched
+  engine's wait-ring stage uses (:mod:`repro.sim.batched`).  Adds p50/p99
+  wait and Jain per-tenant fairness to the reported metrics.
+
 Metrics (paper §VI): acceptance rate, allocated workloads, active GPUs,
-resource utilization (allocated slices), fragmentation severity (mean F).
+resource utilization (allocated slices), fragmentation severity (mean F);
+the queued protocol adds wait percentiles and per-tenant fairness.
 """
 
 from __future__ import annotations
@@ -32,7 +44,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import fragmentation, mig
-from repro.core.policy import PolicyLike
+from repro.core.policy import DEFAULT_QUEUE_ORDER, PolicyLike, key_base, queue_order
 from repro.core.schedulers import Scheduler, make_scheduler
 from repro.sim import distributions
 
@@ -41,7 +53,7 @@ from repro.sim import distributions
 class SimConfig:
     num_gpus: int = 100
     distribution: str = "uniform"
-    protocol: str = "steady"  # "steady" | "cumulative"
+    protocol: str = "steady"  # "steady" | "cumulative" | "steady-queued"
     metric: str = "blocked"   # fragmentation variant (MFI driver + severity metric)
     seed: int = 0
     # heterogeneous fleets: a ClusterSpec overrides num_gpus (the paper's
@@ -59,6 +71,11 @@ class SimConfig:
     # cumulative protocol:
     max_demand: float = 1.0
     demand_grid: Sequence[float] = tuple(np.round(np.arange(0.05, 1.001, 0.05), 3))
+    # steady-queued protocol (multi-tenant waiting queue):
+    num_tenants: int = 4       # tenant ids sampled uniformly per arrival
+    num_priorities: int = 2    # priority classes (0 = most urgent)
+    wait_capacity: int = 8     # waiting-queue slots per cluster
+    wait_patience: int = 16    # max slots a request may wait before final reject
 
     def __post_init__(self):
         if self.cluster_spec is not None:
@@ -83,6 +100,11 @@ class SimResult:
     # cumulative-protocol traces on the demand grid (None for steady):
     demand_grid: Optional[np.ndarray] = None
     traces: Optional[Dict[str, np.ndarray]] = None
+    # steady-queued protocol only (None otherwise):
+    wait_p50: Optional[float] = None   # median wait of accepted requests (slots)
+    wait_p99: Optional[float] = None   # p99 wait of accepted requests (slots)
+    fairness: Optional[float] = None   # Jain index over per-tenant acceptance
+    queue_admits: Optional[float] = None  # accepted after waiting (count)
 
 
 def request_probs(cfg: SimConfig) -> np.ndarray:
@@ -127,11 +149,51 @@ def _apply_migration(cluster: mig.ClusterState, mig_req) -> None:
     cluster.migrate(vwid, vg, va)
 
 
+def jain_fairness(values) -> float:
+    """Jain's fairness index ``(Σx)² / (n·Σx²)`` of per-tenant rates.
+
+    1.0 = perfectly even; 1/n = maximally skewed.  Empty or all-zero
+    inputs (no tenant saw any demand / no tenant was served) return 1.0 —
+    nothing was distributed unevenly.
+    """
+    x = np.asarray(list(values), dtype=np.float64)
+    if x.size == 0:
+        return 1.0
+    sq = float(np.square(x).sum())
+    if sq == 0.0:
+        return 1.0
+    s = float(x.sum())
+    return s * s / (x.size * sq)
+
+
+def _queue_sort_key(order, t):
+    """Sort key of a wait-queue entry under a policy's queue order at slot
+    ``t`` (``-`` prefixes flip; arrival order is the final tie-break)."""
+
+    def key_fn(entry):
+        key = []
+        for k in order:
+            base = key_base(k)
+            if base == "priority":
+                v = entry["prio"]
+            elif base == "wait-age":
+                v = t - entry["arr"]
+            else:  # tenant
+                v = entry["tenant"]
+            key.append(-v if k.startswith("-") else v)
+        key.append(entry["seq"])  # FIFO tie-break
+        return tuple(key)
+
+    return key_fn
+
+
 def run_simulation(scheduler: Scheduler, cfg: SimConfig, seed: Optional[int] = None) -> SimResult:
     if cfg.protocol == "steady":
         return _run_steady(scheduler, cfg, cfg.seed if seed is None else seed)
     elif cfg.protocol == "cumulative":
         return _run_cumulative(scheduler, cfg, cfg.seed if seed is None else seed)
+    elif cfg.protocol == "steady-queued":
+        return _run_steady_queued(scheduler, cfg, cfg.seed if seed is None else seed)
     raise ValueError(f"unknown protocol {cfg.protocol!r}")
 
 
@@ -190,6 +252,121 @@ def _run_steady(scheduler: Scheduler, cfg: SimConfig, seed: int) -> SimResult:
         frag_severity=frag_s / max(nsamp, 1),
         rejects_by_profile=rejects,
         arrivals_by_profile=arrivals,
+    )
+
+
+def _run_steady_queued(scheduler: Scheduler, cfg: SimConfig, seed: int) -> SimResult:
+    """Steady-protocol loop with a tenant-aware waiting queue.
+
+    Rejected arrivals park in a bounded queue (``cfg.wait_capacity``) with
+    a patience budget (``cfg.wait_patience`` slots).  Every slot, after
+    releases, the queue is drained greedily in the policy's queue order
+    (:func:`repro.core.policy.queue_order`) until the head no longer fits.
+    Requests keep their lease deadline from arrival (``end = arrival +
+    duration``), matching the batched engine's wait-ring semantics: a
+    queued request past its deadline or patience is a final reject.
+    """
+    rng = np.random.default_rng(seed)
+    scheduler.reset()
+    spec = cfg.spec()
+    cap = spec.total_mem_slices
+    probs = request_probs(cfg)
+    T, warm, meas, rate = steady_params(cfg)
+    order = queue_order(scheduler.spec) if hasattr(scheduler, "spec") else DEFAULT_QUEUE_ORDER
+
+    cluster = mig.ClusterState(spec=spec)
+    expiry: List = []
+    queue: List[Dict] = []
+    wid = 0
+    arr = acc = 0
+    rejects = np.zeros(mig.NUM_PROFILES)
+    arrivals = np.zeros(mig.NUM_PROFILES)
+    util_s = gpus_s = frag_s = 0.0
+    nsamp = 0
+    waits: List[float] = []
+    queue_admits = 0
+    tenant_arr = np.zeros(cfg.num_tenants)
+    tenant_acc = np.zeros(cfg.num_tenants)
+
+    def reject(entry):
+        nonlocal rejects
+        if entry["measuring"]:
+            rejects[entry["pid"]] += 1
+
+    def dispatch(entry, sel, t):
+        nonlocal acc, queue_admits
+        mig_req = getattr(scheduler, "pending_migration", None)
+        if mig_req is not None:  # mfi-defrag: move the victim first
+            _apply_migration(cluster, mig_req)
+        cluster.allocate(entry["wid"], entry["pid"], *sel)
+        heapq.heappush(expiry, (entry["end"], entry["wid"]))
+        if entry["measuring"]:
+            acc += 1
+            tenant_acc[entry["tenant"]] += 1
+            waits.append(float(t - entry["arr"]))
+            if t > entry["arr"]:
+                queue_admits += 1
+
+    for t in range(warm + meas):
+        while expiry and expiry[0][0] <= t:
+            _, w = heapq.heappop(expiry)
+            cluster.release(w)
+        # prune, then drain the queue in queue order until the head blocks
+        for entry in [e for e in queue if e["end"] <= t or t - e["arr"] > cfg.wait_patience]:
+            queue.remove(entry)
+            reject(entry)
+        queue.sort(key=_queue_sort_key(order, t))
+        while queue:
+            sel = scheduler.select(cluster, queue[0]["pid"])
+            if sel is None:
+                break
+            dispatch(queue.pop(0), sel, t)
+        for _ in range(rng.poisson(rate)):
+            pid = int(distributions.sample_profile_probs(probs, 1, rng)[0])
+            tenant = int(rng.integers(0, max(1, cfg.num_tenants)))
+            prio = int(rng.integers(0, max(1, cfg.num_priorities)))
+            measuring = t >= warm
+            if measuring:
+                arr += 1
+                arrivals[pid] += 1
+                tenant_arr[tenant] += 1
+            entry = {
+                "wid": wid, "pid": pid, "tenant": tenant, "prio": prio,
+                "arr": t, "end": t + int(rng.integers(1, T + 1)),
+                "measuring": measuring, "seq": wid,
+            }
+            sel = scheduler.select(cluster, pid)
+            if sel is not None:
+                dispatch(entry, sel, t)
+            elif cfg.wait_patience > 0 and len(queue) < cfg.wait_capacity:
+                queue.append(entry)
+            else:
+                reject(entry)
+            wid += 1
+        if t >= warm and (t - warm) % SAMPLE_EVERY == 0:
+            util_s += cluster.used_mem_slices / cap
+            gpus_s += cluster.active_gpus
+            frag_s += fragmentation.cluster_fragmentation(
+                cluster.occupancy_matrix(), cfg.metric, spec=spec
+            )
+            nsamp += 1
+
+    for entry in queue:  # still waiting at horizon end: final rejects
+        reject(entry)
+
+    rates = [tenant_acc[k] / tenant_arr[k] for k in range(cfg.num_tenants) if tenant_arr[k] > 0]
+    return SimResult(
+        acceptance_rate=acc / max(arr, 1),
+        allocated_workloads=float(acc),
+        active_gpus=gpus_s / max(nsamp, 1),
+        utilization=util_s / max(nsamp, 1),
+        frag_severity=frag_s / max(nsamp, 1),
+        rejects_by_profile=rejects,
+        arrivals_by_profile=arrivals,
+        wait_p50=float(np.percentile(waits, 50)) if waits else 0.0,
+        wait_p99=float(np.percentile(waits, 99)) if waits else 0.0,
+        fairness=jain_fairness(rates),
+        queue_admits=float(queue_admits),
     )
 
 
@@ -279,6 +456,8 @@ def run_many(scheduler_name: PolicyLike, cfg: SimConfig, runs: int = 100) -> Dic
     scheduler through the registry (stateful cursors start at 0).
     """
     keys = ("acceptance_rate", "allocated_workloads", "active_gpus", "utilization", "frag_severity")
+    if cfg.protocol == "steady-queued":
+        keys = keys + ("wait_p50", "wait_p99", "fairness", "queue_admits")
     acc = {k: 0.0 for k in keys}
     rej = np.zeros(mig.NUM_PROFILES)
     arrp = np.zeros(mig.NUM_PROFILES)

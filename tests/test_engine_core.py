@@ -763,3 +763,176 @@ class TestReplicaSharding:
         assert out.returncode == 0, out.stderr[-2000:]
         res = json.loads(out.stdout.strip().splitlines()[-1])
         assert res["sharded"] == res["plain"]
+
+
+# ---------------------------------------------------------------------------
+# Queued protocol: the wait/park stages
+# ---------------------------------------------------------------------------
+
+
+def _sim_queued(policy, cfg, spec=None, runs=3):
+    events, meta, rr, rc = batched.presample_arrivals(cfg, runs=runs, queued=True)
+    kw = {}
+    if spec is not None:
+        kw = dict(
+            midx=jnp.asarray(spec.model_index), tables=batched.spec_tables(spec)
+        )
+    final, trace = jax.device_get(
+        batched._simulate(
+            jax.tree.map(
+                lambda x: jnp.asarray(x) if x is not None else None, events
+            ),
+            policy=policy,
+            metric=cfg.metric,
+            num_gpus=cfg.num_gpus,
+            ring_rows=rr,
+            ring_cols=rc,
+            use_kernel=False,
+            protocol="steady-queued",
+            wait_slots=cfg.wait_capacity,
+            wait_patience=cfg.wait_patience,
+            **kw,
+        )
+    )
+    return events, meta, trace, final
+
+
+#: decision-trace hashes of the queued protocol at introduction — the wait
+#: ring and park/admit stages must stay bit-for-bit reproducible
+GOLDEN_QUEUED_TRACE_HASHES = {
+    "homog": "e3d1a83fced05aaa968ff95c2d9e3ed5d71839e2e12d4c6634e0389f80918925",
+    "mixed": "e368416188f84d500dbb7115410d3a24152fa06eac0dce525001032273a9f32f",
+}
+
+
+class TestQueuedEngine:
+    def test_protocol_registered(self):
+        proto = batched.resolve_protocol("steady-queued")
+        assert proto.queued and proto.boundary_metrics and not proto.post_metrics
+        assert not batched.resolve_protocol("steady").queued
+
+    def test_steady_stream_unchanged_by_queued_draws(self):
+        """Tenant/priority sampling happens strictly after the shared rng
+        stream: the arrival stream itself must stay byte-identical, keeping
+        every existing steady golden valid."""
+        cfg = SimConfig(num_gpus=5, offered_load=1.1, seed=7)
+        ev_plain, meta_plain, *_ = batched.presample_arrivals(cfg, runs=3)
+        ev_q, meta_q, *_ = batched.presample_arrivals(cfg, runs=3, queued=True)
+        np.testing.assert_array_equal(ev_plain.pid, ev_q.pid)
+        np.testing.assert_array_equal(ev_plain.exp_row, ev_q.exp_row)
+        np.testing.assert_array_equal(meta_plain.slot, meta_q.slot)
+        np.testing.assert_array_equal(meta_plain.end, meta_q.end)
+        assert ev_plain.prio is None and ev_q.prio is not None
+
+    @pytest.mark.parametrize(
+        "tag,cfg_fn,spec,policy",
+        [
+            (
+                "homog",
+                lambda: SimConfig(num_gpus=5, offered_load=1.2, seed=7),
+                None,
+                "mfi",
+            ),
+            (
+                "mixed",
+                lambda: SimConfig(cluster_spec=MIXED, offered_load=1.1, seed=9),
+                MIXED,
+                "mfi-queued",
+            ),
+        ],
+    )
+    def test_same_stream_queued_host_parity(self, tag, cfg_fn, spec, policy):
+        """Every in-place decision, park, wait-admission (origin AND
+        placement) matches the independent host reference."""
+        cfg = cfg_fn()
+        events, meta, trace, _ = _sim_queued(policy, cfg, spec)
+        ref = replay.queued_host_decisions(
+            events, meta, policy, cfg.num_gpus, metric=cfg.metric, spec=spec,
+            capacity=cfg.wait_capacity, patience=cfg.wait_patience,
+        )
+        np.testing.assert_array_equal(np.asarray(trace.ok), ref.ok)
+        np.testing.assert_array_equal(np.asarray(trace.parked), ref.parked)
+        acc = ref.ok
+        np.testing.assert_array_equal(np.asarray(trace.gpu)[acc], ref.gpu[acc])
+        np.testing.assert_array_equal(
+            np.asarray(trace.wadm_eidx), ref.wadm_eidx
+        )
+        adm = ref.wadm_eidx >= 0
+        np.testing.assert_array_equal(
+            np.asarray(trace.wadm_gpu)[adm], ref.wadm_gpu[adm]
+        )
+        assert adm.sum() > 0, "stream exercised no wait admissions"
+
+    def test_queued_replay_invariants(self):
+        """The replay walk re-executes wait admissions (legal anchors, no
+        double-booking, lease not expired) and drains cleanly."""
+        cfg = SimConfig(num_gpus=5, offered_load=1.2, seed=7)
+        events, meta, trace, _ = _sim_queued("mfi", cfg, None)
+        replay.replay(events, meta, trace, cfg.num_gpus)
+        _, drained = replay.drain_all(events, meta, trace, cfg.num_gpus)
+        assert (drained == 0).all()
+
+    def test_run_batched_queued_metrics(self):
+        cfg = SimConfig(
+            num_gpus=8, offered_load=1.2, seed=5, protocol="steady-queued"
+        )
+        r = batched.run_batched("mfi", cfg, runs=3)
+        for k in ("wait_p50", "wait_p99", "fairness", "queue_admits"):
+            assert k in r
+        assert 0.0 <= r["wait_p50"] <= r["wait_p99"] <= cfg.wait_patience
+        assert 0.0 < r["fairness"] <= 1.0
+        assert r["acceptance_rate"] > 0.0
+        # queueing can only help acceptance on the same stream shape
+        plain = batched.run_batched(
+            "mfi", SimConfig(num_gpus=8, offered_load=1.2, seed=5), runs=3
+        )
+        assert r["acceptance_rate"] >= plain["acceptance_rate"]
+
+    def test_queued_rejects_defrag(self):
+        cfg = SimConfig(
+            num_gpus=4, offered_load=1.0, seed=1, protocol="steady-queued"
+        )
+        with pytest.raises(ValueError, match="defrag"):
+            batched.run_batched("mfi-defrag", cfg, runs=2)
+
+    def test_queued_requires_wait_slots(self):
+        cfg = SimConfig(num_gpus=3, offered_load=1.0, seed=1)
+        events, meta, rr, rc = batched.presample_arrivals(
+            cfg, runs=2, queued=True
+        )
+        with pytest.raises(ValueError, match="wait_slots"):
+            batched._simulate(
+                jax.tree.map(
+                    lambda x: jnp.asarray(x) if x is not None else None, events
+                ),
+                policy="mfi",
+                metric=cfg.metric,
+                num_gpus=cfg.num_gpus,
+                ring_rows=rr,
+                ring_cols=rc,
+                use_kernel=False,
+                protocol="steady-queued",
+                wait_slots=0,
+            )
+
+    @pytest.mark.parametrize("tag", sorted(GOLDEN_QUEUED_TRACE_HASHES))
+    def test_queued_decision_traces_hash_identically(self, tag):
+        cfg, spec, policy = {
+            "homog": (
+                SimConfig(num_gpus=5, offered_load=1.2, seed=7), None, "mfi"
+            ),
+            "mixed": (
+                SimConfig(cluster_spec=MIXED, offered_load=1.1, seed=9),
+                MIXED,
+                "mfi-queued",
+            ),
+        }[tag]
+        _, _, trace, _ = _sim_queued(policy, cfg, spec)
+        h = hashlib.sha256()
+        for a in (
+            trace.ok, trace.gpu, trace.aidx, trace.parked, trace.wadm_eidx,
+            trace.wadm_gpu, trace.wadm_aidx, trace.free_sum, trace.active,
+            trace.frag,
+        ):
+            h.update(np.ascontiguousarray(np.asarray(a)).tobytes())
+        assert h.hexdigest() == GOLDEN_QUEUED_TRACE_HASHES[tag]

@@ -237,6 +237,39 @@ class TestUnifiedErrors:
             list_policies(engine="quantum")
 
 
+class TestRequestKeys:
+    """The tenant/priority/wait-age vocabulary: request-scoped keys order
+    the admission queue and are placement no-ops within one request."""
+
+    def test_queue_order_default_and_spec_derived(self):
+        from repro.core.policy import DEFAULT_QUEUE_ORDER, queue_order
+
+        assert queue_order(get_policy("mfi")) == DEFAULT_QUEUE_ORDER
+        spec = PolicySpec(
+            name="test-q", keys=("tenant", "-wait-age", "gpu", "anchor")
+        )
+        assert queue_order(spec) == ("tenant", "-wait-age")
+
+    def test_request_keys_in_vocabulary(self):
+        for k in ("tenant", "priority", "wait-age"):
+            assert k in KEY_VOCABULARY
+
+    def test_mfi_queued_registered_both_engines(self):
+        assert "mfi-queued" in list_policies(engine="batched")
+        assert policy_engines("mfi-queued") == ("python", "batched")
+
+    def test_request_keys_never_change_placement(self):
+        """Within one request, request-scoped keys are constant — mfi-queued
+        must place identically to mfi on any occupancy."""
+        rng = np.random.default_rng(17)
+        mfi = make_scheduler("mfi")
+        mfi_q = make_scheduler("mfi-queued")
+        for _ in range(20):
+            cl = _random_cluster(rng, mig.ClusterSpec.homogeneous(mig.A100_80GB, 4))
+            pid = int(rng.integers(0, mig.NUM_PROFILES))
+            assert mfi.select(cl, pid) == mfi_q.select(cl, pid)
+
+
 class TestCompilers:
     def test_make_scheduler_compiles_specs_and_names(self):
         assert isinstance(make_scheduler("ff"), SpecScheduler)

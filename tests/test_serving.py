@@ -38,6 +38,44 @@ class TestAdmission:
         assert profile_for_model(int(15e9), compute_heavy=True) == "2g.20gb"
         assert profile_for_model(int(70e9)) == "7g.80gb"
 
+    def test_profile_for_model_unplaceable_raises(self):
+        """Footprints past the largest profile must fail loudly, not be
+        silently mapped to a 7g.80gb that cannot hold them."""
+        with pytest.raises(ValueError, match="exceeds the largest"):
+            profile_for_model(int(100e9))
+        # the drifted module-level GiB table is gone
+        import repro.serving.admission as adm
+
+        assert not hasattr(adm, "_PROFILE_BY_GIB")
+
+    def test_duplicate_workload_id_rejected(self):
+        """A second admit of a live workload id must raise instead of
+        silently orphaning the first placement's slices."""
+        ac = AdmissionController(num_gpus=2, policy="mfi")
+        assert ac.admit(1, "1g.10gb") is not None
+        before = ac.cluster.used_mem_slices
+        with pytest.raises(ValueError, match="already placed"):
+            ac.admit(1, "1g.10gb")
+        assert ac.cluster.used_mem_slices == before
+        ac.release(1)
+        assert ac.cluster.used_mem_slices == 0
+
+    def test_release_unknown_workload_raises(self):
+        ac = AdmissionController(num_gpus=2)
+        with pytest.raises(KeyError, match="no active placement"):
+            ac.release(99)
+        # ClusterState itself also validates
+        with pytest.raises(KeyError, match="not placed"):
+            ac.cluster.release(99)
+        with pytest.raises(ValueError, match="already placed"):
+            ac.cluster.allocate(5, 0, 0, 0)
+            ac.cluster.allocate(5, 0, 1, 0)
+
+    def test_unknown_profile_rejected(self):
+        ac = AdmissionController(num_gpus=1)
+        with pytest.raises(ValueError, match="unknown MIG profile"):
+            ac.submit(1, "9g.90gb")
+
     def test_stats(self):
         ac = AdmissionController(num_gpus=2)
         ac.admit(1, "1g.10gb")
@@ -67,6 +105,146 @@ class TestAdmission:
             for a in g.allocations.values():
                 expect[a.anchor : a.anchor + mig.PROFILES[a.profile_id].mem] = 1
             np.testing.assert_array_equal(g.occupancy, expect)
+
+
+class TestQueuedAdmission:
+    def test_parked_request_dispatches_on_release(self):
+        ac = AdmissionController(num_gpus=1, policy="mfi")
+        assert ac.submit(1, "7g.80gb") is not None
+        assert ac.submit(2, "7g.80gb", patience=4) is None
+        assert ac.in_queue(2) and ac.queue_depth == 1
+        ac.release(1)  # re-drives admission from the queue
+        dispatched = ac.drain_dispatched()
+        assert [p.workload_id for p in dispatched] == [2]
+        assert not ac.in_queue(2)
+        assert ac.accepted == 2 and ac.rejected == 0
+
+    def test_priority_orders_the_queue(self):
+        """Lower priority value = more urgent; it overtakes FIFO order."""
+        ac = AdmissionController(num_gpus=1, policy="mfi")
+        assert ac.submit(1, "7g.80gb") is not None
+        assert ac.submit(2, "7g.80gb", priority=1, patience=8) is None
+        assert ac.submit(3, "7g.80gb", priority=0, patience=8) is None
+        ac.release(1)
+        assert [p.workload_id for p in ac.drain_dispatched()] == [3]
+        assert ac.in_queue(2)
+
+    def test_patience_expiry_final_reject(self):
+        ac = AdmissionController(num_gpus=1, policy="mfi")
+        assert ac.submit(1, "7g.80gb") is not None
+        assert ac.submit(2, "1g.10gb", patience=2) is None
+        ac.tick(3)  # clock passes the patience budget
+        assert ac.drain_expired() == [2]
+        assert ac.rejected == 1 and ac.queue_depth == 0
+
+    def test_zero_patience_is_accept_or_drop(self):
+        ac = AdmissionController(num_gpus=1, policy="mfi")
+        assert ac.submit(1, "7g.80gb") is not None
+        assert ac.submit(2, "1g.10gb") is None
+        assert ac.queue_depth == 0 and ac.rejected == 1
+
+    def test_tenant_quota_parks_over_quota_requests(self):
+        ac = AdmissionController(
+            num_gpus=2, policy="mfi", tenant_quotas={"a": 1}
+        )
+        assert ac.submit(1, "1g.10gb", tenant="a") is not None
+        # capacity exists, but tenant "a" is at quota -> parks
+        assert ac.submit(2, "1g.10gb", tenant="a", patience=4) is None
+        assert ac.in_queue(2)
+        # another tenant is unaffected
+        assert ac.submit(3, "1g.10gb", tenant="b") is not None
+        ac.release(1)
+        assert [p.workload_id for p in ac.drain_dispatched()] == [2]
+
+    def test_queue_capacity_bounds_parking(self):
+        ac = AdmissionController(num_gpus=1, policy="mfi", queue_capacity=1)
+        assert ac.submit(1, "7g.80gb") is not None
+        assert ac.submit(2, "1g.10gb", patience=4) is None
+        assert ac.submit(3, "1g.10gb", patience=4) is None  # queue full
+        assert ac.queue_depth == 1 and ac.rejected == 1
+
+    def test_wait_and_fairness_stats(self):
+        ac = AdmissionController(num_gpus=1, policy="mfi")
+        assert ac.submit(1, "7g.80gb", tenant="a") is not None
+        assert ac.submit(2, "7g.80gb", tenant="b", patience=8) is None
+        ac.tick(2)
+        ac.release(1)
+        assert [p.workload_id for p in ac.drain_dispatched()] == [2]
+        s = ac.stats()
+        assert s["queue_depth"] == 0.0
+        assert s["wait_p99"] >= 1.9  # workload 2 waited two ticks (p99 interpolates)
+        assert 0.0 < s["fairness"] <= 1.0
+
+
+def _replay_stream_through_scheduler(policy, spec, stream):
+    """Drive a raw SpecScheduler + ClusterState over an arrival/termination
+    stream, mirroring what AdmissionController should decide."""
+    from repro.core.schedulers import make_scheduler
+
+    cluster = mig.ClusterState(spec=spec)
+    scheduler = make_scheduler(policy, "blocked")
+    decisions = {}
+    for kind, wid, pid in stream:
+        if kind == "end":
+            if decisions.get(wid) is not None:
+                cluster.release(wid)
+            continue
+        sel = scheduler.select(cluster, pid)
+        if sel is None:
+            decisions[wid] = None
+            continue
+        pending = getattr(scheduler, "pending_migration", None)
+        if pending is not None:
+            vwid, vgpu, vanchor = pending
+            cluster.migrate(vwid, vgpu, vanchor)
+        cluster.allocate(wid, pid, *sel)
+        decisions[wid] = sel
+    return decisions, cluster
+
+
+class TestServingSimulatorParity:
+    """Satellite: same-stream serving-vs-scheduler decision parity."""
+
+    MIXED = mig.ClusterSpec(((mig.A100_80GB, 2), (mig.A100_40GB, 2)))
+
+    def _stream(self, seed, n=80, horizon=10):
+        rng = np.random.default_rng(seed)
+        stream, live = [], []
+        for wid in range(n):
+            for _ in range(rng.integers(0, 3)):
+                if live and rng.random() < 0.5:
+                    stream.append(("end", live.pop(0), -1))
+            stream.append(("arr", wid, int(rng.integers(0, mig.NUM_PROFILES))))
+            live.append(wid)
+        for wid in live:
+            stream.append(("end", wid, -1))
+        return stream
+
+    @pytest.mark.parametrize("policy", ["mfi", "bf-bi", "mfi-defrag"])
+    @pytest.mark.parametrize("fleet", ["homog", "mixed"])
+    def test_admission_matches_scheduler(self, policy, fleet):
+        spec = (
+            mig.ClusterSpec.homogeneous(mig.A100_80GB, 4)
+            if fleet == "homog"
+            else self.MIXED
+        )
+        stream = self._stream(seed=7)
+        ref, ref_cluster = _replay_stream_through_scheduler(policy, spec, stream)
+
+        ac = AdmissionController(policy=policy, cluster_spec=spec)
+        got = {}
+        for kind, wid, pid in stream:
+            if kind == "end":
+                if got.get(wid) is not None:
+                    ac.release(wid)
+                continue
+            p = ac.admit(wid, mig.PROFILE_NAMES[pid])
+            got[wid] = None if p is None else (p.gpu, p.anchor)
+        assert got == ref
+        # identical end-state occupancy (migrations included)
+        np.testing.assert_array_equal(
+            ac.cluster.occupancy_matrix(), ref_cluster.occupancy_matrix()
+        )
 
 
 @pytest.mark.slow
@@ -107,6 +285,61 @@ class TestServingEngine:
         rejected = sum(r.rejected for r in reqs)
         # 1 GPU serves one 7g at a time; waves release between admissions
         assert admitted >= 1 and admitted + rejected == 4
+
+    def test_zero_token_request_finishes_clean(self, setup):
+        """max_new_tokens == 0 must finish with output == [] and release
+        its slices — not linger half-served."""
+        cfg, params = setup
+        rng = np.random.default_rng(3)
+        reqs = [
+            Request(0, rng.integers(0, cfg.vocab, 16).astype(np.int32), 0),
+            Request(1, rng.integers(0, cfg.vocab, 16).astype(np.int32), 3),
+        ]
+        eng = ServingEngine(cfg, params, num_slots=2, max_len=32, num_gpus=1)
+        eng.run(reqs)
+        assert reqs[0].finished and reqs[0].output == []
+        assert reqs[1].finished and len(reqs[1].output) == 3
+        assert eng.admission.cluster.used_mem_slices == 0
+
+    def test_rejected_requests_get_empty_output(self, setup):
+        cfg, params = setup
+        rng = np.random.default_rng(4)
+        reqs = [
+            Request(i, rng.integers(0, cfg.vocab, 16).astype(np.int32), 2, "7g.80gb")
+            for i in range(3)
+        ]
+        # one wave slot, one GPU: later requests reject inside the wave fill
+        eng = ServingEngine(cfg, params, num_slots=2, max_len=32, num_gpus=1)
+        eng.run(reqs)
+        for r in reqs:
+            assert r.finished
+            assert isinstance(r.output, list)  # never None in terminal state
+            if r.rejected:
+                assert r.output == []
+
+    def test_patient_requests_queue_across_waves(self, setup):
+        """With patience, an over-capacity request waits for a release and
+        serves in a later wave instead of dropping."""
+        cfg, params = setup
+        rng = np.random.default_rng(5)
+        reqs = [
+            Request(
+                i,
+                rng.integers(0, cfg.vocab, 16).astype(np.int32),
+                2,
+                "7g.80gb",
+                patience=8,
+            )
+            for i in range(3)
+        ]
+        eng = ServingEngine(cfg, params, num_slots=3, max_len=32, num_gpus=1)
+        stats = eng.run(reqs)
+        # one GPU serves one 7g at a time, but patience lets all three land
+        assert all(r.admitted and r.finished for r in reqs)
+        assert all(len(r.output) == 2 for r in reqs)
+        assert stats["acceptance_rate"] == 1.0
+        assert stats["wait_p99"] > 0.0
+        assert eng.admission.cluster.used_mem_slices == 0
 
     def test_deterministic_outputs(self, setup):
         cfg, params = setup

@@ -72,3 +72,42 @@ class TestSimulator:
         out = run_many("ff", cfg, runs=2)
         for k in ("acceptance_rate", "allocated_workloads", "utilization", "frag_severity"):
             assert k in out
+
+
+class TestQueuedProtocol:
+    def test_steady_queued_runs_with_wait_metrics(self):
+        cfg = SimConfig(
+            num_gpus=8, offered_load=1.2, seed=5, protocol="steady-queued"
+        )
+        r = run_simulation(make_scheduler("mfi"), cfg)
+        assert 0.0 < r.acceptance_rate <= 1.0
+        assert r.wait_p50 is not None and r.wait_p99 is not None
+        assert 0.0 <= r.wait_p50 <= r.wait_p99 <= cfg.wait_patience
+        assert 0.0 < r.fairness <= 1.0
+        # conservation holds with the queue in the loop
+        arrived = r.arrivals_by_profile.sum()
+        assert r.allocated_workloads + r.rejects_by_profile.sum() == arrived
+
+    def test_queue_lifts_acceptance_under_load(self):
+        """Waiting instead of dropping can only help acceptance."""
+        accs = {}
+        for proto in ("steady", "steady-queued"):
+            cfg = SimConfig(
+                num_gpus=8, offered_load=1.3, seed=9, protocol=proto
+            )
+            accs[proto] = np.mean(
+                [
+                    run_simulation(make_scheduler("mfi"), cfg, seed=9 + k).acceptance_rate
+                    for k in range(3)
+                ]
+            )
+        assert accs["steady-queued"] >= accs["steady"]
+
+    def test_run_many_queued_keys(self):
+        cfg = SimConfig(
+            num_gpus=8, offered_load=1.1, seed=1, protocol="steady-queued"
+        )
+        out = run_many("mfi-queued", cfg, runs=2)
+        for k in ("wait_p50", "wait_p99", "fairness", "queue_admits"):
+            assert k in out
+        assert 0.0 < out["fairness"] <= 1.0
