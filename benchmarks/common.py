@@ -120,7 +120,7 @@ def resolve_model_dist(arg, spec=None):
     return out or None
 
 
-def run_engine(engine: str, scheduler, cfg, runs: int):
+def run_engine(engine: str, scheduler, cfg, runs: int, chunk_size=None):
     """Dispatch a Monte-Carlo sweep point to the chosen simulation engine.
 
     ``scheduler`` is any registered policy name (or ad-hoc ``PolicySpec``);
@@ -128,7 +128,10 @@ def run_engine(engine: str, scheduler, cfg, runs: int):
     batched-capable policy — the defrag variants (migrate stage in the
     scan) and the cumulative protocol included — on homogeneous or mixed
     ``cfg.cluster_spec``; engine-restricted specs fall back to the Python
-    reference loop so sweeps stay complete.
+    reference loop so sweeps stay complete.  ``chunk_size`` routes batched
+    points through the chunked streaming driver (bounded device memory,
+    bit-identical results; see ``repro.sim.batched.simulate_chunked``) and
+    is ignored on the Python fallback.
     """
     from repro.core.policy import resolve
     from repro.sim import run_many
@@ -138,5 +141,5 @@ def run_engine(engine: str, scheduler, cfg, runs: int):
         raise ValueError(f"unknown engine {engine!r}; options {ENGINES}")
     spec = resolve(scheduler)
     if engine == "batched" and spec.supports("batched"):
-        return run_batched(spec, cfg, runs=runs)
+        return run_batched(spec, cfg, runs=runs, chunk_size=chunk_size)
     return run_many(spec, cfg, runs=runs)

@@ -38,7 +38,8 @@ SCHEDULERS = PAPER_POLICIES
 
 def run(runs: int = 30, num_gpus: int = 100, loads=(0.5, 0.7, 0.85, 1.0),
         seed: int = 0, engine: str = "python", cluster: str | None = None,
-        policies: str | None = None, model_dist: str | None = None):
+        policies: str | None = None, model_dist: str | None = None,
+        chunk_size: int | None = None):
     spec, num_gpus = resolve_cluster(cluster, num_gpus)
     names = resolve_policies(policies)
     model_dists = resolve_model_dist(model_dist, spec)
@@ -51,7 +52,7 @@ def run(runs: int = 30, num_gpus: int = 100, loads=(0.5, 0.7, 0.85, 1.0),
                 offered_load=load, seed=seed, cluster_spec=spec,
                 model_distributions=model_dists,
             )
-            r = run_engine(engine, name, cfg, runs=runs)
+            r = run_engine(engine, name, cfg, runs=runs, chunk_size=chunk_size)
             results[(name, load)] = r
             rows.append(
                 f"fig4,{name},{load},{r['acceptance_rate']:.4f},"
@@ -62,10 +63,12 @@ def run(runs: int = 30, num_gpus: int = 100, loads=(0.5, 0.7, 0.85, 1.0),
 
 
 def main(runs: int = 30, engine: str = "python", cluster: str | None = None,
-         policies: str | None = None, model_dist: str | None = None):
+         policies: str | None = None, model_dist: str | None = None,
+         chunk_size: int | None = None):
     print("table,scheduler,load,acceptance,allocated,utilization,active_gpus,frag")
     rows, results = run(runs=runs, engine=engine, cluster=cluster,
-                        policies=policies, model_dist=model_dist)
+                        policies=policies, model_dist=model_dist,
+                        chunk_size=chunk_size)
     for row in rows:
         print(row)
     # headline check at heavy load
@@ -95,6 +98,12 @@ if __name__ == "__main__":
         help=f"per-model demand mix: named scenario {sorted(MODEL_DISTS)} or "
              "'model=dist,model=dist' (default: fleet-wide Table II)",
     )
+    ap.add_argument(
+        "--chunk-size", type=int, default=None,
+        help="batched engine only: stream the event scan in chunks of this "
+             "many events (bounded device memory, bit-identical results)",
+    )
     args = ap.parse_args()
     main(runs=args.runs, engine=args.engine, cluster=args.cluster,
-         policies=args.policies, model_dist=args.model_dist)
+         policies=args.policies, model_dist=args.model_dist,
+         chunk_size=args.chunk_size)

@@ -46,7 +46,8 @@ DEFAULT_LOADS = (0.9, 1.0, 1.1, 1.25, 1.4)
 def run(runs: int = 30, num_gpus: int = 100, loads=DEFAULT_LOADS,
         seed: int = 0, engine: str = "python", cluster: str | None = None,
         policies: str | None = None, wait_capacity: int = 8,
-        wait_patience: int = 16, num_tenants: int = 4):
+        wait_patience: int = 16, num_tenants: int = 4,
+        chunk_size: int | None = None):
     spec, num_gpus = resolve_cluster(cluster, num_gpus)
     names = resolve_policies(policies, default=QUEUED_POLICIES)
     for name in names:
@@ -65,10 +66,10 @@ def run(runs: int = 30, num_gpus: int = 100, loads=DEFAULT_LOADS,
                 protocol="steady-queued", wait_capacity=wait_capacity,
                 wait_patience=wait_patience, num_tenants=num_tenants,
             )
-            r = run_engine(engine, name, cfg, runs=runs)
+            r = run_engine(engine, name, cfg, runs=runs, chunk_size=chunk_size)
             drop = run_engine(
                 engine, name, dataclasses.replace(cfg, protocol="steady"),
-                runs=runs,
+                runs=runs, chunk_size=chunk_size,
             )
             r = dict(r, acceptance_drop=drop["acceptance_rate"])
             results[(name, load)] = r
@@ -83,7 +84,8 @@ def run(runs: int = 30, num_gpus: int = 100, loads=DEFAULT_LOADS,
 
 def main(runs: int = 30, engine: str = "python", cluster: str | None = None,
          policies: str | None = None, wait_capacity: int = 8,
-         wait_patience: int = 16, num_tenants: int = 4):
+         wait_patience: int = 16, num_tenants: int = 4,
+         chunk_size: int | None = None):
     print(
         "table,scheduler,load,acceptance_queued,acceptance_drop,"
         "wait_p50,wait_p99,fairness,queue_admits"
@@ -91,7 +93,7 @@ def main(runs: int = 30, engine: str = "python", cluster: str | None = None,
     rows, results = run(
         runs=runs, engine=engine, cluster=cluster, policies=policies,
         wait_capacity=wait_capacity, wait_patience=wait_patience,
-        num_tenants=num_tenants,
+        num_tenants=num_tenants, chunk_size=chunk_size,
     )
     for row in rows:
         print(row)
@@ -130,7 +132,12 @@ if __name__ == "__main__":
                     help="max slots a request may wait before final reject")
     ap.add_argument("--num-tenants", type=int, default=4,
                     help="tenant ids sampled per arrival (fairness metric)")
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="batched engine only: stream the event scan in "
+                         "chunks of this many events (bounded device memory, "
+                         "bit-identical results)")
     args = ap.parse_args()
     main(runs=args.runs, engine=args.engine, cluster=args.cluster,
          policies=args.policies, wait_capacity=args.wait_capacity,
-         wait_patience=args.wait_patience, num_tenants=args.num_tenants)
+         wait_patience=args.wait_patience, num_tenants=args.num_tenants,
+         chunk_size=args.chunk_size)

@@ -55,6 +55,8 @@ def simulate(
     engine: str = "python",
     runs: int = 100,
     use_kernel: Optional[bool] = None,
+    chunk_size: Optional[int] = None,
+    stream: Optional[bool] = None,
     **cfg_kwargs,
 ) -> Dict[str, float]:
     """Monte-Carlo evaluate one policy on one configuration point.
@@ -78,6 +80,16 @@ def simulate(
         kernel with per-model dispatch on any fleet, plus the occupancy
         ``fragscore`` rescore on homogeneous specs.  Specs with
         ``kernel_lowering=False`` opt out (requesting it raises).
+      chunk_size: batched engine only — run the event scan through the
+        chunked streaming driver
+        (:func:`repro.sim.batched.simulate_chunked`): device memory is
+        bounded by one replica carry plus two staged event chunks instead
+        of the full event tensor, with bit-identical results for any
+        chunk size.  ``None`` (default) keeps the single-chunk monolithic
+        scan.
+      stream: chunked runs only — ``True`` (default) fetches each chunk's
+        decision trace back to host as it completes so traces never
+        accumulate on device; ``False`` keeps them on device.
 
     Returns the same aggregate dict as :func:`repro.sim.run_many` /
     :func:`repro.sim.batched.run_batched`.
@@ -91,5 +103,12 @@ def simulate(
     elif cfg_kwargs:
         raise ValueError("pass either cfg or SimConfig kwargs, not both")
     if engine == "batched":
-        return run_batched(spec, cfg, runs=runs, use_kernel=use_kernel)
+        return run_batched(
+            spec, cfg, runs=runs, use_kernel=use_kernel,
+            chunk_size=chunk_size, stream=stream,
+        )
+    if chunk_size is not None or stream is not None:
+        raise ValueError(
+            "chunk_size/stream are batched-engine knobs; pass engine='batched'"
+        )
     return run_many(spec, cfg, runs=runs)

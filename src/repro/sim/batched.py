@@ -100,6 +100,22 @@ Replica sharding
     bitwise identical to the single-device run (no cross-replica
     arithmetic happens on device).  Single-device setups are unchanged.
 
+Chunked streaming driver (``chunk_size``)
+    By default the whole ``(E_max, R)`` event stream ships to device and
+    the whole trace comes back — one program, fastest when it fits.
+    :func:`simulate_chunked` (``run_batched(..., chunk_size=c)``) instead
+    streams the scan: the carry stays device-resident and is **donated**
+    into each chunk (:func:`_scan_chunk`), the host ``device_put``\\ s
+    chunk ``k+1`` while chunk ``k`` computes (double-buffered), and each
+    chunk's trace is fetched back and concatenated host-side — device
+    memory is bounded by ``c``, not ``E_max``.  The carry holds every
+    cross-event datum, so chunking is bit-for-bit the monolithic scan at
+    any chunk size (golden hashes enforced in
+    ``tests/test_chunked_stream.py``), and the carry checkpoints/restores
+    through :mod:`repro.checkpoint.ckpt` for bit-exact resume
+    (:func:`save_stream_checkpoint` / :func:`load_stream_checkpoint` /
+    :func:`init_carry`).
+
 Policies are **compiled from declarative**
 :class:`repro.core.policy.PolicySpec` **registry entries** — the same specs
 the host engine interprets (:mod:`repro.core.schedulers`), so the two
@@ -142,6 +158,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Dict, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
@@ -1669,21 +1686,11 @@ class EngineCore:
         return st, trace
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "policy", "metric", "num_gpus", "ring_rows", "ring_cols",
-        "use_kernel", "kernel_spec", "protocol", "wait_slots", "wait_patience",
-    ),
-)
-def _simulate(
-    events: EventStream,  # each field (E_max, R) — events are the scanned axis
+def _build_core(
     *,
-    policy: PolicyLike,  # registered name or (hashable, static) PolicySpec
+    policy: PolicyLike,
     metric: str,
     num_gpus: int,
-    ring_rows: int,
-    ring_cols: int,
     use_kernel: bool,
     kernel_spec: Optional[mig.ClusterSpec] = None,
     protocol: Union[str, Protocol] = "steady",
@@ -1691,8 +1698,15 @@ def _simulate(
     wait_patience: int = 0,
     midx: Optional[jax.Array] = None,
     tables: Optional[SpecTables] = None,
-) -> Tuple[ReplicaState, EventTrace]:
-    runs = events.pid.shape[1]
+) -> Tuple[EngineCore, SpecTables, jax.Array]:
+    """Validate one engine configuration and build its staged core.
+
+    The single construction path shared by the monolithic :func:`_simulate`,
+    the chunked :func:`_scan_chunk` and :func:`init_carry` — every entry
+    point applies the same policy/protocol validation and compiles the same
+    stages, so the chunked and monolithic drivers cannot drift.  Returns
+    ``(core, tables, midx)`` with the homogeneous defaults filled in.
+    """
     pspec = resolve(policy, engine="batched")
     proto = resolve_protocol(protocol)
     if proto.queued:
@@ -1730,20 +1744,70 @@ def _simulate(
         midx=midx, vg=vg, frag_fn=frag_fn, delta_fn=delta_fn,
         wait_patience=wait_patience,
     )
-    step = jax.vmap(core.step, in_axes=(0, 0))
-    init = jax.tree.map(
+    return core, tables, midx
+
+
+def _broadcast_init(
+    core: EngineCore, runs: int, ring_rows: int, ring_cols: int, wait_slots: int
+) -> ReplicaState:
+    """The ``(runs,)``-vmapped initial carry for ``core``'s configuration."""
+    return jax.tree.map(
         lambda x: jnp.broadcast_to(x, (runs,) + x.shape),
         _init_state(
-            tables, midx, ring_rows, ring_cols,
-            track_occ=frag_fn is not None, track_alloc=pspec.defrag,
-            wait_slots=wait_slots if proto.queued else 0,
+            core.tables, core.midx, ring_rows, ring_cols,
+            track_occ=core.frag_fn is not None, track_alloc=core.spec.defrag,
+            wait_slots=wait_slots if core.protocol.queued else 0,
         ),
     )
-    # sample/measuring are host-side reduction flags — never shipped to the scan
+
+
+def _scan_xs(events: EventStream, proto: Protocol):
+    """The scanned input tuple: every device-shipped stream field.
+
+    ``sample``/``measuring`` are host-side reduction flags — never shipped
+    to the scan.
+    """
     xs = (events.pid, events.exp_row, events.exp_col, events.drain_row, events.new_slot)
     if proto.queued:  # the wait stage's clock + per-arrival queue attributes
         xs = xs + (events.slot, events.end, events.prio, events.tenant, events.wlive)
-    return jax.lax.scan(lambda st, x: step(st, x), init, xs)
+    return xs
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "policy", "metric", "num_gpus", "ring_rows", "ring_cols",
+        "use_kernel", "kernel_spec", "protocol", "wait_slots", "wait_patience",
+    ),
+)
+def _simulate(
+    events: EventStream,  # each field (E_max, R) — events are the scanned axis
+    *,
+    policy: PolicyLike,  # registered name or (hashable, static) PolicySpec
+    metric: str,
+    num_gpus: int,
+    ring_rows: int,
+    ring_cols: int,
+    use_kernel: bool,
+    kernel_spec: Optional[mig.ClusterSpec] = None,
+    protocol: Union[str, Protocol] = "steady",
+    wait_slots: int = 0,
+    wait_patience: int = 0,
+    midx: Optional[jax.Array] = None,
+    tables: Optional[SpecTables] = None,
+) -> Tuple[ReplicaState, EventTrace]:
+    runs = events.pid.shape[1]
+    core, tables, midx = _build_core(
+        policy=policy, metric=metric, num_gpus=num_gpus,
+        use_kernel=use_kernel, kernel_spec=kernel_spec, protocol=protocol,
+        wait_slots=wait_slots, wait_patience=wait_patience,
+        midx=midx, tables=tables,
+    )
+    step = jax.vmap(core.step, in_axes=(0, 0))
+    init = _broadcast_init(core, runs, ring_rows, ring_cols, wait_slots)
+    return jax.lax.scan(
+        lambda st, x: step(st, x), init, _scan_xs(events, core.protocol)
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -1919,6 +1983,35 @@ def presample_cumulative(
     return events, meta, ring_k + 2, ring_cols
 
 
+def _replica_sharding(runs: int, shard: Optional[bool] = None):
+    """The replica-axis ``NamedSharding`` for ``(E, R)`` inputs, or ``None``.
+
+    ``shard=None`` (auto) shards when more than one device is visible and
+    ``runs`` divides evenly; ``True`` requires it (raises otherwise);
+    ``False`` disables.  Factored out of :func:`shard_events` so the
+    chunked driver can place every staged chunk on the same mesh.
+    """
+    if shard is False:
+        return None
+    devices = jax.devices()
+    if len(devices) <= 1:
+        if shard:
+            raise ValueError(
+                "replica sharding requested but only one device is visible"
+            )
+        return None
+    if runs % len(devices) != 0:
+        if shard:
+            raise ValueError(
+                f"runs={runs} does not divide across {len(devices)} devices"
+            )
+        return None
+    mesh = jax.make_mesh((len(devices),), ("replicas",))
+    return jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec(None, "replicas")
+    )
+
+
 def shard_events(events, runs: int, shard: Optional[bool] = None):
     """Split the replica axis of a device event stream across devices.
 
@@ -1928,27 +2021,311 @@ def shard_events(events, runs: int, shard: Optional[bool] = None):
     R/D replicas of work per device.  ``shard=None`` (auto) shards when
     more than one device is visible and ``runs`` divides evenly; ``True``
     requires it (raises otherwise); ``False`` disables.
+
+    Leaves already committed to an equivalent sharding are returned as-is
+    (no transfer), so repeated ``run_batched`` calls over the same placed
+    stream never re-copy the full event pytree host→device.
     """
-    if shard is False:
+    sharding = _replica_sharding(runs, shard)
+    if sharding is None:
         return events
-    devices = jax.devices()
-    if len(devices) <= 1:
-        if shard:
-            raise ValueError(
-                "replica sharding requested but only one device is visible"
-            )
-        return events
-    if runs % len(devices) != 0:
-        if shard:
-            raise ValueError(
-                f"runs={runs} does not divide across {len(devices)} devices"
-            )
-        return events
-    mesh = jax.make_mesh((len(devices),), ("replicas",))
-    sharding = jax.sharding.NamedSharding(
-        mesh, jax.sharding.PartitionSpec(None, "replicas")
+
+    def put(x):
+        if (
+            isinstance(x, jax.Array)
+            and getattr(x, "committed", False)
+            and x.sharding.is_equivalent_to(sharding, x.ndim)
+        ):
+            return x  # already placed — skip the device_put
+        return jax.device_put(x, sharding)
+
+    return jax.tree.map(put, events)
+
+
+# ---------------------------------------------------------------------------
+# Chunked streaming driver — double-buffered host→device feed, donated carry
+# ---------------------------------------------------------------------------
+
+
+def init_carry(
+    runs: int,
+    *,
+    policy: PolicyLike,
+    metric: str,
+    num_gpus: int,
+    ring_rows: int,
+    ring_cols: int,
+    use_kernel: bool = False,
+    kernel_spec: Optional[mig.ClusterSpec] = None,
+    protocol: Union[str, Protocol] = "steady",
+    wait_slots: int = 0,
+    wait_patience: int = 0,
+    midx: Optional[jax.Array] = None,
+    tables: Optional[SpecTables] = None,
+) -> ReplicaState:
+    """The initial ``(runs,)``-vmapped chunk carry for one configuration.
+
+    This is the *same* initial state :func:`_simulate` builds internally —
+    chunking the scan at any boundary is bit-exact because the carry holds
+    every cross-event datum (occupancy planes, expiry/wait rings, cursor,
+    event counter).  Also the checkpoint *template*: build it from the
+    identical static configuration to restore a saved carry via
+    :func:`load_stream_checkpoint`.
+
+    Delegates to a jitted builder so repeated chunked runs of one
+    configuration pay the table/broadcast construction once at compile
+    time; every call returns fresh buffers (safe to donate into the
+    first chunk).
+    """
+    return _init_carry_jit(
+        midx, tables, runs=runs, ring_rows=ring_rows, ring_cols=ring_cols,
+        policy=policy, metric=metric, num_gpus=num_gpus,
+        use_kernel=use_kernel, kernel_spec=kernel_spec, protocol=protocol,
+        wait_slots=wait_slots, wait_patience=wait_patience,
     )
-    return jax.tree.map(lambda x: jax.device_put(x, sharding), events)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "runs", "ring_rows", "ring_cols", "policy", "metric", "num_gpus",
+        "use_kernel", "kernel_spec", "protocol", "wait_slots",
+        "wait_patience",
+    ),
+)
+def _init_carry_jit(
+    midx, tables, *, runs, ring_rows, ring_cols, policy, metric, num_gpus,
+    use_kernel, kernel_spec, protocol, wait_slots, wait_patience,
+) -> ReplicaState:
+    core, _, _ = _build_core(
+        policy=policy, metric=metric, num_gpus=num_gpus,
+        use_kernel=use_kernel, kernel_spec=kernel_spec, protocol=protocol,
+        wait_slots=wait_slots, wait_patience=wait_patience,
+        midx=midx, tables=tables,
+    )
+    return _broadcast_init(core, runs, ring_rows, ring_cols, wait_slots)
+
+
+@functools.partial(
+    jax.jit,
+    donate_argnums=(0,),
+    static_argnames=(
+        "policy", "metric", "num_gpus", "use_kernel", "kernel_spec",
+        "protocol", "wait_slots", "wait_patience",
+    ),
+)
+def _scan_chunk(
+    state: ReplicaState,  # donated: each chunk-step reuses its buffers in place
+    events: EventStream,  # one chunk, each field (chunk, R)
+    *,
+    policy: PolicyLike,
+    metric: str,
+    num_gpus: int,
+    use_kernel: bool,
+    kernel_spec: Optional[mig.ClusterSpec] = None,
+    protocol: Union[str, Protocol] = "steady",
+    wait_slots: int = 0,
+    wait_patience: int = 0,
+    midx: Optional[jax.Array] = None,
+    tables: Optional[SpecTables] = None,
+) -> Tuple[ReplicaState, EventTrace]:
+    """Scan one event chunk from an explicit carry (the chunked step).
+
+    Identical scan body to :func:`_simulate` (same :func:`_build_core`
+    path, same vmapped :meth:`EngineCore.step`), with the carry passed in
+    instead of built internally and its input buffers **donated** — XLA
+    writes the updated carry back into the chunk's input storage, so the
+    resident state footprint stays one carry regardless of chunk count.
+    """
+    core, _, _ = _build_core(
+        policy=policy, metric=metric, num_gpus=num_gpus,
+        use_kernel=use_kernel, kernel_spec=kernel_spec, protocol=protocol,
+        wait_slots=wait_slots, wait_patience=wait_patience,
+        midx=midx, tables=tables,
+    )
+    step = jax.vmap(core.step, in_axes=(0, 0))
+    return jax.lax.scan(
+        lambda st, x: step(st, x), state, _scan_xs(events, core.protocol)
+    )
+
+
+def save_stream_checkpoint(path, state: ReplicaState, events_done: int,
+                           metadata: Optional[dict] = None) -> None:
+    """Persist a chunked-scan carry (flat npz via :mod:`repro.checkpoint`).
+
+    ``events_done`` — how many events of the stream the carry has consumed —
+    is stored as the checkpoint step; resume by presampling the same
+    ``(cfg, runs, seed)`` stream and calling :func:`simulate_chunked` with
+    ``carry=state, start=events_done``.
+    """
+    from repro.checkpoint import ckpt
+
+    host = jax.device_get(state)  # copy out before the next chunk donates it
+    ckpt.save_checkpoint(
+        path, host, step=int(events_done),
+        metadata={"kind": "replica-carry", **(metadata or {})},
+    )
+
+
+def load_stream_checkpoint(path, template: ReplicaState) -> Tuple[ReplicaState, int]:
+    """Restore a carry saved by :func:`save_stream_checkpoint`.
+
+    ``template`` must come from :func:`init_carry` with the *identical*
+    static configuration (the flat-npz restore validates structure and
+    shapes, so a carry from a different policy/protocol/ring geometry
+    fails loudly).  Returns ``(state, events_done)``.
+    """
+    from repro.checkpoint import ckpt
+
+    return ckpt.load_checkpoint(path, template)
+
+
+def _concat_traces(traces, concat):
+    """Concatenate per-chunk :class:`EventTrace` pytrees along the event
+    axis; fields compiled out (``None``) stay ``None``."""
+    if len(traces) == 1:
+        return traces[0]
+    return EventTrace(*[
+        None if getattr(traces[0], name) is None
+        else concat([getattr(t, name) for t in traces], axis=0)
+        for name in EventTrace._fields
+    ])
+
+
+def simulate_chunked(
+    events: EventStream,  # host-resident stream, each field (E_max, R)
+    *,
+    chunk_size: int,
+    policy: PolicyLike,
+    metric: str,
+    num_gpus: int,
+    ring_rows: int,
+    ring_cols: int,
+    use_kernel: bool = False,
+    kernel_spec: Optional[mig.ClusterSpec] = None,
+    protocol: Union[str, Protocol] = "steady",
+    wait_slots: int = 0,
+    wait_patience: int = 0,
+    midx: Optional[jax.Array] = None,
+    tables: Optional[SpecTables] = None,
+    stream: bool = True,
+    carry: Optional[ReplicaState] = None,
+    start: int = 0,
+    shard: Optional[bool] = None,
+    checkpoint_path=None,
+    checkpoint_every: int = 0,
+    stats: Optional[dict] = None,
+) -> Tuple[ReplicaState, EventTrace]:
+    """Drive the event scan in chunks with a double-buffered device feed.
+
+    Bit-for-bit equal to :func:`_simulate` on the same stream for *any*
+    ``chunk_size`` (the carry holds every cross-event datum, and both paths
+    compile the same :meth:`EngineCore.step`), but device memory holds only
+    one carry plus two staged chunks instead of the full ``(E_max, R)``
+    event tensor and ``(E_max, R)`` trace:
+
+    * the carry lives on device across chunks and is **donated** into each
+      :func:`_scan_chunk` call (in-place buffer reuse);
+    * chunk ``k+1`` is ``device_put`` while chunk ``k``'s compute is in
+      flight (dispatch is asynchronous), so host→device transfer overlaps
+      compute — the overlapped fraction is reported via ``stats``;
+    * with ``stream=True`` (default) each chunk's decision trace is fetched
+      back and concatenated host-side, so full traces never accumulate on
+      device; ``stream=False`` keeps them on device (explicit opt-in).
+
+    ``carry``/``start`` resume a run mid-stream (see
+    :func:`load_stream_checkpoint`); a passed-in carry is *consumed* (its
+    buffers are donated to the first chunk).  ``checkpoint_path`` +
+    ``checkpoint_every`` (in chunks) persist the carry periodically through
+    :mod:`repro.checkpoint.ckpt`.  ``shard`` places every staged chunk on
+    the replica-axis mesh (see :func:`_replica_sharding`).  ``stats``, when
+    given, is filled with chunk/transfer telemetry, including
+    ``h2d_overlap_frac`` — the fraction of host→device bytes staged while a
+    chunk compute was in flight (all puts except the first prefetch).
+    """
+    if chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
+    e_max, runs = events.pid.shape
+    if not 0 <= start < e_max:
+        raise ValueError(f"start={start} outside the event stream [0, {e_max})")
+    sharding = _replica_sharding(runs, shard)
+    statics = dict(
+        policy=policy, metric=metric, num_gpus=num_gpus,
+        use_kernel=use_kernel, kernel_spec=kernel_spec, protocol=protocol,
+        wait_slots=wait_slots, wait_patience=wait_patience,
+        midx=midx, tables=tables,
+    )
+    state = carry if carry is not None else init_carry(
+        runs, ring_rows=ring_rows, ring_cols=ring_cols, **statics
+    )
+    if state.ring_gpu.shape[-2:] != (ring_rows, ring_cols):
+        raise ValueError(
+            f"carry ring geometry {state.ring_gpu.shape[-2:]} does not match "
+            f"this stream's ({ring_rows}, {ring_cols}) — resumed with a carry "
+            "from a different presample?"
+        )
+    host = jax.tree.map(np.asarray, events)  # host slicing source
+    bounds = list(range(start, e_max, chunk_size)) + [e_max]
+    n_chunks = len(bounds) - 1
+    h2d_s = h2d_overlap_s = d2h_s = 0.0
+    h2d_bytes = h2d_overlap_bytes = 0
+
+    def put(lo, hi):
+        ch = jax.tree.map(lambda x: x[lo:hi], host)
+        nbytes = sum(x.nbytes for x in jax.tree.leaves(ch))
+        t0 = time.perf_counter()
+        # one batched transfer for the whole chunk pytree (a single
+        # Sharding broadcasts across leaves), not one dispatch per field
+        dev = (
+            jax.device_put(ch, sharding) if sharding is not None
+            else jax.device_put(ch)
+        )
+        return dev, time.perf_counter() - t0, nbytes
+
+    buf, dt, nb = put(bounds[0], bounds[1])  # prefetch chunk 0 (not overlapped)
+    h2d_s += dt
+    h2d_bytes += nb
+    state, tr = _scan_chunk(state, buf, **statics)  # async dispatch
+    traces = []
+    for k in range(n_chunks):
+        # chunk k's scan is already in flight; ``state`` is its output carry
+        if checkpoint_path and checkpoint_every and (k + 1) % checkpoint_every == 0:
+            # copy the post-chunk-k carry out *before* the next dispatch
+            # donates its buffers (a deliberate pipeline bubble)
+            save_stream_checkpoint(checkpoint_path, state, bounds[k + 1])
+        if k + 1 < n_chunks:
+            # stage chunk k+1 and dispatch its scan before blocking on
+            # chunk k's trace, so the d2h fetch below overlaps compute
+            buf, dt, nb = put(bounds[k + 1], bounds[k + 2])
+            h2d_s += dt
+            h2d_bytes += nb
+            h2d_overlap_s += dt
+            h2d_overlap_bytes += nb
+            state, tr_next = _scan_chunk(state, buf, **statics)
+        if stream:
+            t0 = time.perf_counter()
+            traces.append(jax.device_get(tr))  # joins chunk k's compute
+            d2h_s += time.perf_counter() - t0
+        else:
+            traces.append(tr)
+        if k + 1 < n_chunks:
+            tr = tr_next
+    if stats is not None:
+        stats.update(
+            chunks=n_chunks,
+            chunk_size=chunk_size,
+            events=e_max - start,
+            h2d_seconds=h2d_s,
+            h2d_overlapped_seconds=h2d_overlap_s,
+            h2d_bytes=h2d_bytes,
+            h2d_overlapped_bytes=h2d_overlap_bytes,
+            h2d_overlap_frac=(
+                h2d_overlap_bytes / h2d_bytes if h2d_bytes else 0.0
+            ),
+            d2h_seconds=d2h_s,
+        )
+    concat = np.concatenate if stream else jnp.concatenate
+    return state, _concat_traces(traces, concat)
 
 
 def run_batched(
@@ -1957,6 +2334,9 @@ def run_batched(
     runs: int = 64,
     use_kernel: bool | None = None,
     shard: Optional[bool] = None,
+    chunk_size: Optional[int] = None,
+    stream: Optional[bool] = None,
+    stats: Optional[dict] = None,
 ) -> Dict[str, float]:
     """Average ``runs`` replicas in one device program.
 
@@ -1974,6 +2354,15 @@ def run_batched(
     ``PolicySpec.kernel_lowering=False`` (requesting ``use_kernel=True``
     for such a spec raises).  ``shard`` splits the replica axis across
     visible devices (see :func:`shard_events`; default: auto).
+
+    ``chunk_size`` routes the run through the chunked streaming driver
+    (:func:`simulate_chunked`): device memory holds one carry plus two
+    staged event chunks instead of the full ``(E_max, R)`` tensors —
+    bit-identical results for any chunk size.  ``stream`` (chunked only;
+    default ``True``) fetches each chunk's trace back as it completes so
+    traces never accumulate on device; ``stats`` (chunked only) receives
+    transfer/overlap telemetry.  ``chunk_size=None`` (default) keeps
+    today's single-chunk monolithic scan.
     """
     policy = resolve(policy, engine="batched")
     proto = resolve_protocol(cfg.protocol)
@@ -1985,6 +2374,10 @@ def run_batched(
             f"policy {policy.name!r} opts out of Pallas kernel lowering "
             "(PolicySpec.kernel_lowering=False); run with use_kernel=False"
         )
+    if chunk_size is None and (stream is not None or stats is not None):
+        raise ValueError(
+            "stream/stats are chunked-driver knobs; pass chunk_size as well"
+        )
 
     if proto.name == "cumulative":
         events, _, ring_rows, ring_cols = presample_cumulative(cfg, runs)
@@ -1992,24 +2385,33 @@ def run_batched(
         events, _, ring_rows, ring_cols = presample_arrivals(
             cfg, runs, queued=proto.queued
         )
-    events_dev = shard_events(jax.tree.map(jnp.asarray, events), runs, shard)
-    _, trace = jax.device_get(
-        _simulate(
-            events_dev,
-            policy=policy,
-            metric=cfg.metric,
-            num_gpus=cfg.num_gpus,
-            ring_rows=ring_rows,
-            ring_cols=ring_cols,
-            use_kernel=use_kernel,
-            kernel_spec=spec if use_kernel else None,
-            protocol=proto,
-            wait_slots=cfg.wait_capacity if proto.queued else 0,
-            wait_patience=cfg.wait_patience if proto.queued else 0,
-            midx=jnp.asarray(spec.model_index),
-            tables=spec_tables(spec),
-        )
+    common = dict(
+        policy=policy,
+        metric=cfg.metric,
+        num_gpus=cfg.num_gpus,
+        ring_rows=ring_rows,
+        ring_cols=ring_cols,
+        use_kernel=use_kernel,
+        kernel_spec=spec if use_kernel else None,
+        protocol=proto,
+        wait_slots=cfg.wait_capacity if proto.queued else 0,
+        wait_patience=cfg.wait_patience if proto.queued else 0,
+        midx=jnp.asarray(spec.model_index),
+        tables=spec_tables(spec),
     )
+    if chunk_size is not None:
+        _, trace = simulate_chunked(
+            events,
+            chunk_size=chunk_size,
+            stream=True if stream is None else stream,
+            shard=shard,
+            stats=stats,
+            **common,
+        )
+        trace = jax.device_get(trace)  # no-op for already-streamed traces
+    else:
+        events_dev = shard_events(jax.tree.map(jnp.asarray, events), runs, shard)
+        _, trace = jax.device_get(_simulate(events_dev, **common))
     if proto.name == "cumulative":
         return _aggregate_cumulative(events, trace, spec, runs, cfg)
     if proto.queued:
