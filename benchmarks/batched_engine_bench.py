@@ -152,6 +152,41 @@ def bench_queued(cfg: SimConfig, runs: int):
     }
 
 
+def bench_fused(cfg: SimConfig, runs: int, policies=("mfi", "mfi-defrag")):
+    """Warm throughput of the fused Pallas select/migrate lowering vs jnp.
+
+    Interleaved best-of-3 per policy (same-machine comparison, so the
+    ``speedup_vs_jnp`` ratio is machine-normalized and the baseline gate
+    can compare it across runners).  The fused kernels are a pure lowering
+    change, so the acceptance rate must match the jnp path bit-for-bit —
+    ``acceptance_identical`` is a hard gate under ``--baseline``.  On CPU
+    the kernels run in interpret mode (traced to XLA inside jit); on TPU
+    they compile to real Mosaic launches.
+    """
+    out = {}
+    for policy in policies:
+        run_batched(policy, cfg, runs=runs, use_kernel=True)  # compile
+        run_batched(policy, cfg, runs=runs, use_kernel=False)
+        dt_k = dt_j = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            rj = run_batched(policy, cfg, runs=runs, use_kernel=False)
+            dt_j = min(dt_j, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            rk = run_batched(policy, cfg, runs=runs, use_kernel=True)
+            dt_k = min(dt_k, time.perf_counter() - t0)
+        out[policy] = {
+            "warm_rps": runs / dt_k,
+            "jnp_warm_rps": runs / dt_j,
+            "speedup_vs_jnp": dt_j / dt_k,
+            "acceptance_rate": float(rk["acceptance_rate"]),
+            "acceptance_identical": (
+                float(rk["acceptance_rate"]) == float(rj["acceptance_rate"])
+            ),
+        }
+    return out
+
+
 def bench_chunked(cfg: SimConfig, runs: int, chunk_size: int | None = None):
     """Warm throughput of the chunked streaming driver on the smoke point.
 
@@ -261,6 +296,13 @@ def profile_stages(cfg: SimConfig, runs: int, policies=("mfi", "mfi-defrag")):
     does per stage.  The defrag spec's ``migrate`` row is the one the
     factored search optimizes; non-defrag specs have no migrate stage.
 
+    The select and migrate stages are attributed per lowering:
+    ``select_jnp_us`` / ``migrate_jnp_us`` time the pure-jnp masked
+    refinement, ``select_kernel_us`` / ``migrate_kernel_us`` the fused
+    Pallas kernels (in-kernel lexicographic argmin; interpret mode when
+    the benchmark runs on CPU) on the *same* representative state — the
+    side-by-side view of what the fusion buys per event.
+
     The queued protocol's extra stages are attributed too: an
     ``mfi@steady-queued`` entry times ``wait`` (wait-ring prune +
     head-of-line admission attempt) and ``park`` (rejected-arrival
@@ -312,13 +354,28 @@ def profile_stages(cfg: SimConfig, runs: int, policies=("mfi", "mfi-defrag")):
         select = jax.jit(jax.vmap(core._stage_select))
         stages = {
             "expire_us": timeit(expire, state, zeros, new_slot),
-            "select_us": timeit(select, state, pid, valid),
+            "select_jnp_us": timeit(select, state, pid, valid),
         }
+        core_k = None
+        if pspec.fused_argmin:  # fused Pallas lowering on the same state
+            core_k = batched._build_core(
+                policy=policy, metric=cfg.metric, num_gpus=cfg.num_gpus,
+                use_kernel=True, kernel_spec=spec, midx=midx, tables=tables,
+            )[0]
+            select_k = jax.jit(jax.vmap(core_k._stage_select))
+            stages["select_kernel_us"] = timeit(select_k, state, pid, valid)
         gpu, aidx, ok = select(state, pid, valid)
         mig_res = None
         if pspec.defrag:
             migrate = jax.jit(jax.vmap(core._stage_migrate))
-            stages["migrate_us"] = timeit(migrate, state, pid, valid, gpu, aidx, ok)
+            stages["migrate_jnp_us"] = timeit(
+                migrate, state, pid, valid, gpu, aidx, ok
+            )
+            if core_k is not None:
+                migrate_k = jax.jit(jax.vmap(core_k._stage_migrate))
+                stages["migrate_kernel_us"] = timeit(
+                    migrate_k, state, pid, valid, gpu, aidx, ok
+                )
             state, gpu, aidx, ok, mig_res = migrate(state, pid, valid, gpu, aidx, ok)
         commit = jax.jit(
             jax.vmap(
@@ -445,6 +502,29 @@ def compare_baseline(payload: dict, baseline_path: str, gate: float = REGRESSION
             "pass": acc_match and thr_ok,
         }
         if not (acc_match and thr_ok):
+            ok = False
+    fb, fc = base.get("fused"), payload.get("fused")
+    if fc is not None:
+        # the fused lowering is bit-exact by construction: acceptance drift
+        # is a correctness failure, and the machine-normalized
+        # speedup_vs_jnp ratio must not regress past the gate
+        entries, fok = {}, True
+        for name, p in sorted(fc.items()):
+            e = {
+                "speedup_vs_jnp": p["speedup_vs_jnp"],
+                "acceptance_identical": p["acceptance_identical"],
+            }
+            if not p["acceptance_identical"]:
+                fok = False
+            b = (fb or {}).get(name)
+            if b:
+                e["baseline_speedup_vs_jnp"] = b["speedup_vs_jnp"]
+                e["ratio"] = p["speedup_vs_jnp"] / b["speedup_vs_jnp"]
+                if e["ratio"] < 1.0 - gate:
+                    fok = False
+            entries[name] = e
+        vs["fused"] = {"gate": gate, "entries": entries, "pass": fok}
+        if not fok:
             ok = False
     qb, qc = base.get("queued"), payload.get("queued")
     if qb and qc:
@@ -585,8 +665,19 @@ def main(runs: int = 64, num_gpus: int = 100, load: float = 0.85,
             f"h2d_overlap_frac={chunked['h2d_overlap_frac']:.2f}, "
             f"interleaved monolithic {chunked['monolithic_warm_rps']:.2f} rps"
         )
+        fused = bench_fused(cfg, runs)
+        for name, p in sorted(fused.items()):
+            print(
+                f"sweep,batched-fused,{name},{num_gpus},{runs},"
+                f"{p['warm_rps']:.2f},{p['acceptance_rate']:.4f}"
+            )
+            print(
+                f"# fused {name}: {p['speedup_vs_jnp']:.2f}x vs jnp "
+                f"({p['jnp_warm_rps']:.2f} rps), acceptance "
+                f"{'identical' if p['acceptance_identical'] else 'DRIFTED'}"
+            )
     else:
-        queued = chunked = None
+        queued = chunked = fused = None
     payload = dict(
         r, policy=policy, num_gpus=num_gpus, runs=runs, load=load, smoke=smoke,
         compile_cache=compile_cache,
@@ -599,6 +690,8 @@ def main(runs: int = 64, num_gpus: int = 100, load: float = 0.85,
         payload["queued"] = queued
     if chunked is not None:
         payload["chunked"] = chunked
+    if fused is not None:
+        payload["fused"] = fused
     if profile:
         stage_profile = profile_stages(cfg, runs)
         payload["stage_profile"] = stage_profile
@@ -633,6 +726,22 @@ def main(runs: int = 64, num_gpus: int = 100, load: float = 0.85,
             print(
                 f"# vs baseline {name}: {p['current_rps']:.2f} rps / "
                 f"{p['baseline_rps']:.2f} rps = {p['ratio']:.2f}x"
+            )
+        fz = vs.get("fused")
+        if fz is not None:
+            for name, e in sorted(fz["entries"].items()):
+                ratio = (
+                    f", {e['ratio']:.2f}x of baseline" if "ratio" in e else ""
+                )
+                print(
+                    f"# vs baseline fused {name}: "
+                    f"{e['speedup_vs_jnp']:.2f}x vs jnp{ratio}, acceptance "
+                    f"{'identical' if e['acceptance_identical'] else 'DRIFTED'}"
+                )
+            print(
+                f"# fused gate -> {'PASS' if fz['pass'] else 'FAIL'} "
+                f"(acceptance identical + >= {1 - fz['gate']:.2f} of "
+                "baseline speedup_vs_jnp)"
             )
         q = vs.get("queued")
         if q is not None:

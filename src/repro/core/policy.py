@@ -107,6 +107,19 @@ DEFAULT_QUEUE_ORDER: Tuple[str, ...] = ("priority", "-wait-age")
 #: feasibility filters (currently the single built-in rule)
 FEASIBILITY_FILTERS: Tuple[str, ...] = ("window-free",)
 
+#: legal ``PolicySpec.kernel_lowering`` declarations (see the field docs):
+#: ``True`` = everything available, ``"fused"`` = require the fused
+#: argmin kernels, ``"delta"`` = ΔF table only, ``False`` = no kernels.
+KERNEL_LOWERINGS: Tuple[object, ...] = (True, False, "delta", "fused")
+
+#: key bases the fused select/migrate Pallas kernels can pack into their
+#: in-kernel lexicographic encoding.  ``rr-distance`` (stateful cursor) and
+#: ``model-group`` stay jnp-only; request-scoped keys are constant within
+#: one request's candidates, so the kernels simply drop them.
+FUSABLE_KEYS: Tuple[str, ...] = (
+    "frag-delta", "free-slices", "gpu", "anchor",
+) + REQUEST_KEYS
+
 
 def key_base(key: str) -> str:
     """Strip the optional ``-`` direction prefix off a scoring key."""
@@ -155,14 +168,27 @@ class PolicySpec:
       engines: engines this spec may be compiled to (default: all).  A
         spec can opt out of an engine, e.g. a host-side-only experiment;
         :func:`resolve` raises through the same message everywhere.
-      kernel_lowering: whether the batched engine may route this spec's
-        scoring through the Pallas kernels (``use_kernel=True``): the fused
-        per-model ``delta_from_base`` ΔF dispatch (specs whose keys consume
-        ``frag-delta``) and the occupancy-based ``fragscore`` rescore
-        (homogeneous fleets).  Default on — the kernels are bit-for-bit
-        with the pure-jnp lowering (integer-valued scores); a spec whose
-        custom semantics must never hit the kernel seam can opt out, and
-        ``run_batched(use_kernel=True)`` then raises.
+      kernel_lowering: how far the batched engine may lower this spec's
+        scoring into the Pallas kernels (``use_kernel=True``).  One of
+        :data:`KERNEL_LOWERINGS`:
+
+        * ``True`` (default) — everything available: the fused per-model
+          select/migrate kernels with in-kernel lexicographic argmin when
+          the spec's keys are fusable (:attr:`argmin_fusable`), the
+          ``delta_from_base`` ΔF dispatch otherwise, plus the
+          occupancy-based ``fragscore`` rescore on homogeneous fleets;
+        * ``"fused"`` — like ``True`` but *declares* argmin-fusability:
+          constructing the spec raises unless every key is packable
+          (:data:`FUSABLE_KEYS`), so a defrag spec that says ``"fused"``
+          is guaranteed to compose with the fused migrate-search kernel;
+        * ``"delta"`` — ΔF-table lowering only; the argmin (select and the
+          migrate stage's refinements) stays pure jnp.  For specs whose
+          custom key semantics must not enter the packed-key reduction;
+        * ``False`` — no kernels at all; ``run_batched(use_kernel=True)``
+          raises.
+
+        All lowerings are bit-for-bit with the pure-jnp reference
+        (integer-valued scores, exact in float32).
       description: one-line human summary (shown by ``list_policies``
         consumers and docs).
     """
@@ -172,7 +198,7 @@ class PolicySpec:
     feasibility: str = "window-free"
     defrag: bool = False
     engines: Tuple[str, ...] = ENGINES
-    kernel_lowering: bool = True
+    kernel_lowering: Union[bool, str] = True
     description: str = ""
 
     def __post_init__(self):
@@ -209,6 +235,19 @@ class PolicySpec:
                 "'rr-distance' key (the migration search's inner dry-run "
                 "selections would advance the rotation cursor ambiguously)"
             )
+        if self.kernel_lowering not in KERNEL_LOWERINGS:
+            raise ValueError(
+                f"policy {self.name!r}: unknown kernel_lowering "
+                f"{self.kernel_lowering!r}; options: {KERNEL_LOWERINGS}"
+            )
+        if self.kernel_lowering == "fused" and not self.argmin_fusable:
+            bad = tuple(k for k in self.keys if key_base(k) not in FUSABLE_KEYS)
+            raise ValueError(
+                f"policy {self.name!r}: kernel_lowering='fused' declares "
+                "argmin-fusability, but the spec is not fusable "
+                f"({'keys ' + repr(bad) + ' cannot be packed' if bad else 'no frag-delta key — nothing to fuse'}; "
+                f"fusable bases: {FUSABLE_KEYS})"
+            )
 
     # -- derived structure ---------------------------------------------------
     @property
@@ -220,6 +259,22 @@ class PolicySpec:
     def stateful_cursor(self) -> bool:
         """Whether the policy carries a round-robin rotation cursor."""
         return any(key_base(k) == "rr-distance" for k in self.keys)
+
+    @property
+    def argmin_fusable(self) -> bool:
+        """Whether the spec's key list can be packed into the fused
+        select/migrate Pallas kernels' in-kernel lexicographic argmin:
+        every key base must be in :data:`FUSABLE_KEYS`.  ΔF-free specs
+        (bf-bi/wf-bi/ff) qualify too — the kernel simply skips the ΔF
+        tile and reduces the remaining keys in-register."""
+        return all(key_base(k) in FUSABLE_KEYS for k in self.keys)
+
+    @property
+    def fused_argmin(self) -> bool:
+        """Whether ``use_kernel=True`` routes this spec through the fused
+        select/migrate kernels (declared via :attr:`kernel_lowering` and
+        structurally :attr:`argmin_fusable`)."""
+        return self.kernel_lowering in (True, "fused") and self.argmin_fusable
 
     def supports(self, engine: str) -> bool:
         return engine in self.engines

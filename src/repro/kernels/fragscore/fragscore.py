@@ -12,7 +12,7 @@ compiled kernel serves any placement table: each :class:`DeviceModel`
 ``(N, S)`` window matrix — shapes are static per model, so a mixed fleet
 dispatches one compiled kernel per model group.
 
-Three kernels:
+Five kernels:
 
 * :func:`fragscore` — F(m) from raw ``(M, S)`` occupancy bitmaps (Alg. 1);
 * :func:`mfi_delta` — feasibility-masked ΔF over all (GPU, anchor)
@@ -24,7 +24,22 @@ Three kernels:
   final subtraction into one launch — no occupancy materialization, no
   per-anchor hypothetical matmuls.  Mirrors
   :func:`repro.sim.batched._delta_from_base` bit-for-bit (all scores are
-  integer-valued, hence exact in float32).
+  integer-valued, hence exact in float32);
+* :func:`select_from_base` — the *fused select*: ΔF **and** the masked
+  lexicographic argmin of the policy's scoring keys in one launch; only
+  per-tile winner rows ``(keys…, gpu, anchor-column, ok)`` leave VMEM, the
+  ``(M, A)`` score table never round-trips through HBM;
+* :func:`migrate_refine` — the *fused migrate-search* refinements: the
+  per-class ``(P, M, A)`` untouched-row refinement reduced to best +
+  runner-up per class (``_lex_top2``) as grid pass 0, and the per-victim
+  ``O(C·A)`` patched-row refinement as grid pass 1 — one launch for both
+  (the second grid dimension selects the pass).
+
+The fused kernels take the policy's ordered keys as a static
+``((base, sign), …)`` tuple.  Every key value is integer-valued (ΔF
+included), hence exact in float32: equality-based masked refinement and
+cross-tile lexicographic merges reproduce the pure-jnp total order
+bit-for-bit.  See ``docs/KERNELS.md`` for the packing scheme.
 """
 
 from __future__ import annotations
@@ -165,44 +180,68 @@ def mfi_delta(
     return out[:m]
 
 
-def _delta_from_base_kernel(
-    base_ref, free_ref, f_ref, v_ref, mw_ref, mp_ref, mem_ref, out_ref,
-    *, metric: str,
-):
-    """Fused ΔF dry-run table from the incremental window-count state.
+def _delta_block(base, free, f_before, v, mw, mp, mem, metric: str):
+    """ΔF tile from window counts — the shared fused-ΔF math.
 
     Window counts after a feasible placement are ``base + mw`` (the anchor
     window is disjoint from current occupancy), so for the "blocked" metric
     the counted-predicate decomposes as ``(base > 0) | (mw > 0)`` and the
-    whole (BLK_M, A) tile is one (BLK_M, N) × (N, A) matmul on the MXU plus
-    VPU predicates; "partial" takes the dense (BLK_M, A, N) elementwise
+    whole (blk, A) tile is one (blk, N) × (N, A) matmul on the MXU plus
+    VPU predicates; "partial" takes the dense (blk, A, N) elementwise
     path (A ≤ 12, N ≤ 31 — a few hundred KiB of VMEM).
     """
-    base = base_ref[...]                     # (BLK_M, N) f32
-    free = free_ref[...][:, 0]               # (BLK_M,) f32
-    f_before = f_ref[...][:, 0]              # (BLK_M,) f32
-    v = v_ref[...]                           # (N,) f32
-    mw = mw_ref[...]                         # (A, N) f32
-    mp = mp_ref[...]                         # (A, N) f32
-    mem = mem_ref[0]                         # scalar f32 — request slice demand
-    free_after = free - mem                  # (BLK_M,) — same for every anchor
-    elig = v[None, :] <= free_after[:, None]  # (BLK_M, N)
+    free_after = free - mem                  # (blk,) — same for every anchor
+    elig = v[None, :] <= free_after[:, None]  # (blk, N)
     if metric == "partial":
-        ba = base[:, None, :] + mw[None, :, :]  # (BLK_M, A, N)
+        ba = base[:, None, :] + mw[None, :, :]  # (blk, A, N)
         counted = (ba > 0) & (ba < v[None, None, :])
         f_after = jnp.sum(
             jnp.where(counted & elig[:, None, :], v[None, None, :], 0.0), axis=-1
         )
     else:  # blocked: counted_after = (base > 0) | (mw > 0)
-        cb = base > 0                        # (BLK_M, N)
-        s_occ = jnp.sum(jnp.where(cb & elig, v[None, :], 0.0), axis=-1)  # (BLK_M,)
-        cross = jnp.dot(                     # (BLK_M, A)
+        cb = base > 0                        # (blk, N)
+        s_occ = jnp.sum(jnp.where(cb & elig, v[None, :], 0.0), axis=-1)  # (blk,)
+        cross = jnp.dot(                     # (blk, A)
             jnp.where(~cb & elig, v[None, :], 0.0),
             mp.T,
             preferred_element_type=jnp.float32,
         )
         f_after = s_occ[:, None] + cross
-    out_ref[...] = f_after - f_before[:, None]
+    return f_after - f_before[:, None]
+
+
+def _delta_rows(base, free, f_before, v, mw, mp, mem, metric: str):
+    """Row-wise ΔF: every row is an independent GPU with its *own* window
+    sizes ``v (blk, N)``, per-row anchor tables ``mw/mp (blk, A, N)`` and
+    per-row slice demand ``mem (blk,)`` — the per-victim patched-row form.
+    """
+    free_after = free - mem                  # (blk,)
+    elig = v <= free_after[:, None]          # (blk, N)
+    if metric == "partial":
+        ba = base[:, None, :] + mw           # (blk, A, N)
+        counted = (ba > 0) & (ba < v[:, None, :])
+        f_after = jnp.sum(
+            jnp.where(counted & elig[:, None, :], v[:, None, :], 0.0), axis=-1
+        )
+    else:
+        cb = base > 0                        # (blk, N)
+        s_occ = jnp.sum(jnp.where(cb & elig, v, 0.0), axis=-1)  # (blk,)
+        cross = jnp.sum(                     # (blk, A)
+            jnp.where(~cb & elig, v, 0.0)[:, None, :] * mp, axis=-1
+        )
+        f_after = s_occ[:, None] + cross
+    return f_after - f_before[:, None]
+
+
+def _delta_from_base_kernel(
+    base_ref, free_ref, f_ref, v_ref, mw_ref, mp_ref, mem_ref, out_ref,
+    *, metric: str,
+):
+    """Fused ΔF dry-run table from the incremental window-count state."""
+    out_ref[...] = _delta_block(
+        base_ref[...], free_ref[...][:, 0], f_ref[...][:, 0], v_ref[...],
+        mw_ref[...], mp_ref[...], mem_ref[0], metric,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("metric", "interpret"))
@@ -274,3 +313,521 @@ def delta_from_base(
         jnp.reshape(mem, (1,)).astype(jnp.float32),
         )
     return out[:m]
+
+
+# ---------------------------------------------------------------------------
+# Fused select / migrate-search kernels: ΔF + lexicographic argmin in-kernel
+# ---------------------------------------------------------------------------
+
+#: the refinement sentinel — MUST equal ``repro.sim.batched._BIG`` so the
+#: in-kernel masked refinements and the host-side cross-tile merges compare
+#: against the same value the pure-jnp lowering uses.  Kept a Python float:
+#: a module-level jax array would be captured as a constant by pallas kernels.
+BIG = 1e9
+
+
+def _blk_rows(m: int) -> int:
+    """Adaptive row-tile: whole problem when it fits, BLK_M slabs beyond.
+
+    Fleets are usually far smaller than BLK_M; padding 16 rows to 512 would
+    make every fused launch 32× wider than the work.  TPU f32 tiles are
+    (8, 128), so round up to a multiple of 8.
+    """
+    return min(BLK_M, -(-m // 8) * 8)
+
+
+def _key_tile(base_key, sign, delta, free, mem, gid, anchors, shape):
+    """One effective scoring key as a (blk, A) tile (direction applied).
+
+    ``anchors`` broadcasts along rows when it is a shared (A,) vector (the
+    per-class form) and is taken as-is when per-row (blk, A) (the
+    per-victim form); ``gid``/``free``/``mem`` are (blk,) / scalar-or-(blk,).
+    Request-scoped keys never reach the kernels — they are constant over
+    one request's candidates and are dropped from the effective key tuple
+    by the dispatch builders.
+    """
+    if base_key == "frag-delta":
+        val = delta
+    elif base_key == "free-slices":
+        val = jnp.broadcast_to((free - mem)[:, None], shape)
+    elif base_key == "gpu":
+        val = jnp.broadcast_to(gid[:, None], shape)
+    elif base_key == "anchor":
+        a2 = anchors if anchors.ndim == 2 else anchors[None, :]
+        val = jnp.broadcast_to(a2, shape)
+    else:  # pragma: no cover — guarded by PolicySpec.argmin_fusable
+        raise ValueError(f"key {base_key!r} is not argmin-fusable")
+    return -val if sign < 0 else val
+
+
+def _refine_cols(feas, vals):
+    """Masked per-row refinement along the anchor axis (``_refine_rows``'s
+    total order): returns ``(okr (blk, 1), wincol (blk, 1) int32, keyr)``
+    where ``keyr`` lists each key's winner-column value (blk, 1).
+
+    Winner extraction is *unmasked* at the first surviving column
+    (``argmax``-of-mask semantics, column 0 for all-infeasible rows) so the
+    values match the jnp lowering's ``take_along_axis`` bit-for-bit even on
+    rows no feasible anchor survives.
+    """
+    blk, a = feas.shape
+    mask = feas
+    for val in vals:
+        mval = jnp.where(mask, val, BIG)
+        mask = mask & (mval == jnp.min(mval, axis=-1, keepdims=True))
+    okr = jnp.any(mask, axis=-1, keepdims=True)            # (blk, 1)
+    cid = jax.lax.broadcasted_iota(jnp.int32, (blk, a), 1)
+    wincol = jnp.min(jnp.where(mask, cid, a), axis=-1, keepdims=True)
+    wincol = jnp.where(okr, wincol, 0)                     # (blk, 1)
+    w = cid == wincol
+    keyr = [
+        jnp.sum(jnp.where(w, val, 0.0), axis=-1, keepdims=True) for val in vals
+    ]
+    return okr, wincol, keyr
+
+
+def _tile_top2(okr, wincol, keyr, gid2):
+    """Cross-row lexicographic top-2 of per-row winners inside one tile.
+
+    Rows ascend in global GPU id, so the in-tile row order *is* the
+    ``_lex_top2`` ascending-row tie-break.  Returns two candidate rows
+    ``[keys…, gpu, col, ok]`` (keys masked to BIG, gpu/col zeroed when not
+    ok) ready for the host-side cross-tile merge by ``(keys…, gpu)``.
+    """
+    blk = okr.shape[0]
+    rid = jax.lax.broadcasted_iota(jnp.int32, (blk, 1), 0)
+
+    def best(rmask):
+        for kv in keyr:
+            mval = jnp.where(rmask, kv, BIG)
+            rmask = rmask & (mval == jnp.min(mval))
+        winrow = jnp.min(jnp.where(rmask, rid, blk))
+        w = rmask & (rid == winrow)
+        ok = jnp.any(rmask)
+        okf = ok.astype(jnp.float32)
+        pick = lambda t: jnp.sum(jnp.where(w, t, 0.0))  # noqa: E731
+        row = [jnp.where(ok, pick(kv), BIG) for kv in keyr]
+        row += [
+            pick(gid2) * okf,
+            pick(wincol.astype(jnp.float32)) * okf,
+            okf,
+        ]
+        return winrow, row
+
+    r1, row1 = best(okr)
+    _, row2 = best(okr & (rid != r1))
+    return row1 + row2
+
+
+def _select_from_base_kernel(
+    base_ref, free_ref, f_ref, gidx_ref, live_ref,
+    v_ref, mw_ref, mp_ref, mem_ref, rowsel_ref, valid_ref, anchors_ref,
+    out_ref, *, metric: str, keys,
+):
+    """Fused select: ΔF + masked lexicographic argmin, one winner row out."""
+    base = base_ref[...]                      # (blk, N)
+    free = free_ref[...][:, 0]                # (blk,)
+    f = f_ref[...][:, 0]
+    gid = gidx_ref[...][:, 0]
+    live = live_ref[...][:, 0] > 0
+    mem = mem_ref[0]
+    blk = base.shape[0]
+    a = valid_ref.shape[0]
+
+    # feasibility: the request's anchor windows hold zero occupied slices —
+    # a one-hot gather ``base @ rowsel`` on the MXU (exact: single terms)
+    overlap = jnp.dot(base, rowsel_ref[...], preferred_element_type=jnp.float32)
+    feas = (overlap == 0) & (valid_ref[...][None, :] > 0) & live[:, None]
+
+    delta = None
+    if any(b == "frag-delta" for b, _ in keys):
+        delta = _delta_block(base, free, f, v_ref[...], mw_ref[...],
+                             mp_ref[...], mem, metric)
+    vals = [
+        _key_tile(b, s, delta, free, mem, gid, anchors_ref[...], (blk, a))
+        for b, s in keys
+    ]
+
+    # tile-global masked refinement — ``_lower_select``'s total order
+    mask = feas
+    for val in vals:
+        mval = jnp.where(mask, val, BIG)
+        mask = mask & (mval == jnp.min(mval))
+    rid = jax.lax.broadcasted_iota(jnp.int32, (blk, a), 0)
+    cid = jax.lax.broadcasted_iota(jnp.int32, (blk, a), 1)
+    flat = rid * a + cid                      # rows ascend in global gpu id
+    win = mask & (flat == jnp.min(jnp.where(mask, flat, blk * a)))
+    ok = jnp.any(mask)
+    okf = ok.astype(jnp.float32)
+    pick = lambda t: jnp.sum(jnp.where(win, t, 0.0))  # noqa: E731
+    row = [jnp.where(ok, pick(val), BIG) for val in vals]
+    row += [
+        pick(jnp.broadcast_to(gid[:, None], (blk, a))) * okf,
+        pick(cid.astype(jnp.float32)) * okf,
+        okf,
+    ]
+    out_ref[...] = jnp.stack(row)[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("keys", "metric", "interpret"))
+def select_from_base(
+    base: jax.Array,
+    free: jax.Array,
+    f_before: jax.Array,
+    gidx: jax.Array,
+    v: jax.Array,
+    mw: jax.Array,
+    mp: jax.Array,
+    mem: jax.Array,
+    rowsel: jax.Array,
+    valid: jax.Array,
+    anchors: jax.Array,
+    *,
+    keys,
+    metric: str = "blocked",
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused select over one model group: per-tile winner rows.
+
+    Evaluates the ΔF table *and* reduces it through the policy's masked
+    lexicographic refinement in one launch — the ``(M, A)`` score table
+    never leaves VMEM.  Only ``T = ceil(M / blk)`` winner rows
+    ``[signed key values…, gpu, anchor-column, ok]`` (keys BIG / gpu,col 0
+    when the tile has no feasible candidate) reach HBM; the caller merges
+    tiles (and model groups) by ``(keys…, gpu, col)`` — exactly
+    ``_lower_select``'s total order, since rows ascend in global GPU id and
+    every key value is integer-valued (exact in float32).
+
+    Args:
+      base: (M, N) window counts of this group's GPUs.
+      free: (M,) free slices; f_before: (M,) current F(m).
+      gidx: (M,) *global* GPU ids of the group's rows (ascending).
+      v/mw/mp/mem: the group's placement table and the request class's
+        anchor tables, as in :func:`delta_from_base`.
+      rowsel: (N, A) one-hot of ``profile_rows`` — feasibility gather.
+      valid: (A,) anchor validity (1.0 real / 0.0 padded).
+      anchors: (A,) anchor *values* (``profile_anchors``).
+      keys: static ``((base_key, sign), …)`` effective scoring keys.
+
+    Returns:
+      (T, L + 3) float32 winner rows, ``L = len(keys)``.
+    """
+    m, n = base.shape
+    a = mw.shape[0]
+    blk = _blk_rows(m)
+    m_pad = -(-m // blk) * blk
+    t = m_pad // blk
+    base_p = jnp.zeros((m_pad, n), jnp.float32).at[:m].set(base)
+    col = lambda x: jnp.zeros((m_pad, 1), jnp.float32).at[:m, 0].set(  # noqa: E731
+        x.astype(jnp.float32)
+    )
+    live_p = jnp.zeros((m_pad, 1), jnp.float32).at[:m, 0].set(1.0)
+    l = len(keys)
+
+    return pl.pallas_call(
+        functools.partial(_select_from_base_kernel, metric=metric, keys=keys),
+        grid=(t,),
+        in_specs=[
+            pl.BlockSpec((blk, n), lambda i: (i, 0)),
+            pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+            pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+            pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+            pl.BlockSpec((blk, 1), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((a, n), lambda i: (0, 0)),
+            pl.BlockSpec((a, n), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((n, a), lambda i: (0, 0)),
+            pl.BlockSpec((a,), lambda i: (0,)),
+            pl.BlockSpec((a,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, l + 3), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, l + 3), jnp.float32),
+        interpret=interpret,
+    )(
+        base_p,
+        col(free),
+        col(f_before),
+        col(gidx),
+        live_p,
+        v.astype(jnp.float32),
+        mw.astype(jnp.float32),
+        mp.astype(jnp.float32),
+        jnp.reshape(mem, (1,)).astype(jnp.float32),
+        rowsel.astype(jnp.float32),
+        valid.astype(jnp.float32),
+        anchors.astype(jnp.float32),
+    )
+
+
+def _class_pass_impl(
+    base_ref, free_ref, f_ref, gidx_ref, live_ref, v_ref,
+    mw_all_ref, mp_all_ref, mem_all_ref, rowsel_all_ref, valid_all_ref,
+    anchors_all_ref, out0_ref, *, metric: str, keys,
+):
+    """Pass 0: per-class untouched-row refinement + in-tile top-2.
+
+    The demand-class loop is unrolled (P = 6); each class emits two
+    candidate rows ``[keys…, gpu, col, ok]`` — the tile's best and
+    runner-up per ``_lex_top2``'s order — into a (1, P, 2·(L+3)) block.
+    """
+    base = base_ref[...]                      # (blk, N)
+    free = free_ref[...][:, 0]
+    f = f_ref[...][:, 0]
+    gid = gidx_ref[...][:, 0]
+    live = live_ref[...][:, 0] > 0
+    v = v_ref[...]
+    blk = base.shape[0]
+    p_, a = valid_all_ref.shape
+    gid2 = gid[:, None]
+    need_delta = any(b == "frag-delta" for b, _ in keys)
+    rows = []
+    for p in range(p_):
+        mem = mem_all_ref[p]
+        overlap = jnp.dot(
+            base, rowsel_all_ref[p], preferred_element_type=jnp.float32
+        )
+        feas = (overlap == 0) & (valid_all_ref[p][None, :] > 0) & live[:, None]
+        delta = None
+        if need_delta:
+            delta = _delta_block(
+                base, free, f, v, mw_all_ref[p], mp_all_ref[p], mem, metric
+            )
+        vals = [
+            _key_tile(b, s, delta, free, mem, gid, anchors_all_ref[p], (blk, a))
+            for b, s in keys
+        ]
+        okr, wincol, keyr = _refine_cols(feas, vals)
+        rows.append(jnp.stack(_tile_top2(okr, wincol, keyr, gid2)))
+    out0_ref[...] = jnp.stack(rows)[None]
+
+
+def _victim_pass_impl(
+    base2_ref, free2_ref, f2_ref, vgid_ref, vv_ref, vmw_ref, vmp_ref,
+    vmem_ref, vrowsel_ref, vvalid_ref, vanchors_ref, out1_ref,
+    *, metric: str, keys,
+):
+    """Pass 1: per-victim patched-row refinement.
+
+    Every row is an independent victim with its *own* model tables (mixed
+    fleets gather per victim) — the row-wise ΔF form.  Emits
+    ``[keys…, col, ok]`` per victim; column 0 (unmasked values) when no
+    anchor survives, matching the jnp path's argmax-of-mask semantics.
+    """
+    base2 = base2_ref[...]                    # (blk, N)
+    free2 = free2_ref[...][:, 0]
+    f2 = f2_ref[...][:, 0]
+    vgid = vgid_ref[...][:, 0]
+    vmem = vmem_ref[...][:, 0]
+    blk = base2.shape[0]
+    a = vvalid_ref.shape[-1]
+    overlap = jnp.sum(base2[:, :, None] * vrowsel_ref[...], axis=1)  # (blk, A)
+    feas = (overlap == 0) & (vvalid_ref[...] > 0)
+    delta = None
+    if any(b == "frag-delta" for b, _ in keys):
+        delta = _delta_rows(
+            base2, free2, f2, vv_ref[...], vmw_ref[...], vmp_ref[...],
+            vmem, metric,
+        )
+    vals = [
+        _key_tile(b, s, delta, free2, vmem, vgid, vanchors_ref[...], (blk, a))
+        for b, s in keys
+    ]
+    okr, wincol, keyr = _refine_cols(feas, vals)
+    out1_ref[...] = jnp.concatenate(
+        keyr + [wincol.astype(jnp.float32), okr.astype(jnp.float32)], axis=1
+    )
+
+
+def _migrate_class_kernel(*refs, metric: str, keys):
+    _class_pass_impl(*refs, metric=metric, keys=keys)
+
+
+def _migrate_refine_kernel(passid_ref, *refs, metric: str, keys):
+    """Both migrate refinements in one launch; the second grid dimension
+    selects the pass.  The pass id arrives as a (1, 1) operand indexed by
+    the grid (never ``pl.program_id`` — vmap over replicas prepends a batch
+    grid dimension and would shift the axis numbering)."""
+    pid = passid_ref[0, 0]
+    class_in, victim_in = refs[:12], refs[12:23]
+    out0_ref, out1_ref = refs[23], refs[24]
+
+    @pl.when(pid == 0.0)
+    def _():
+        _class_pass_impl(*class_in, out0_ref, metric=metric, keys=keys)
+
+    @pl.when(pid == 1.0)
+    def _():
+        _victim_pass_impl(*victim_in, out1_ref, metric=metric, keys=keys)
+
+
+def _pad_rows(x, m, m_pad):
+    shp = (m_pad,) + x.shape[1:]
+    return jnp.zeros(shp, jnp.float32).at[:m].set(x.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("keys", "metric", "interpret"))
+def migrate_refine(
+    base: jax.Array,
+    free: jax.Array,
+    f_before: jax.Array,
+    gidx: jax.Array,
+    v: jax.Array,
+    mw_all: jax.Array,
+    mp_all: jax.Array,
+    mem_all: jax.Array,
+    rowsel_all: jax.Array,
+    valid_all: jax.Array,
+    anchors_all: jax.Array,
+    victims=None,
+    *,
+    keys,
+    metric: str = "blocked",
+    interpret: bool = True,
+):
+    """Fused migrate-search refinements over one model group.
+
+    Pass 0 (tiled over the group's ``M`` GPUs) runs the per-class
+    ``(P, M, A)`` untouched-row refinement — ΔF, feasibility, per-row
+    anchor refinement, and the cross-row best/runner-up reduction — and
+    emits two candidate rows ``[keys…, gpu, col, ok]`` per class per tile
+    (keys BIG when not ok).  With ``victims`` (the per-victim gathered
+    tables — mixed fleets gather per row, so one call covers every victim
+    regardless of model), the per-victim ``O(C·A)`` patched-row refinement
+    is fused as grid pass 1 of the *same* launch: grid ``(T, 2)``, the
+    second dimension selecting the pass, input index maps clamped to each
+    pass's own tile range (revisits rewrite identical content).
+
+    Args:
+      base/free/f_before/gidx: the group's window-count state + global ids.
+      v: (N,) group placement-window sizes.
+      mw_all/mp_all: (P, A, N) per-class anchor tables; mem_all: (P,).
+      rowsel_all: (P, N, A) one-hot feasibility gathers; valid_all /
+        anchors_all: (P, A).
+      victims: optional tuple ``(base2, free2, f2, vgid, vv, vmw, vmp,
+        vmem, vrowsel, vvalid, vanchors)`` of per-victim (C, …) tables.
+      keys: static ``((base_key, sign), …)`` effective scoring keys.
+
+    Returns:
+      ``(out0, out1)`` — out0 (T0, P, 2·(L+3)) candidate pairs, out1
+      (C, L+2) per-victim ``[keys…, col, ok]`` rows (``None`` without
+      ``victims``).
+    """
+    m, n = base.shape
+    p_, a, _ = mw_all.shape
+    l = len(keys)
+    w0 = 2 * (l + 3)
+    blk0 = _blk_rows(m)
+    m_pad = -(-m // blk0) * blk0
+    t0 = m_pad // blk0
+
+    col = lambda x: _pad_rows(x.reshape(-1, 1), m, m_pad)  # noqa: E731
+    class_ops = (
+        _pad_rows(base, m, m_pad),
+        col(free),
+        col(f_before),
+        col(gidx),
+        _pad_rows(jnp.ones((m, 1)), m, m_pad),
+        v.astype(jnp.float32),
+        mw_all.astype(jnp.float32),
+        mp_all.astype(jnp.float32),
+        mem_all.astype(jnp.float32),
+        rowsel_all.astype(jnp.float32),
+        valid_all.astype(jnp.float32),
+        anchors_all.astype(jnp.float32),
+    )
+
+    if victims is None:
+        class_specs = [
+            pl.BlockSpec((blk0, n), lambda i: (i, 0)),
+            pl.BlockSpec((blk0, 1), lambda i: (i, 0)),
+            pl.BlockSpec((blk0, 1), lambda i: (i, 0)),
+            pl.BlockSpec((blk0, 1), lambda i: (i, 0)),
+            pl.BlockSpec((blk0, 1), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((p_, a, n), lambda i: (0, 0, 0)),
+            pl.BlockSpec((p_, a, n), lambda i: (0, 0, 0)),
+            pl.BlockSpec((p_,), lambda i: (0,)),
+            pl.BlockSpec((p_, n, a), lambda i: (0, 0, 0)),
+            pl.BlockSpec((p_, a), lambda i: (0, 0)),
+            pl.BlockSpec((p_, a), lambda i: (0, 0)),
+        ]
+        out0 = pl.pallas_call(
+            functools.partial(_migrate_class_kernel, metric=metric, keys=keys),
+            grid=(t0,),
+            in_specs=class_specs,
+            out_specs=pl.BlockSpec((1, p_, w0), lambda i: (i, 0, 0)),
+            out_shape=jax.ShapeDtypeStruct((t0, p_, w0), jnp.float32),
+            interpret=interpret,
+        )(*class_ops)
+        return out0, None
+
+    (base2, free2, f2, vgid, vv, vmw, vmp, vmem, vrowsel, vvalid,
+     vanchors) = victims
+    c = base2.shape[0]
+    blk1 = _blk_rows(c)
+    c_pad = -(-c // blk1) * blk1
+    t1 = c_pad // blk1
+    t = max(t0, t1)
+
+    colv = lambda x: _pad_rows(x.reshape(-1, 1), c, c_pad)  # noqa: E731
+    victim_ops = (
+        _pad_rows(base2, c, c_pad),
+        colv(free2),
+        colv(f2),
+        colv(vgid),
+        _pad_rows(vv, c, c_pad),
+        _pad_rows(vmw, c, c_pad),
+        _pad_rows(vmp, c, c_pad),
+        colv(vmem),
+        _pad_rows(vrowsel, c, c_pad),
+        _pad_rows(vvalid, c, c_pad),  # zero-padded validity masks pad victims
+        _pad_rows(vanchors, c, c_pad),
+    )
+
+    i0 = lambda i, j: (jnp.minimum(i, t0 - 1), 0)  # noqa: E731
+    i1 = lambda i, j: (jnp.minimum(i, t1 - 1), 0)  # noqa: E731
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda i, j: (j, 0)),  # pass id
+        # -- pass 0 operands (clamped to the class tiles) -------------------
+        pl.BlockSpec((blk0, n), i0),
+        pl.BlockSpec((blk0, 1), i0),
+        pl.BlockSpec((blk0, 1), i0),
+        pl.BlockSpec((blk0, 1), i0),
+        pl.BlockSpec((blk0, 1), i0),
+        pl.BlockSpec((n,), lambda i, j: (0,)),
+        pl.BlockSpec((p_, a, n), lambda i, j: (0, 0, 0)),
+        pl.BlockSpec((p_, a, n), lambda i, j: (0, 0, 0)),
+        pl.BlockSpec((p_,), lambda i, j: (0,)),
+        pl.BlockSpec((p_, n, a), lambda i, j: (0, 0, 0)),
+        pl.BlockSpec((p_, a), lambda i, j: (0, 0)),
+        pl.BlockSpec((p_, a), lambda i, j: (0, 0)),
+        # -- pass 1 operands (clamped to the victim tiles) ------------------
+        pl.BlockSpec((blk1, n), i1),
+        pl.BlockSpec((blk1, 1), i1),
+        pl.BlockSpec((blk1, 1), i1),
+        pl.BlockSpec((blk1, 1), i1),
+        pl.BlockSpec((blk1, n), i1),
+        pl.BlockSpec((blk1, a, n), lambda i, j: (jnp.minimum(i, t1 - 1), 0, 0)),
+        pl.BlockSpec((blk1, a, n), lambda i, j: (jnp.minimum(i, t1 - 1), 0, 0)),
+        pl.BlockSpec((blk1, 1), i1),
+        pl.BlockSpec((blk1, n, a), lambda i, j: (jnp.minimum(i, t1 - 1), 0, 0)),
+        pl.BlockSpec((blk1, a), i1),
+        pl.BlockSpec((blk1, a), i1),
+    ]
+    passid = jnp.arange(2, dtype=jnp.float32).reshape(2, 1)
+    out0, out1 = pl.pallas_call(
+        functools.partial(_migrate_refine_kernel, metric=metric, keys=keys),
+        grid=(t, 2),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, p_, w0), lambda i, j: (jnp.minimum(i, t0 - 1), 0, 0)),
+            pl.BlockSpec((blk1, l + 2), i1),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t0, p_, w0), jnp.float32),
+            jax.ShapeDtypeStruct((c_pad, l + 2), jnp.float32),
+        ],
+        interpret=interpret,
+    )(passid, *class_ops, *victim_ops)
+    return out0, out1[:c]

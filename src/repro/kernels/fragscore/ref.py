@@ -91,3 +91,60 @@ def delta_from_base_ref(
     eligible = v[None, None, :] <= free_after[:, None, None]
     f_after = jnp.sum(jnp.where(counted & eligible, v[None, None, :], 0.0), axis=-1)
     return f_after - f_before[:, None]
+
+
+_BIG = jnp.float32(1e9)
+
+
+def lex_argmin_ref(feasible: jax.Array, vals) -> tuple:
+    """Masked lexicographic argmin over an (M, A) candidate table — oracle.
+
+    ``vals`` lists the (M, A)-broadcastable signed key tensors in spec
+    order; ties break by the first surviving flat index (ascending
+    ``(gpu, col)``), exactly ``repro.sim.batched._lower_select``.  Returns
+    ``(gpu, col, ok)``.
+    """
+    mask = feasible
+    for val in vals:
+        val = jnp.broadcast_to(val, feasible.shape)
+        masked = jnp.where(mask, val, _BIG)
+        mask = mask & (masked == masked.min())
+    flat = mask.reshape(-1)
+    k = jnp.argmax(flat)
+    a = feasible.shape[1]
+    return k // a, k % a, flat[k]
+
+
+def select_from_base_ref(
+    base, free, f_before, gidx, v, mw, mem, rowsel, valid, anchors,
+    keys, metric: str = "blocked",
+):
+    """Fused-select oracle: ΔF + the policy's masked refinement, merged.
+
+    Builds each effective key's (M, A) tensor from the dense ΔF oracle and
+    reduces with :func:`lex_argmin_ref`.  The winner of the
+    :func:`~repro.kernels.fragscore.fragscore.select_from_base` tile rows,
+    merged by ``(keys…, gpu, col)``, must reproduce this bit-for-bit.
+    Returns ``(gpu_value, col, ok)`` — ``gpu_value = gidx[gpu_row]``.
+    """
+    free_f = free.astype(jnp.float32)
+    overlap = base @ jnp.asarray(rowsel, jnp.float32)         # (M, A)
+    feas = (overlap == 0) & (jnp.asarray(valid) > 0)[None, :]
+    delta = delta_from_base_ref(base, free, v, mw, mem, f_before, metric)
+    m, a = feas.shape
+    vals = []
+    for base_key, sign in keys:
+        if base_key == "frag-delta":
+            val = delta
+        elif base_key == "free-slices":
+            val = (free_f - jnp.float32(mem))[:, None]
+        elif base_key == "gpu":
+            val = jnp.asarray(gidx, jnp.float32)[:, None]
+        elif base_key == "anchor":
+            val = jnp.broadcast_to(jnp.asarray(anchors, jnp.float32)[None, :], (m, a))
+        else:
+            raise ValueError(base_key)
+        vals.append(-val if sign < 0 else val)
+    row, col, ok = lex_argmin_ref(feas, vals)
+    gpu = jnp.where(ok, jnp.asarray(gidx, jnp.int32)[row], 0)
+    return gpu, jnp.where(ok, col, 0), ok

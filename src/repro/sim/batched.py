@@ -16,9 +16,14 @@ Staged pipeline (the :class:`EngineCore`)
       steady protocol (paper §VI), post-commit sampling on the cumulative
       demand grid for the paper-literal cumulative protocol;
     * the :class:`~repro.core.policy.PolicySpec` selects the decision
-      stages: the select lowering (:func:`_lower_select`), the optional
-      *migrate* stage (``spec.defrag`` — the beyond-paper ``mfi-defrag``
-      single-migration search, see below), and the rotation-cursor update.
+      stages: the select lowering (:func:`_lower_select`, or — under
+      ``use_kernel`` for argmin-fusable specs — the fused Pallas
+      :func:`~repro.kernels.fragscore.fragscore.select_from_base` launch
+      via :func:`make_select_fn`), the optional *migrate* stage
+      (``spec.defrag`` — the beyond-paper ``mfi-defrag``
+      single-migration search, see below; fused counterpart
+      :func:`make_migrate_fn`), and the rotation-cursor update.  See
+      ``docs/KERNELS.md`` for the kernel dispatch rules.
 
     Because the descriptors are static jit arguments, a configuration
     compiles exactly the stages it needs: the steady/non-defrag pipeline
@@ -168,6 +173,7 @@ import numpy as np
 from repro.core import cluster as jcluster
 from repro.core import mig
 from repro.core.policy import (
+    REQUEST_KEYS,
     PolicyLike,
     PolicySpec,
     key_base,
@@ -478,6 +484,207 @@ def make_delta_fn(
     return delta_fn
 
 
+def _effective_keys(pspec: PolicySpec):
+    """Static ``((base, sign), …)`` kernel encoding of a spec's keys.
+
+    Request-scoped keys (:data:`~repro.core.policy.REQUEST_KEYS` bases) are
+    constant over one request's candidate table — they never narrow the
+    refinement and never vary a winner-key comparison — so the fused
+    kernels drop them (``PolicySpec.argmin_fusable`` guarantees everything
+    else packs).
+    """
+    return tuple(
+        (key_base(k), -1.0 if k.startswith("-") else 1.0)
+        for k in pspec.keys
+        if key_base(k) not in REQUEST_KEYS
+    )
+
+
+def _lex_pick_rows(cand: jax.Array, l: int):
+    """Merge fused-select winner rows ``(ΣT, L+3)`` to ``(gpu, col, ok)``.
+
+    Rows are ``[signed keys…, gpu, col, ok]`` per tile (keys BIG when not
+    ok); the lexicographic refinement over ``(keys…, gpu, col)`` reproduces
+    :func:`_lower_select`'s total order — within a tile the kernel already
+    resolved ties by ascending ``(gpu, col)``, and across tiles/groups the
+    explicit gpu/col columns do.  All-infeasible events resolve to
+    ``(0, 0, False)``, exactly like the jnp lowering.
+    """
+    ok = cand[:, l + 2] > 0
+    mask = ok
+    for i in range(l + 2):
+        masked = jnp.where(mask, cand[:, i], _BIG)
+        mask = mask & (masked == masked.min())
+    j = jnp.argmax(mask)
+    any_ok = ok.any()
+    gpu = jnp.where(any_ok, cand[j, l], 0.0).astype(jnp.int32)
+    col = jnp.where(any_ok, cand[j, l + 1], 0.0).astype(jnp.int32)
+    return gpu, col, any_ok
+
+
+def make_select_fn(
+    spec: mig.ClusterSpec,
+    pspec: PolicySpec,
+    metric: str = "blocked",
+    interpret: Optional[bool] = None,
+):
+    """Fused Pallas select dispatch: ``(base, free, f, pid) -> (gpu, aidx, ok)``.
+
+    Lowers the whole select stage — ΔF table *and* the masked lexicographic
+    argmin — to :func:`repro.kernels.fragscore.fragscore.select_from_base`
+    with per-model dispatch over ``spec.model_groups()`` (one launch per
+    distinct :class:`~repro.core.mig.DeviceModel`, padded H200-141GB
+    included).  Each launch returns only per-tile winner rows; the
+    ``(M, A)`` score table never round-trips through HBM.  Requires
+    ``pspec.argmin_fusable`` (every key base packable in-kernel).
+    """
+    from repro.kernels.fragscore import fragscore as _k
+
+    tables = spec_tables(spec)
+    groups = spec.model_groups()
+    keys = _effective_keys(pspec)
+    l = len(keys)
+    interp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    arange_n = jnp.arange(int(tables.V.shape[-1]), dtype=jnp.int32)
+
+    def select_fn(base, free, f, pid):
+        cand = []
+        for k, (_, rows) in enumerate(groups):
+            ridx = jnp.asarray(rows)
+            rowsel = tables.profile_rows[k, pid][None, :] == arange_n[:, None]
+            cand.append(
+                _k.select_from_base(
+                    base[ridx],
+                    free[ridx],
+                    f[ridx],
+                    jnp.asarray(rows, dtype=jnp.float32),
+                    tables.V[k],
+                    tables.maskwin[k, pid],
+                    tables.maskpos[k, pid],
+                    tables.profile_mem[k, pid],
+                    rowsel,
+                    tables.profile_valid[k, pid],
+                    tables.profile_anchors[k, pid],
+                    keys=keys,
+                    metric=metric,
+                    interpret=interp,
+                )
+            )
+        return _lex_pick_rows(jnp.concatenate(cand, axis=0), l)
+
+    return select_fn
+
+
+def _merge_top2(cand: jax.Array, l: int):
+    """Merge fused migrate candidate pairs ``(P, Q, L+3)`` to per-class
+    best + runner-up.
+
+    The cross-tile form of :func:`_lex_top2`: candidates compare by
+    ``(keys…, gpu)`` (the kernel resolved in-tile row ties by ascending
+    gpu, and gpu values are globally unique across tiles/groups), and the
+    runner-up excludes the best row's *gpu* — guarded on ``ok1`` so an
+    all-infeasible class keeps the jnp path's ``(0, False)`` shape.
+    Returns ``(g1, ok1, a1, k1, g2, ok2, a2, k2)``.
+    """
+    ok = cand[..., l + 2] > 0                  # (P, Q)
+    gpu = cand[..., l]                         # (P, Q) float gpu values
+    pa = jnp.arange(cand.shape[0])
+
+    def best(mask):
+        for i in range(l):
+            masked = jnp.where(mask, cand[..., i], _BIG)
+            mask = mask & (masked == masked.min(axis=-1, keepdims=True))
+        masked = jnp.where(mask, gpu, _BIG)
+        mask = mask & (masked == masked.min(axis=-1, keepdims=True))
+        j = jnp.argmax(mask, axis=-1)          # (P,)
+        okb = mask.any(axis=-1)
+        g = jnp.where(okb, gpu[pa, j], 0.0).astype(jnp.int32)
+        aw = jnp.where(okb, cand[pa, j, l + 1], 0.0).astype(jnp.int32)
+        return g, okb, aw, cand[pa, j, :l]
+
+    g1, ok1, a1, k1 = best(ok)
+    excl = ok & (~ok1[:, None] | (gpu != g1.astype(jnp.float32)[:, None]))
+    g2, ok2, a2, k2 = best(excl)
+    return g1, ok1, a1, k1, g2, ok2, a2, k2
+
+
+def make_migrate_fn(
+    spec: mig.ClusterSpec,
+    pspec: PolicySpec,
+    metric: str = "blocked",
+    interpret: Optional[bool] = None,
+):
+    """Fused Pallas migrate-search dispatch for defrag specs.
+
+    Returns ``migrate_fn(base, free, f, base2, free2, f2, rg, rp, kc)``
+    producing the per-class top-2 untouched rows *and* the per-victim
+    patched-row refinements that :func:`_migrate_search` consumes —
+    ``(g1, ok1, a1, k1, g2, ok2, a2, k2, ap, okp, kp)``.  One
+    :func:`repro.kernels.fragscore.fragscore.migrate_refine` launch per
+    model group; the per-victim pass rides as grid pass 1 of the first
+    group's launch (victims gather their own tables per row, so one pass
+    covers every victim on any fleet).
+    """
+    from repro.kernels.fragscore import fragscore as _k
+
+    tables = spec_tables(spec)
+    groups = spec.model_groups()
+    keys = _effective_keys(pspec)
+    l = len(keys)
+    p_ = int(tables.profile_rows.shape[1])
+    interp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    arange_n = jnp.arange(int(tables.V.shape[-1]), dtype=jnp.int32)
+    # (K, P, N, A) one-hot feasibility gathers — static per spec
+    rowsel_all = (
+        tables.profile_rows[:, :, None, :] == arange_n[None, None, :, None]
+    ).astype(jnp.float32)
+
+    def migrate_fn(base, free, f, base2, free2, f2, rg, rp, kc):
+        vrowsel = (
+            tables.profile_rows[kc, rp][:, None, :] == arange_n[None, :, None]
+        ).astype(jnp.float32)                  # (C, N, A)
+        victims = (
+            base2, free2, f2, rg.astype(jnp.float32),
+            tables.V[kc],
+            tables.maskwin[kc, rp], tables.maskpos[kc, rp],
+            tables.profile_mem[kc, rp], vrowsel,
+            tables.profile_valid[kc, rp], tables.profile_anchors[kc, rp],
+        )
+        cands, out1 = [], None
+        for k, (_, rows) in enumerate(groups):
+            ridx = jnp.asarray(rows)
+            o0, o1 = _k.migrate_refine(
+                base[ridx],
+                free[ridx],
+                f[ridx],
+                jnp.asarray(rows, dtype=jnp.float32),
+                tables.V[k],
+                tables.maskwin[k],
+                tables.maskpos[k],
+                tables.profile_mem[k],
+                rowsel_all[k],
+                tables.profile_valid[k],
+                tables.profile_anchors[k],
+                victims if k == 0 else None,
+                keys=keys,
+                metric=metric,
+                interpret=interp,
+            )
+            if o1 is not None:
+                out1 = o1
+            t0 = o0.shape[0]                   # (T0, P, 2·(L+3)) → (P, 2·T0, L+3)
+            cands.append(
+                jnp.transpose(o0.reshape(t0, p_, 2, l + 3), (1, 0, 2, 3))
+                .reshape(p_, 2 * t0, l + 3)
+            )
+        merged = _merge_top2(jnp.concatenate(cands, axis=1), l)
+        ap = out1[:, l].astype(jnp.int32)
+        okp = out1[:, l + 1] > 0
+        return merged + (ap, okp, out1[:, :l])
+
+    return migrate_fn
+
+
 # ---------------------------------------------------------------------------
 # PolicySpec lowering: lexicographic keys -> masked refinement argmin
 # ---------------------------------------------------------------------------
@@ -551,12 +758,17 @@ def _feasibility(base: jax.Array, rows: jax.Array, valid: jax.Array) -> jax.Arra
 
 
 def _select(spec, base, free, f, metric, tables, midx, vg, pid, cursor,
-            delta_fn=None):
+            delta_fn=None, select_fn=None):
     """Shared decision path: returns (gpu, aidx, ok) for one request.
 
     ``delta_fn`` (from :func:`make_delta_fn`) routes the ΔF table through
-    the fused Pallas kernel; ``None`` uses the pure-jnp lowering.
+    the fused Pallas kernel; ``select_fn`` (from :func:`make_select_fn`)
+    goes further and runs the whole stage — ΔF *and* the masked
+    lexicographic argmin — in fused per-model launches; ``None`` uses the
+    pure-jnp lowering.
     """
+    if select_fn is not None:
+        return select_fn(base, free, f, pid)
     rows = tables.profile_rows[midx, pid]  # (M, A)
     valid = tables.profile_valid[midx, pid]  # (M, A)
     mem_g = tables.profile_mem[midx, pid]  # (M,)
@@ -875,7 +1087,14 @@ def _lex_top2(keys: jax.Array, ok: jax.Array):
 
     ``keys (B, M, L)`` are ordered key vectors (direction already applied),
     ``ok (B, M)`` their validity; remaining ties break by ascending column
-    index.  Returns ``(g1, ok1, g2, ok2)``, each ``(B,)``.
+    index — duplicate best keys therefore resolve to the two lowest tied
+    columns, in order.  The runner-up excludes the winner's column only
+    when a winner exists (``ok1``-guarded): an all-infeasible row keeps
+    the full (vacuously empty) mask instead of arbitrarily excluding
+    column 0, so ``g2`` carries the same ``argmax``-of-empty-mask value
+    (0) as ``g1`` rather than depending on the winner's placeholder.  A
+    single-valid-column row yields ``ok2 = False``.  Returns
+    ``(g1, ok1, g2, ok2)``, each ``(B,)``.
     """
     def best(mask):
         for l in range(keys.shape[-1]):
@@ -885,7 +1104,8 @@ def _lex_top2(keys: jax.Array, ok: jax.Array):
 
     g1, ok1 = best(ok)
     m = keys.shape[1]
-    g2, ok2 = best(ok & (jnp.arange(m)[None, :] != g1[:, None]))
+    excl = ~ok1[:, None] | (jnp.arange(m)[None, :] != g1[:, None])
+    g2, ok2 = best(ok & excl)
     return g1, ok1, g2, ok2
 
 
@@ -906,6 +1126,7 @@ def _migrate_search(
     cursor: jax.Array,
     want: jax.Array,
     delta_fn=None,
+    migrate_fn=None,
 ) -> MigrationResult:
     """Factored masked single-migration search over live ring entries.
 
@@ -1002,73 +1223,85 @@ def _migrate_search(
     f2 = _frag_from_base(base2, free2, metric, vgc)              # (C,)
 
     # -- per-class row winners on the untouched cluster (once per event) ----
+    # + per-victim patched-row refinement.  The fused ``migrate_fn`` (from
+    # :func:`make_migrate_fn`) runs both in per-model Pallas launches —
+    # the per-victim pass riding as grid pass 1 of the first — and returns
+    # only the reduced rows; the jnp path below materializes the
+    # ``(P, M, A)`` tables and reduces them with :func:`_refine_rows` +
+    # :func:`_lex_top2`.
     p_ = mig.NUM_PROFILES
     a_ = tables.profile_rows.shape[-1]
-    rows_all = jnp.transpose(tables.profile_rows[midx], (1, 0, 2))      # (P, M, A)
-    valid_all = jnp.transpose(tables.profile_valid[midx], (1, 0, 2))
-    anchors_all = jnp.transpose(tables.profile_anchors[midx], (1, 0, 2))
-    mem_all = jnp.transpose(tables.profile_mem[midx], (1, 0))           # (P, M)
-    overlap_all = jnp.take_along_axis(base[None], rows_all, axis=2)     # (P, M, A)
-    feas_all = (overlap_all == 0) & valid_all
-    if spec.requires_delta_f:
-        if delta_fn is not None:  # fused Pallas ΔF, one launch per class
-            delta_all = jnp.stack([delta_fn(base, free, f, p) for p in range(p_)])
-        else:
-            mw_all = jnp.transpose(tables.maskwin[midx], (1, 0, 2, 3))  # (P, M, A, N)
-            mp_all = jnp.transpose(tables.maskpos[midx], (1, 0, 2, 3))
-            delta_all = _delta_from_base_all(
-                base, free, metric, vg, mw_all, mp_all, mem_all, f
-            )  # (P, M, A)
+    if migrate_fn is not None:
+        (g1, ok1, aw1, kw1, g2, ok2, aw2, kw2, ap, okp, kp) = migrate_fn(
+            base, free, f, base2, free2, f2, rg, rp, kc
+        )
     else:
-        delta_all = None
-    aw, okw, kw = _refine_rows(
-        spec,
-        feas_all.reshape(p_ * num_gpus, a_),
-        jnp.tile(free, p_),
-        mem_all.reshape(p_ * num_gpus),
-        None if delta_all is None else delta_all.reshape(p_ * num_gpus, a_),
-        anchors_all.reshape(p_ * num_gpus, a_),
-        cursor,
-        jnp.tile(jnp.arange(num_gpus, dtype=jnp.int32), p_),
-        jnp.tile(midx, p_),
-        num_gpus,
-        return_keys=True,
-    )
-    l_ = kw.shape[-1]
-    aw = aw.reshape(p_, num_gpus)
-    okw = okw.reshape(p_, num_gpus)
-    kw = kw.reshape(p_, num_gpus, l_)
-    g1, ok1, g2, ok2 = _lex_top2(kw, okw)          # best + runner-up per class
-    pa = jnp.arange(p_)
-    kw1, aw1 = kw[pa, g1], aw[pa, g1]              # (P, L), (P,)
-    kw2, aw2 = kw[pa, g2], aw[pa, g2]
+        rows_all = jnp.transpose(tables.profile_rows[midx], (1, 0, 2))      # (P, M, A)
+        valid_all = jnp.transpose(tables.profile_valid[midx], (1, 0, 2))
+        anchors_all = jnp.transpose(tables.profile_anchors[midx], (1, 0, 2))
+        mem_all = jnp.transpose(tables.profile_mem[midx], (1, 0))           # (P, M)
+        overlap_all = jnp.take_along_axis(base[None], rows_all, axis=2)     # (P, M, A)
+        feas_all = (overlap_all == 0) & valid_all
+        if spec.requires_delta_f:
+            if delta_fn is not None:  # fused Pallas ΔF, one launch per class
+                delta_all = jnp.stack([delta_fn(base, free, f, p) for p in range(p_)])
+            else:
+                mw_all = jnp.transpose(tables.maskwin[midx], (1, 0, 2, 3))  # (P, M, A, N)
+                mp_all = jnp.transpose(tables.maskpos[midx], (1, 0, 2, 3))
+                delta_all = _delta_from_base_all(
+                    base, free, metric, vg, mw_all, mp_all, mem_all, f
+                )  # (P, M, A)
+        else:
+            delta_all = None
+        aw, okw, kw = _refine_rows(
+            spec,
+            feas_all.reshape(p_ * num_gpus, a_),
+            jnp.tile(free, p_),
+            mem_all.reshape(p_ * num_gpus),
+            None if delta_all is None else delta_all.reshape(p_ * num_gpus, a_),
+            anchors_all.reshape(p_ * num_gpus, a_),
+            cursor,
+            jnp.tile(jnp.arange(num_gpus, dtype=jnp.int32), p_),
+            jnp.tile(midx, p_),
+            num_gpus,
+            return_keys=True,
+        )
+        l_ = kw.shape[-1]
+        aw = aw.reshape(p_, num_gpus)
+        okw = okw.reshape(p_, num_gpus)
+        kw = kw.reshape(p_, num_gpus, l_)
+        g1, ok1, g2, ok2 = _lex_top2(kw, okw)      # best + runner-up per class
+        pa = jnp.arange(p_)
+        kw1, aw1 = kw[pa, g1], aw[pa, g1]          # (P, L), (P,)
+        kw2, aw2 = kw[pa, g2], aw[pa, g2]
+
+        # -- per victim: refine its patched row -----------------------------
+        rows_vic = tables.profile_rows[kc, rp]     # (C, A)
+        valid_vic = tables.profile_valid[kc, rp]   # (C, A)
+        mem_vic_c = tables.profile_mem[kc, rp]     # (C,) float32
+        anchors_vic = tables.profile_anchors[kc, rp]  # (C, A)
+        overlap_patch = jnp.take_along_axis(base2, rows_vic, axis=1)
+        feas_patch = (overlap_patch == 0) & valid_vic  # (C, A)
+        if spec.requires_delta_f:
+            delta_patch = _delta_from_base(
+                base2, free2, metric, vgc,
+                tables.maskwin[kc, rp], tables.maskpos[kc, rp],
+                mem_vic_c, f2,
+            )  # (C, A)
+        else:
+            delta_patch = None
+        ap, okp, kp = _refine_rows(
+            spec, feas_patch, free2, mem_vic_c, delta_patch, anchors_vic,
+            cursor, rg, kc, num_gpus, return_keys=True,
+        )
 
     # -- per victim: best untouched row (excluding its own GPU) -------------
+    l_ = kw1.shape[-1]
     use2 = g1[rp] == rg                            # own GPU was the best row
     gu = jnp.where(use2, g2[rp], g1[rp])
     oku = jnp.where(use2, ok2[rp], ok1[rp])
     au = jnp.where(use2, aw2[rp], aw1[rp])
     ku = jnp.where(use2[:, None], kw2[rp], kw1[rp])  # (C, L)
-
-    # -- per victim: refine its patched row ---------------------------------
-    rows_vic = tables.profile_rows[kc, rp]         # (C, A)
-    valid_vic = tables.profile_valid[kc, rp]       # (C, A)
-    mem_vic_c = tables.profile_mem[kc, rp]         # (C,) float32
-    anchors_vic = tables.profile_anchors[kc, rp]   # (C, A)
-    overlap_patch = jnp.take_along_axis(base2, rows_vic, axis=1)
-    feas_patch = (overlap_patch == 0) & valid_vic  # (C, A)
-    if spec.requires_delta_f:
-        delta_patch = _delta_from_base(
-            base2, free2, metric, vgc,
-            tables.maskwin[kc, rp], tables.maskpos[kc, rp],
-            mem_vic_c, f2,
-        )  # (C, A)
-    else:
-        delta_patch = None
-    ap, okp, kp = _refine_rows(
-        spec, feas_patch, free2, mem_vic_c, delta_patch, anchors_vic, cursor,
-        rg, kc, num_gpus, return_keys=True,
-    )
 
     # -- lex-merge the two row winners: (keys…, gpu) ------------------------
     ku_e = jnp.where(oku[:, None], ku, _BIG)
@@ -1398,6 +1631,8 @@ class EngineCore:
     vg: jax.Array
     frag_fn: Optional[object] = None
     delta_fn: Optional[object] = None
+    select_fn: Optional[object] = None
+    migrate_fn: Optional[object] = None
     wait_patience: int = 0  # queued protocols: max slots a request may wait
 
     # -- stages --------------------------------------------------------------
@@ -1439,6 +1674,7 @@ class EngineCore:
         gpu, aidx, ok = _select(
             self.spec, st.base, st.free, st.f, self.metric, self.tables,
             self.midx, self.vg, pid_c, st.rr, delta_fn=self.delta_fn,
+            select_fn=self.select_fn,
         )
         return gpu, aidx, ok & valid
 
@@ -1449,6 +1685,7 @@ class EngineCore:
             st.base, st.free, st.f,
             st.ring_gpu, st.ring_mask, st.ring_pid, st.ring_aidx,
             pid_c, st.rr, want=valid & ~ok, delta_fn=self.delta_fn,
+            migrate_fn=self.migrate_fn,
         )
         mi = res.mig.astype(jnp.int32)
         mf = res.mig.astype(jnp.float32)
@@ -1574,6 +1811,7 @@ class EngineCore:
         gpu, aidx, sel_ok = _select(
             self.spec, st.base, st.free, st.f, self.metric, self.tables,
             self.midx, self.vg, pid_w, st.rr, delta_fn=self.delta_fn,
+            select_fn=self.select_fn,
         )
         ok_w = sel_ok & head
         st = self._stage_commit(
@@ -1725,23 +1963,33 @@ def _build_core(
         cspec = _default_spec(num_gpus)
         tables = spec_tables(cspec)
         midx = jnp.asarray(cspec.model_index)
-    frag_fn = delta_fn = None
+    frag_fn = delta_fn = select_fn = migrate_fn = None
     if use_kernel:
         # Pallas dispatch rules (`kernel_spec` is the static ClusterSpec):
         # the occupancy-based `fragscore` rescore kernel needs one placement
         # table, so it compiles in on homogeneous specs only (mixed fleets
         # keep the base-derived rescoring); the fused `delta_from_base` ΔF
         # kernel dispatches per model group and serves any fleet, for specs
-        # whose keys consume ΔF.
+        # whose keys consume ΔF; specs that additionally declare
+        # argmin-fusability (`PolicySpec.fused_argmin`) lower the whole
+        # select stage — and, for defrag specs, both migrate refinements —
+        # to the fused `select_from_base` / `migrate_refine` kernels (the
+        # `(M, A)` score table stays in VMEM).  `kernel_lowering="delta"`
+        # keeps only the ΔF kernel.
         kspec = kernel_spec if kernel_spec is not None else _default_spec(num_gpus)
         if kspec.is_homogeneous:
             frag_fn = make_frag_fn(metric, True, kspec.models[0])
         if pspec.requires_delta_f:
             delta_fn = make_delta_fn(kspec, metric)
+        if pspec.fused_argmin:  # ΔF-free fusable specs (bf-bi/wf-bi) included
+            select_fn = make_select_fn(kspec, pspec, metric)
+            if pspec.defrag:
+                migrate_fn = make_migrate_fn(kspec, pspec, metric)
     vg = tables.V[midx]  # (M, N) per-GPU window sizes, gathered once
     core = EngineCore(
         spec=pspec, protocol=proto, metric=metric, tables=tables,
         midx=midx, vg=vg, frag_fn=frag_fn, delta_fn=delta_fn,
+        select_fn=select_fn, migrate_fn=migrate_fn,
         wait_patience=wait_patience,
     )
     return core, tables, midx
@@ -2368,7 +2616,9 @@ def run_batched(
     proto = resolve_protocol(cfg.protocol)
     spec = cfg.spec()
     if use_kernel is None:
-        use_kernel = jax.default_backend() == "tpu" and policy.kernel_lowering
+        use_kernel = bool(
+            jax.default_backend() == "tpu" and policy.kernel_lowering
+        )
     if use_kernel and not policy.kernel_lowering:
         raise ValueError(
             f"policy {policy.name!r} opts out of Pallas kernel lowering "

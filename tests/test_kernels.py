@@ -14,9 +14,15 @@ import jax.numpy as jnp
 from repro.core import cluster as jcluster
 from repro.core import fragmentation as frag_np
 from repro.core import mig, schedulers
+from repro.core.policy import resolve
 from repro.kernels.fragscore import fragscore as frag_k
 from repro.kernels.fragscore import ops as frag_ops
-from repro.kernels.fragscore.ref import delta_from_base_ref, fragscore_ref
+from repro.kernels.fragscore.ref import (
+    delta_from_base_ref,
+    fragscore_ref,
+    select_from_base_ref,
+)
+from repro.sim import batched
 from repro.kernels.decode_attention.decode_attention import decode_attention
 from repro.kernels.decode_attention.ref import decode_attention_ref
 
@@ -222,6 +228,210 @@ class TestPerModelKernelParity:
                     )
                 )
                 np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Fused select / migrate kernels: ΔF + in-kernel lexicographic argmin
+# ---------------------------------------------------------------------------
+
+
+def _random_state(spec, tables, seed, fill=0.4):
+    """Randomized occupancy -> engine-layout ``(base, free, f)``."""
+    rng = np.random.default_rng(seed)
+    midx = np.asarray(spec.model_index)
+    occ = np.zeros((spec.num_gpus, spec.num_mem_slices), np.int32)
+    for g in range(spec.num_gpus):
+        s = spec.models[midx[g]].num_mem_slices
+        occ[g, :s] = (rng.random(s) < fill).astype(np.int32)
+    base = jnp.einsum(
+        "ms,mns->mn", jnp.asarray(occ, jnp.float32), tables.W[midx]
+    )
+    free = jnp.asarray(tables.slices[midx] - occ.sum(axis=1), jnp.int32)
+    f = batched._frag_from_base(base, free, "blocked", tables.V[midx])
+    return base, free, f
+
+
+class TestFusedSelectParity:
+    """Fused select (ΔF + in-kernel lex argmin) vs the masked-refinement
+    oracle — every registered DeviceModel (padded H200-141GB included),
+    randomized occupancy, interpret mode."""
+
+    @pytest.mark.parametrize("model", DEVICE_MODELS, ids=lambda m: m.name)
+    @pytest.mark.parametrize("policy", ["mfi", "bf-bi", "wf-bi"])
+    def test_homogeneous_matches_oracle(self, model, policy):
+        spec = mig.ClusterSpec.homogeneous(model, 9)
+        tables = batched.spec_tables(spec)
+        pspec = resolve(policy, engine="batched")
+        keys = batched._effective_keys(pspec)
+        select_fn = batched.make_select_fn(spec, pspec, interpret=True)
+        arange_n = jnp.arange(int(tables.V.shape[-1]))
+        gidx = jnp.arange(spec.num_gpus)
+        for seed, fill in ((0, 0.0), (1, 0.45), (2, 0.9)):
+            base, free, f = _random_state(
+                spec, tables, seed + len(model.name), fill
+            )
+            for pid in range(mig.NUM_PROFILES):
+                got = select_fn(base, free, f, pid)
+                rowsel = (
+                    tables.profile_rows[0, pid][None, :] == arange_n[:, None]
+                )
+                want = select_from_base_ref(
+                    base, free, f, gidx, tables.V[0],
+                    tables.maskwin[0, pid], tables.profile_mem[0, pid],
+                    rowsel, tables.profile_valid[0, pid],
+                    tables.profile_anchors[0, pid], keys,
+                )
+                assert tuple(int(x) for x in got) == tuple(
+                    int(x) for x in want
+                ), (model.name, policy, seed, pid)
+
+    @pytest.mark.parametrize("metric", ["blocked", "partial"])
+    def test_mixed_fleet_matches_jnp_lowering(self, metric):
+        """Per-model dispatch + cross-group merge vs `_lower_select` on a
+        three-model fleet (A100-80/H200-141/A100-40)."""
+        spec = mig.ClusterSpec(
+            ((mig.A100_80GB, 2), (mig.H200_141GB, 2), (mig.A100_40GB, 2))
+        )
+        tables = batched.spec_tables(spec)
+        midx = jnp.asarray(spec.model_index)
+        vg = tables.V[midx]
+        for policy in ("mfi", "bf-bi"):
+            pspec = resolve(policy, engine="batched")
+            select_fn = batched.make_select_fn(
+                spec, pspec, metric=metric, interpret=True
+            )
+            for seed in range(3):
+                base, free, f = _random_state(spec, tables, 10 + seed, 0.5)
+                if metric == "partial":
+                    f = batched._frag_from_base(base, free, metric, vg)
+                for pid in range(mig.NUM_PROFILES):
+                    got = select_fn(base, free, f, pid)
+                    want = batched._select(
+                        pspec, base, free, f, metric, tables, midx, vg,
+                        pid, cursor=jnp.int32(0),
+                    )
+                    assert tuple(int(x) for x in got) == tuple(
+                        int(x) for x in want
+                    ), (policy, seed, pid)
+
+    def test_multi_tile_merge(self):
+        """m > BLK_M: per-tile winner rows merge across tiles by
+        ``(keys…, gpu, col)`` without perturbing the total order."""
+        spec = mig.ClusterSpec.homogeneous(mig.A100_80GB, 516)
+        tables = batched.spec_tables(spec)
+        pspec = resolve("mfi", engine="batched")
+        keys = batched._effective_keys(pspec)
+        select_fn = batched.make_select_fn(spec, pspec, interpret=True)
+        base, free, f = _random_state(spec, tables, 21, 0.6)
+        arange_n = jnp.arange(int(tables.V.shape[-1]))
+        pid = 3
+        rowsel = tables.profile_rows[0, pid][None, :] == arange_n[:, None]
+        got = select_fn(base, free, f, pid)
+        want = select_from_base_ref(
+            base, free, f, jnp.arange(516), tables.V[0],
+            tables.maskwin[0, pid], tables.profile_mem[0, pid], rowsel,
+            tables.profile_valid[0, pid], tables.profile_anchors[0, pid],
+            keys,
+        )
+        assert tuple(int(x) for x in got) == tuple(int(x) for x in want)
+
+    def test_request_scoped_keys_drop_out(self):
+        """mfi-queued's tenant/priority/wait-age keys are request-scoped:
+        the fused lowering drops them and must select exactly like mfi."""
+        pspec_q = resolve("mfi-queued", engine="batched")
+        assert batched._effective_keys(pspec_q) == batched._effective_keys(
+            resolve("mfi", engine="batched")
+        )
+        spec = mig.ClusterSpec.homogeneous(mig.A100_80GB, 6)
+        tables = batched.spec_tables(spec)
+        fn_q = batched.make_select_fn(spec, pspec_q, interpret=True)
+        fn_m = batched.make_select_fn(
+            spec, resolve("mfi", engine="batched"), interpret=True
+        )
+        base, free, f = _random_state(spec, tables, 5, 0.5)
+        for pid in range(mig.NUM_PROFILES):
+            gq = fn_q(base, free, f, pid)
+            gm = fn_m(base, free, f, pid)
+            assert tuple(int(x) for x in gq) == tuple(int(x) for x in gm)
+
+
+class TestFusedMigrateParity:
+    """`migrate_refine`'s two passes vs the select oracle — the per-class
+    top-2 equals the oracle's best (then best-with-winner-row-excluded) and
+    the per-victim patched-row pass equals a one-row oracle call."""
+
+    def _setup(self, model, seed, fill):
+        spec = mig.ClusterSpec.homogeneous(model, 7)
+        tables = batched.spec_tables(spec)
+        pspec = resolve("mfi-defrag", engine="batched")
+        keys = batched._effective_keys(pspec)
+        fn = batched.make_migrate_fn(spec, pspec, interpret=True)
+        base, free, f = _random_state(spec, tables, seed, fill)
+        rng = np.random.default_rng(seed + 99)
+        c = 5
+        rg = jnp.asarray(rng.integers(0, spec.num_gpus, size=c), jnp.int32)
+        rp = jnp.asarray(rng.integers(0, mig.NUM_PROFILES, size=c), jnp.int32)
+        kc = jnp.zeros((c,), jnp.int32)
+        vspec = mig.ClusterSpec.homogeneous(model, c)
+        base2, free2, f2 = _random_state(vspec, tables, seed + 7, fill)
+        return (spec, tables, keys, fn, base, free, f,
+                (base2, free2, f2, rg, rp, kc))
+
+    @pytest.mark.parametrize("model", DEVICE_MODELS, ids=lambda m: m.name)
+    @pytest.mark.parametrize("seed,fill", [(0, 0.0), (1, 0.5), (2, 0.95)])
+    def test_matches_oracle(self, model, seed, fill):
+        (spec, tables, keys, fn, base, free, f,
+         (base2, free2, f2, rg, rp, kc)) = self._setup(model, seed, fill)
+        g1, ok1, a1, k1, g2, ok2, a2, k2, ap, okp, kp = fn(
+            base, free, f, base2, free2, f2, rg, rp, kc
+        )
+        arange_n = jnp.arange(int(tables.V.shape[-1]))
+        gidx = jnp.arange(spec.num_gpus)
+        for p in range(mig.NUM_PROFILES):
+            rowsel = tables.profile_rows[0, p][None, :] == arange_n[:, None]
+            args = (
+                tables.V[0], tables.maskwin[0, p], tables.profile_mem[0, p],
+                rowsel, tables.profile_valid[0, p],
+                tables.profile_anchors[0, p], keys,
+            )
+            w1 = select_from_base_ref(base, free, f, gidx, *args)
+            assert (int(g1[p]), int(a1[p]), bool(ok1[p])) == (
+                int(w1[0]), int(w1[1]), bool(w1[2])
+            ), (model.name, p)
+            # runner-up: best with the winner's row forced infeasible
+            # (rows are independent, so patching row g1 is exact exclusion)
+            b2 = base.at[w1[0]].set(1.0) if bool(w1[2]) else base
+            w2 = select_from_base_ref(b2, free, f, gidx, *args)
+            assert (int(g2[p]), int(a2[p]), bool(ok2[p])) == (
+                int(w2[0]), int(w2[1]), bool(w2[2])
+            ), (model.name, p)
+
+        for c in range(int(rg.shape[0])):
+            p = int(rp[c])
+            rowsel = tables.profile_rows[0, p][None, :] == arange_n[:, None]
+            wv = select_from_base_ref(
+                base2[c][None], free2[c][None], f2[c][None], rg[c][None],
+                tables.V[0], tables.maskwin[0, p], tables.profile_mem[0, p],
+                rowsel, tables.profile_valid[0, p],
+                tables.profile_anchors[0, p], keys,
+            )
+            assert (int(ap[c]), bool(okp[c])) == (int(wv[1]), bool(wv[2])), (
+                model.name, c
+            )
+
+    def test_all_infeasible_class(self):
+        """A fully packed fleet: every class all-infeasible in both passes,
+        `(0, 0, False)` rows all the way through."""
+        (_, _, _, fn, base, free, f,
+         (base2, free2, f2, rg, rp, kc)) = self._setup(mig.A100_80GB, 3, 1.0)
+        g1, ok1, a1, _, g2, ok2, a2, _, ap, okp, _ = fn(
+            base, free, f, base2, free2, f2, rg, rp, kc
+        )
+        assert not np.asarray(ok1).any() and not np.asarray(ok2).any()
+        assert not np.asarray(okp).any()
+        np.testing.assert_array_equal(np.asarray(g1), 0)
+        np.testing.assert_array_equal(np.asarray(g2), 0)
+        np.testing.assert_array_equal(np.asarray(ap), 0)
 
 
 class TestDecodeAttentionKernel:
