@@ -16,9 +16,13 @@ workflow artifact.  Smoke mode records the numbers without enforcing the
 additionally sweeps **every registered batched-capable policy**
 (``repro.core.policy.list_policies(engine="batched")``) for warm per-policy
 throughput — ``mfi-defrag``'s migrate stage included — plus one
-**cumulative-protocol** run and one **steady-queued** run (above
+**cumulative-protocol** run, one **steady-queued** run (above
 saturation, recording p50/p99 wait, fairness and queue admits next to
-throughput), so the uploaded artifact tracks the perf trajectory of every
+throughput) and one **steady-faulted** run (the same point overlaid with
+a deterministic hot fault process, recording goodput, evictions,
+recovered fraction and TTR p99 — all gated against the baseline, since
+they are seed-deterministic), so the uploaded artifact tracks the perf
+trajectory of every
 engine configuration, including policies registered after this benchmark
 was written (``--sweep``/``--no-sweep`` overrides).
 
@@ -149,6 +153,37 @@ def bench_queued(cfg: SimConfig, runs: int):
         "wait_p99": float(r["wait_p99"]),
         "fairness": float(r["fairness"]),
         "queue_admits": float(r["queue_admits"]),
+    }
+
+
+def bench_faulted(cfg: SimConfig, runs: int):
+    """Warm throughput + fault stats of one steady-faulted batched run.
+
+    The queued benchmark's above-saturation point overlaid with a hot
+    fault process (MTBF 60 slots, MTTR 10) so evictions, backoff
+    re-queues and recoveries all fire within the smoke horizon.  Like the
+    queued point the metrics are seed-deterministic, so the baseline diff
+    gates on them tightly — behavioral drift in the fault/wait stages
+    fails CI here before any parity test runs.
+    """
+    from repro.core.mig import FaultModel
+
+    fcfg = dataclasses.replace(
+        cfg, protocol="steady-faulted",
+        offered_load=max(cfg.offered_load, 1.1),
+        fault_model=FaultModel(mtbf=60.0, mttr=10.0),
+    )
+    run_batched("mfi", fcfg, runs=runs)  # compile + warm the cache
+    t0 = time.perf_counter()
+    r = run_batched("mfi", fcfg, runs=runs)
+    dt = time.perf_counter() - t0
+    return {
+        "warm_rps": runs / dt,
+        "acceptance_rate": float(r["acceptance_rate"]),
+        "goodput": float(r["goodput"]),
+        "evictions": float(r["evictions"]),
+        "recovered_fraction": float(r["recovered_fraction"]),
+        "ttr_p99": float(r["ttr_p99"]),
     }
 
 
@@ -543,6 +578,23 @@ def compare_baseline(payload: dict, baseline_path: str, gate: float = REGRESSION
                         "pass": not drift}
         if drift:
             ok = False
+    fb2, fc2 = base.get("faulted"), payload.get("faulted")
+    if fb2 and fc2:
+        # fault stats are seed-deterministic too: drift means the fault,
+        # wait or park stage changed eviction/re-queue behavior
+        drift = {
+            k: {"baseline": fb2[k], "current": fc2[k]}
+            for k in (
+                "acceptance_rate", "goodput", "evictions",
+                "recovered_fraction", "ttr_p99",
+            )
+            if k in fb2
+            and abs(fc2[k] - fb2[k]) > QUEUED_METRIC_TOL * max(1.0, abs(fb2[k]))
+        }
+        vs["faulted"] = {"tolerance": QUEUED_METRIC_TOL, "drift": drift,
+                         "pass": not drift}
+        if drift:
+            ok = False
     vs["pass"] = ok
     return vs, ok
 
@@ -654,6 +706,17 @@ def main(runs: int = 64, num_gpus: int = 100, load: float = 0.85,
             f"fairness={queued['fairness']:.4f} "
             f"queue_admits={queued['queue_admits']:.2f}"
         )
+        faulted = bench_faulted(cfg, runs)
+        print(
+            f"sweep,batched-faulted,mfi,{num_gpus},{runs},"
+            f"{faulted['warm_rps']:.2f},{faulted['acceptance_rate']:.4f}"
+        )
+        print(
+            f"# faulted point: goodput={faulted['goodput']:.4f} "
+            f"evictions={faulted['evictions']:.2f} "
+            f"recovered_fraction={faulted['recovered_fraction']:.4f} "
+            f"ttr_p99={faulted['ttr_p99']:.2f}"
+        )
         chunked = bench_chunked(cfg, runs)
         print(
             f"sweep,batched-chunked,mfi,{num_gpus},{runs},"
@@ -677,7 +740,7 @@ def main(runs: int = 64, num_gpus: int = 100, load: float = 0.85,
                 f"{'identical' if p['acceptance_identical'] else 'DRIFTED'}"
             )
     else:
-        queued = chunked = fused = None
+        queued = faulted = chunked = fused = None
     payload = dict(
         r, policy=policy, num_gpus=num_gpus, runs=runs, load=load, smoke=smoke,
         compile_cache=compile_cache,
@@ -688,6 +751,8 @@ def main(runs: int = 64, num_gpus: int = 100, load: float = 0.85,
         payload["cumulative"] = cumulative
     if queued is not None:
         payload["queued"] = queued
+    if faulted is not None:
+        payload["faulted"] = faulted
     if chunked is not None:
         payload["chunked"] = chunked
     if fused is not None:
@@ -750,6 +815,14 @@ def main(runs: int = 64, num_gpus: int = 100, load: float = 0.85,
                 f"# vs baseline queued point: drifted metrics: {drifted} "
                 f"-> {'PASS' if q['pass'] else 'FAIL'} "
                 f"(tolerance {q['tolerance']:g})"
+            )
+        f = vs.get("faulted")
+        if f is not None:
+            drifted = ", ".join(sorted(f["drift"])) or "none"
+            print(
+                f"# vs baseline faulted point: drifted metrics: {drifted} "
+                f"-> {'PASS' if f['pass'] else 'FAIL'} "
+                f"(tolerance {f['tolerance']:g})"
             )
         c = vs.get("chunked")
         if c is not None:

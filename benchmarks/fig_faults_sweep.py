@@ -1,0 +1,164 @@
+"""Fault-intensity sweep (beyond-paper robustness figure).
+
+Sweeps the GPU failure rate through the ``steady-faulted`` protocol — the
+queued multi-tenant front-end overlaid with an exponential per-GPU
+fail/recover process (:class:`repro.core.mig.FaultModel`) — and reports,
+per (policy, MTBF) point: acceptance, goodput (completed measured work
+over measured arrivals), evictions per replica, the fraction of evicted
+workloads that re-admitted before their retry budget or lease ran out,
+and the p50/p99 time-to-recovery of those re-admissions.  A fault-free
+``steady-queued`` pass at the same load anchors each row, so
+``acceptance - acceptance_nofault`` isolates what the fault process costs
+and ``recovered_fraction`` shows how much of it the backoff re-queue
+claws back.
+
+``--engine batched`` (default ``python``) runs each point through the
+batched JAX engine's fault/wait/park stages (:mod:`repro.sim.batched`);
+decision-for-decision parity between the engines' fault paths is
+asserted by the test suite (``tests/test_faults.py``), not here.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from benchmarks.common import (
+    CLUSTERS,
+    ENGINES,
+    resolve_cluster,
+    resolve_policies,
+    run_engine,
+)
+from repro.core.mig import FaultModel
+from repro.core.policy import resolve
+from repro.sim import SimConfig
+
+FAULT_POLICIES = ("ff", "mfi", "mfi-queued")
+
+#: MTBF sweep in slots, hottest first — at MTTR 10 and a ~200-slot horizon
+#: these bracket "a GPU is down ~14% of the time" down to "faults are rare"
+DEFAULT_MTBFS = (30.0, 60.0, 120.0, 240.0, 480.0)
+
+
+def run(runs: int = 30, num_gpus: int = 100, mtbfs=DEFAULT_MTBFS,
+        mttr: float = 10.0, load: float = 1.1, seed: int = 0,
+        engine: str = "python", cluster: str | None = None,
+        policies: str | None = None, wait_capacity: int = 8,
+        wait_patience: int = 16, num_tenants: int = 4,
+        max_retries: int = 2):
+    spec, num_gpus = resolve_cluster(cluster, num_gpus)
+    names = resolve_policies(policies, default=FAULT_POLICIES)
+    for name in names:
+        if resolve(name).defrag:
+            raise ValueError(
+                f"policy {name!r}: defrag composes with the fault protocol "
+                "only on the Python engine; drop it from --policies"
+            )
+    rows = []
+    results = {}
+    for name in names:
+        base_cfg = SimConfig(
+            num_gpus=num_gpus, distribution="uniform", offered_load=load,
+            seed=seed, cluster_spec=spec, protocol="steady-queued",
+            wait_capacity=wait_capacity, wait_patience=wait_patience,
+            num_tenants=num_tenants,
+        )
+        nofault = run_engine(engine, name, base_cfg, runs=runs)
+        for mtbf in mtbfs:
+            cfg = dataclasses.replace(
+                base_cfg, protocol="steady-faulted",
+                fault_model=FaultModel(
+                    mtbf=mtbf, mttr=mttr, max_retries=max_retries
+                ),
+            )
+            r = run_engine(engine, name, cfg, runs=runs)
+            r = dict(r, acceptance_nofault=nofault["acceptance_rate"])
+            results[(name, mtbf)] = r
+            rows.append(
+                f"faults,{name},{mtbf:g},{r['acceptance_rate']:.4f},"
+                f"{r['acceptance_nofault']:.4f},{r['goodput']:.4f},"
+                f"{r['evictions']:.2f},{r['recovered_fraction']:.4f},"
+                f"{r['ttr_p50']:.2f},{r['ttr_p99']:.2f}"
+            )
+    return rows, results
+
+
+def main(runs: int = 30, num_gpus: int = 100, engine: str = "python",
+         cluster: str | None = None, policies: str | None = None,
+         mtbfs=DEFAULT_MTBFS, mttr: float = 10.0, load: float = 1.1,
+         wait_capacity: int = 8, wait_patience: int = 16,
+         num_tenants: int = 4, max_retries: int = 2):
+    print(
+        "table,scheduler,mtbf,acceptance,acceptance_nofault,goodput,"
+        "evictions,recovered_fraction,ttr_p50,ttr_p99"
+    )
+    rows, results = run(
+        runs=runs, num_gpus=num_gpus, mtbfs=mtbfs, mttr=mttr, load=load,
+        engine=engine, cluster=cluster, policies=policies,
+        wait_capacity=wait_capacity, wait_patience=wait_patience,
+        num_tenants=num_tenants, max_retries=max_retries,
+    )
+    for row in rows:
+        print(row)
+    names = resolve_policies(policies, default=FAULT_POLICIES)
+    hottest = min(mtbf for (_, mtbf) in results)
+    costs = {
+        name: results[(name, hottest)]["acceptance_nofault"]
+        - results[(name, hottest)]["acceptance_rate"]
+        for name in names
+    }
+    recov = {
+        name: results[(name, hottest)]["recovered_fraction"] for name in names
+    }
+    print(
+        f"# fault cost @ MTBF {hottest:g} (acceptance, no-fault - faulted): "
+        + ", ".join(f"{n}={c:+.4f}" for n, c in sorted(costs.items()))
+    )
+    print(
+        "# recovered fraction at the same point: "
+        + ", ".join(f"{n}={r:.4f}" for n, r in sorted(recov.items()))
+    )
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--runs", type=int, default=30)
+    ap.add_argument("--num-gpus", type=int, default=100)
+    ap.add_argument("--engine", choices=ENGINES, default="python")
+    ap.add_argument(
+        "--cluster", default=None,
+        help=f"named scenario {sorted(CLUSTERS)} or spec string "
+             "'a100-80:50,a100-40:50'",
+    )
+    ap.add_argument(
+        "--policies", default=None,
+        help="comma list of registered non-defrag policies, or 'all' "
+             "(default: ff, mfi, mfi-queued)",
+    )
+    ap.add_argument("--mtbfs", default=None,
+                    help="comma list of MTBF values in slots "
+                         f"(default {','.join(f'{m:g}' for m in DEFAULT_MTBFS)})")
+    ap.add_argument("--mttr", type=float, default=10.0,
+                    help="mean slots a failed GPU stays down")
+    ap.add_argument("--load", type=float, default=1.1,
+                    help="offered load (above saturation so the queue and "
+                         "the fault path both matter)")
+    ap.add_argument("--wait-capacity", type=int, default=8,
+                    help="waiting-queue slots per cluster")
+    ap.add_argument("--wait-patience", type=int, default=16,
+                    help="max slots a request may wait before final reject")
+    ap.add_argument("--num-tenants", type=int, default=4,
+                    help="tenant ids sampled per arrival (fairness metric)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="re-queue budget for evicted workloads")
+    args = ap.parse_args()
+    mtbfs = (
+        tuple(float(m) for m in args.mtbfs.split(",") if m.strip())
+        if args.mtbfs else DEFAULT_MTBFS
+    )
+    main(runs=args.runs, num_gpus=args.num_gpus, engine=args.engine,
+         cluster=args.cluster, policies=args.policies, mtbfs=mtbfs,
+         mttr=args.mttr, load=args.load, wait_capacity=args.wait_capacity,
+         wait_patience=args.wait_patience, num_tenants=args.num_tenants,
+         max_retries=args.max_retries)

@@ -27,6 +27,7 @@ from __future__ import annotations
 
 from typing import Dict, Optional
 
+from repro.core.mig import FaultModel  # noqa: F401  (re-exported API)
 from repro.core.policy import (  # noqa: F401  (re-exported API)
     ENGINES,
     KEY_VOCABULARY,
@@ -102,6 +103,11 @@ def simulate(
         cfg = SimConfig(**cfg_kwargs)
     elif cfg_kwargs:
         raise ValueError("pass either cfg or SimConfig kwargs, not both")
+    if chunk_size is not None and chunk_size <= 0:
+        raise ValueError(
+            f"chunk_size must be a positive event count (or None for the "
+            f"monolithic scan), got {chunk_size}"
+        )
     if engine == "batched":
         return run_batched(
             spec, cfg, runs=runs, use_kernel=use_kernel,

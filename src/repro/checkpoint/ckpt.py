@@ -3,11 +3,20 @@
 Leaves are stored under '/'-joined key paths; restore validates structure
 against a template pytree, so a checkpoint from a different architecture
 or stale config fails loudly instead of silently mis-loading.
+
+Saves are crash-safe: the payload is written to a temp file and moved into
+place with ``os.replace``, then the metadata sidecar (which records a
+SHA-256 of the payload) is committed the same way.  A missing sidecar
+therefore means the save never completed; a digest mismatch means the
+payload was corrupted or overwritten after the sidecar was committed.
+Both are surfaced as descriptive errors on load.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
+import os
 from pathlib import Path
 from typing import Any, Dict, Tuple
 
@@ -31,20 +40,59 @@ def _flatten(tree) -> Dict[str, np.ndarray]:
     return flat
 
 
+def _payload_path(path: Path) -> Path:
+    # np.savez appends .npz when the name does not already end with it;
+    # mirror that so save and load agree on the final payload location.
+    return path if path.suffix == ".npz" else Path(str(path) + ".npz")
+
+
+def _sha256_file(path: Path) -> str:
+    digest = hashlib.sha256()
+    with open(path, "rb") as fh:
+        for block in iter(lambda: fh.read(1 << 20), b""):
+            digest.update(block)
+    return digest.hexdigest()
+
+
 def save_checkpoint(path, tree, step: int = 0, metadata: Dict[str, Any] | None = None):
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     flat = _flatten(tree)
-    np.savez(path, **flat)
-    meta = {"step": step, "keys": sorted(flat), **(metadata or {})}
-    path.with_suffix(".json").write_text(json.dumps(meta))
+    payload = _payload_path(path)
+    # The temp name keeps the .npz suffix so np.savez does not append another.
+    tmp = payload.with_name(payload.name + ".tmp.npz")
+    np.savez(tmp, **flat)
+    digest = _sha256_file(tmp)
+    os.replace(tmp, payload)  # atomic: readers see old payload or new, never partial
+    meta = {"step": step, "keys": sorted(flat), "sha256": digest, **(metadata or {})}
+    sidecar = path.with_suffix(".json")
+    meta_tmp = sidecar.with_name(sidecar.name + ".tmp")
+    meta_tmp.write_text(json.dumps(meta))
+    os.replace(meta_tmp, sidecar)  # sidecar lands last: it is the commit marker
 
 
 def load_checkpoint(path, template) -> Tuple[Any, int]:
     """Restore into the structure of ``template``; returns (tree, step)."""
     path = Path(path)
-    data = np.load(path if path.suffix == ".npz" else path.with_suffix(".npz"))
-    meta = json.loads(path.with_suffix(".json").read_text())
+    payload = _payload_path(path)
+    sidecar = path.with_suffix(".json")
+    if not sidecar.exists():
+        raise FileNotFoundError(
+            f"checkpoint sidecar {sidecar} is missing; the sidecar is written "
+            f"last, so an absent one means the save was interrupted before it "
+            f"committed — discard {payload} and fall back to an older checkpoint"
+        )
+    meta = json.loads(sidecar.read_text())
+    recorded = meta.get("sha256")
+    if recorded is not None:  # sidecars from before the digest existed load as-is
+        actual = _sha256_file(payload)
+        if actual != recorded:
+            raise ValueError(
+                f"checkpoint payload mismatch for {payload}: sha256 {actual} != "
+                f"recorded {recorded}; the payload is corrupt or was overwritten "
+                f"after the sidecar was committed"
+            )
+    data = np.load(payload)
     flat_t = _flatten(template)
     missing = set(flat_t) - set(data.files)
     extra = set(data.files) - set(flat_t)

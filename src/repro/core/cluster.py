@@ -131,19 +131,25 @@ class MFIDecision(NamedTuple):
 
 
 def placement_feasibility(
-    occ: jax.Array, profile_id: jax.Array, tables: DeviceTables = None
+    occ: jax.Array, profile_id: jax.Array, tables: DeviceTables = None,
+    gpu_ok: jax.Array = None,
 ) -> jax.Array:
     """(M, A) bool — anchors of ``profile_id`` whose window is fully free.
 
     Columns follow ``tables.profile_anchors[profile_id]`` (ascending anchor
-    order); padded anchor columns are always infeasible.
+    order); padded anchor columns are always infeasible.  ``gpu_ok`` is an
+    optional (M,) bool availability mask (False rows — e.g. failed GPUs —
+    are infeasible regardless of occupancy).
     """
     t = _DEFAULT_TABLES if tables is None else tables
     masks = t.profile_masks[profile_id]  # (A, S) int32
     valid = t.profile_valid[profile_id]  # (A,)
     occf = occ.astype(jnp.float32)
     overlap = occf @ masks.T.astype(jnp.float32)  # (M, A)
-    return (overlap == 0) & valid[None, :]
+    feasible = (overlap == 0) & valid[None, :]
+    if gpu_ok is not None:
+        feasible = feasible & gpu_ok[:, None]
+    return feasible
 
 
 def placement_delta_f(

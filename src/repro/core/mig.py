@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -329,6 +330,71 @@ class ClusterSpec:
 
 
 # ---------------------------------------------------------------------------
+# Fault model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Exponential GPU failure/recovery process in slot-time units.
+
+    Each GPU alternates up/down phases: up-phase lengths are drawn from
+    ``Exp(mtbf)`` and down-phases from ``Exp(mttr)``, with per-
+    :class:`DeviceModel` overrides keyed by model name.  The descriptor is
+    frozen/hashable so it can ride in jit-static configuration, and all
+    draws happen at presample time *after* the arrival/tenant draws — a
+    disabled fault model therefore leaves every existing event stream
+    byte-identical.
+
+    ``max_retries``/``backoff_base`` govern what happens to evicted (and
+    patience-overdue) workloads: attempt ``k`` waits ``backoff_base *
+    2**(k-1)`` slots before becoming eligible again, and a workload is
+    finally rejected only after ``max_retries`` re-queues (or when its
+    lease expires in the queue).
+    """
+
+    mtbf: float = 500.0
+    mttr: float = 20.0
+    per_model: Tuple[Tuple[str, Tuple[float, float]], ...] = ()
+    max_retries: int = 2
+    backoff_base: int = 2
+
+    def __post_init__(self):
+        for label, mtbf, mttr in (("", self.mtbf, self.mttr),) + tuple(
+            (f" for model {name!r}", pair[0], pair[1]) for name, pair in self.per_model
+        ):
+            if not (math.isfinite(mtbf) and mtbf > 0):
+                raise ValueError(
+                    f"FaultModel MTBF{label} must be a positive finite number "
+                    f"of slots, got {mtbf!r}"
+                )
+            if not (math.isfinite(mttr) and mttr > 0):
+                raise ValueError(
+                    f"FaultModel MTTR{label} must be a positive finite number "
+                    f"of slots, got {mttr!r}"
+                )
+        if self.max_retries < 0:
+            raise ValueError(
+                f"FaultModel max_retries must be >= 0, got {self.max_retries}"
+            )
+        if self.backoff_base < 1:
+            raise ValueError(
+                f"FaultModel backoff_base must be >= 1, got {self.backoff_base}"
+            )
+
+    def rates_for(self, model_name: str) -> Tuple[float, float]:
+        """(mtbf, mttr) for a device model, honouring per-model overrides."""
+        for name, pair in self.per_model:
+            if name == model_name:
+                return (float(pair[0]), float(pair[1]))
+        return (self.mtbf, self.mttr)
+
+    def backoff(self, attempt: int) -> int:
+        """Slots to wait before re-queue attempt ``attempt`` (1-based)."""
+        return self.backoff_base * 2 ** max(0, attempt - 1)
+
+
+# ---------------------------------------------------------------------------
 # Flattened A100-80GB placement table (module-level aliases, back-compat).
 # ---------------------------------------------------------------------------
 
@@ -366,6 +432,7 @@ class GPUState:
     def __init__(self, gpu_id: int = 0, model: DeviceModel = A100_80GB):
         self.gpu_id = gpu_id
         self.model = model
+        self.up = True  # a down GPU accepts no placements until recovered
         self.occupancy = np.zeros(model.num_mem_slices, dtype=np.int32)
         self.allocations: Dict[int, Allocation] = {}
 
@@ -393,6 +460,8 @@ class GPUState:
 
     def feasible_anchors(self, profile_id: int) -> List[int]:
         """Anchors where ``profile_id`` can be placed right now."""
+        if not self.up:
+            return []  # single choke point: down GPUs are infeasible everywhere
         prof = self.model.profiles[profile_id]
         out = []
         for anchor in prof.anchors:
@@ -498,6 +567,35 @@ class ClusterState:
 
     def gpu_of(self, workload_id: int) -> Optional[int]:
         return self._placement_of.get(workload_id)
+
+    # -- faults -------------------------------------------------------------
+    def up_mask(self) -> np.ndarray:
+        """(M,) bool — True for GPUs currently accepting placements."""
+        return np.array([g.up for g in self.gpus], dtype=bool)
+
+    def fail_gpu(self, gpu_id: int) -> List[int]:
+        """Take a GPU down, evicting every live allocation on it.
+
+        Returns the evicted workload ids (insertion order).  The slices are
+        released, so a down GPU reads as empty in every occupancy metric;
+        :meth:`GPUState.feasible_anchors` keeps it out of placement until
+        :meth:`recover_gpu`.
+        """
+        gpu = self.gpus[gpu_id]
+        if not gpu.up:
+            raise ValueError(f"GPU {gpu_id} is already down")
+        evicted = list(gpu.allocations)
+        for wid in evicted:
+            self.release(wid)
+        gpu.up = False
+        return evicted
+
+    def recover_gpu(self, gpu_id: int) -> None:
+        """Bring a failed GPU back into the placement tables (empty)."""
+        gpu = self.gpus[gpu_id]
+        if gpu.up:
+            raise ValueError(f"GPU {gpu_id} is already up")
+        gpu.up = True
 
     # -- metrics ------------------------------------------------------------
     @property

@@ -84,6 +84,12 @@ class SpecScheduler(Scheduler):
             occ = cluster.occupancy_matrix()
             gpu_ids, anchors, deltas = [], [], []
             for model, rows in cluster.spec.model_groups():
+                # down GPUs look empty in the occupancy matrix (their slices
+                # were released on failure), so they must be masked out here
+                # — the other enumeration paths go through feasible_anchors
+                rows = rows[[cluster.gpus[g].up for g in rows]]
+                if not len(rows):
+                    continue
                 g, a, d = mfi_candidates(
                     occ[rows][:, : model.num_mem_slices],
                     profile_id,
@@ -93,9 +99,14 @@ class SpecScheduler(Scheduler):
                 gpu_ids.append(rows[g])  # local -> global GPU ids
                 anchors.append(a)
                 deltas.append(d)
-            gpu_ids = np.concatenate(gpu_ids)
-            anchors = np.concatenate(anchors)
-            deltas = np.concatenate(deltas)
+            if gpu_ids:
+                gpu_ids = np.concatenate(gpu_ids)
+                anchors = np.concatenate(anchors)
+                deltas = np.concatenate(deltas)
+            else:
+                gpu_ids = np.empty(0, dtype=np.int64)
+                anchors = np.empty(0, dtype=np.int64)
+                deltas = np.empty(0)
         else:
             pairs = [
                 (g.gpu_id, a)

@@ -64,6 +64,7 @@ class Placement:
     anchor: int
     tenant: str = "default"
     priority: int = 0
+    patience: int = 0  # carried along so an eviction re-queues with it
 
 
 @dataclasses.dataclass
@@ -75,8 +76,10 @@ class QueueEntry:
     tenant: str
     priority: int
     patience: int   # max clock ticks it may wait before final rejection
-    arrival: int    # controller clock at submission
+    arrival: int    # controller clock at submission (reset on re-arm)
     seq: int        # submission order — final FIFO tie-break
+    tries: int = 0      # eviction re-queue attempts consumed (0 = fresh park)
+    ready_at: int = 0   # earliest clock this entry may dispatch (backoff)
 
 
 class AdmissionController:
@@ -102,6 +105,15 @@ class AdmissionController:
     collected with :meth:`drain_dispatched` / :meth:`drain_expired`.
     ``tenant_quotas`` caps concurrently placed workloads per tenant
     (requests over quota queue or reject without consulting the policy).
+
+    Fault handling: :meth:`fail_gpu` marks a GPU down — its running
+    workloads are evicted into the waiting queue with a retry budget
+    (``max_retries``) and exponential backoff (``backoff_base`` doubling
+    per attempt) — and :meth:`recover_gpu` brings it back (re-driving
+    admission).  Evicted entries past their patience re-arm with doubled
+    backoff while the retry budget lasts; exhausted ones are final losses,
+    surfaced via :meth:`drain_expired` and the ``evict_lost`` stat.
+    Fresh parked requests keep the plain patience-expiry semantics.
     """
 
     def __init__(
@@ -112,15 +124,36 @@ class AdmissionController:
         cluster_spec: Optional[mig.ClusterSpec] = None,
         queue_capacity: int = 64,
         tenant_quotas: Optional[Dict[str, int]] = None,
+        max_retries: int = 2,
+        backoff_base: int = 2,
     ):
+        if queue_capacity < 0:
+            raise ValueError(
+                f"queue_capacity must be >= 0, got {queue_capacity}"
+            )
+        if max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0 (eviction re-queue budget), "
+                f"got {max_retries}"
+            )
+        if backoff_base < 1:
+            raise ValueError(
+                f"backoff_base must be >= 1 (ticks before the first retry), "
+                f"got {backoff_base}"
+            )
         self.cluster = mig.ClusterState(num_gpus, spec=cluster_spec)
         self.scheduler: Scheduler = make_scheduler(policy, metric)
         self.placements: Dict[int, Placement] = {}
         self.queue: List[QueueEntry] = []
         self.queue_capacity = queue_capacity
         self.tenant_quotas = dict(tenant_quotas or {})
+        self.max_retries = max_retries
+        self.backoff_base = backoff_base
         self.accepted = 0
         self.rejected = 0
+        self.completed = 0
+        self.evictions = 0
+        self.evict_lost = 0
         self.clock = 0
         self._seq = 0
         self._active_by_tenant: Dict[str, int] = {}
@@ -129,6 +162,9 @@ class AdmissionController:
         self._waits: List[int] = []
         self._drained_dispatched: List[Placement] = []
         self._drained_expired: List[int] = []
+        self._evicted_at: Dict[int, int] = {}  # wid -> eviction clock
+        self._recovered = 0
+        self._ttrs: List[int] = []
 
     # -- queue ordering ------------------------------------------------------
 
@@ -184,8 +220,19 @@ class AdmissionController:
                 f"unknown MIG profile {profile!r} "
                 f"(valid: {', '.join(mig.PROFILE_NAMES)})"
             )
+        if priority < 0:
+            raise ValueError(
+                f"priority must be >= 0 (0 = most urgent), got {priority}"
+            )
+        if patience < 0:
+            raise ValueError(
+                f"patience must be >= 0 (clock ticks the request may wait; "
+                f"0 = accept-or-drop), got {patience}"
+            )
         self._tenant_submitted[tenant] = self._tenant_submitted.get(tenant, 0) + 1
-        placement = self._try_dispatch(workload_id, profile, tenant, priority)
+        placement = self._try_dispatch(
+            workload_id, profile, tenant, priority, patience
+        )
         if placement is not None:
             self._waits.append(0)
             return placement
@@ -194,6 +241,7 @@ class AdmissionController:
                 QueueEntry(
                     workload_id, profile, tenant, priority,
                     patience, self.clock, self._seq,
+                    ready_at=self.clock,
                 )
             )
             self._seq += 1
@@ -206,7 +254,12 @@ class AdmissionController:
         return self.submit(workload_id, profile)
 
     def _try_dispatch(
-        self, workload_id: int, profile: str, tenant: str, priority: int
+        self,
+        workload_id: int,
+        profile: str,
+        tenant: str,
+        priority: int,
+        patience: int = 0,
     ) -> Optional[Placement]:
         quota = self.tenant_quotas.get(tenant)
         if quota is not None and self._active_by_tenant.get(tenant, 0) >= quota:
@@ -225,11 +278,18 @@ class AdmissionController:
             )
         gpu, anchor = sel
         self.cluster.allocate(workload_id, pid, gpu, anchor)
-        placement = Placement(workload_id, profile, gpu, anchor, tenant, priority)
+        placement = Placement(
+            workload_id, profile, gpu, anchor, tenant, priority, patience
+        )
         self.placements[workload_id] = placement
-        self.accepted += 1
+        evicted_at = self._evicted_at.pop(workload_id, None)
+        if evicted_at is not None:  # an eviction re-admitting, not a new accept
+            self._recovered += 1
+            self._ttrs.append(self.clock - evicted_at)
+        else:
+            self.accepted += 1
+            self._tenant_accepted[tenant] = self._tenant_accepted.get(tenant, 0) + 1
         self._active_by_tenant[tenant] = self._active_by_tenant.get(tenant, 0) + 1
-        self._tenant_accepted[tenant] = self._tenant_accepted.get(tenant, 0) + 1
         return placement
 
     # -- queue progress ------------------------------------------------------
@@ -237,25 +297,49 @@ class AdmissionController:
     def _expire_overdue(self) -> None:
         keep: List[QueueEntry] = []
         for e in self.queue:
-            if self.clock - e.arrival > e.patience:
-                self.rejected += 1
-                self._drained_expired.append(e.workload_id)
-            else:
+            if self.clock - e.arrival <= e.patience:
                 keep.append(e)
+            elif 1 <= e.tries < self.max_retries:
+                # overdue eviction with retry budget left: re-arm with
+                # doubled backoff instead of expiring
+                e.tries += 1
+                e.arrival = self.clock
+                e.ready_at = self.clock + self._backoff(e.tries)
+                keep.append(e)
+            else:
+                if e.workload_id in self._evicted_at:
+                    # an eviction that never re-admitted — a final loss,
+                    # but not a (second) admission reject
+                    del self._evicted_at[e.workload_id]
+                    self.evict_lost += 1
+                else:
+                    self.rejected += 1
+                self._drained_expired.append(e.workload_id)
         self.queue = keep
 
+    def _backoff(self, attempt: int) -> int:
+        return self.backoff_base * 2 ** max(0, attempt - 1)
+
     def _readmit(self) -> None:
-        """Dispatch from the queue head until the first failure."""
+        """Dispatch from the queue head until the first failure.
+
+        The head is the queue-order minimum among entries whose backoff
+        expired (``ready_at <= clock``); entries still backing off are
+        skipped without breaking head-of-line order among the ready."""
         self._expire_overdue()
-        while self.queue:
+        while True:
             self.queue.sort(key=self._entry_key)
-            head = self.queue[0]
+            ready = [e for e in self.queue if e.ready_at <= self.clock]
+            if not ready:
+                break
+            head = ready[0]
             placement = self._try_dispatch(
-                head.workload_id, head.profile, head.tenant, head.priority
+                head.workload_id, head.profile, head.tenant, head.priority,
+                head.patience,
             )
             if placement is None:
                 break  # head-of-line blocking: later entries wait their turn
-            self.queue.pop(0)
+            self.queue.remove(head)
             self._waits.append(self.clock - head.arrival)
             self._drained_dispatched.append(placement)
 
@@ -273,6 +357,46 @@ class AdmissionController:
         placement = self.placements.pop(workload_id)
         self.cluster.release(workload_id)
         self._active_by_tenant[placement.tenant] -= 1
+        self.completed += 1
+        self._readmit()
+
+    # -- fault handling ------------------------------------------------------
+
+    def fail_gpu(self, gpu_id: int) -> List[int]:
+        """Mark a GPU failed; evict and re-queue its running workloads.
+
+        The GPU is masked out of placement until :meth:`recover_gpu`.
+        Each evicted workload re-enters the waiting queue with one retry
+        consumed and a ``backoff_base``-tick backoff (its patience floored
+        at the backoff so it survives to its first retry); when the retry
+        budget is zero or the queue is full it is a final loss, surfaced
+        via :meth:`drain_expired`.  Returns the evicted workload ids in
+        placement order.
+        """
+        wids = self.cluster.fail_gpu(gpu_id)
+        for wid in wids:
+            p = self.placements.pop(wid)
+            self._active_by_tenant[p.tenant] -= 1
+            self.evictions += 1
+            if self.max_retries >= 1 and len(self.queue) < self.queue_capacity:
+                self._evicted_at[wid] = self.clock
+                self.queue.append(
+                    QueueEntry(
+                        wid, p.profile, p.tenant, p.priority,
+                        patience=max(p.patience, self._backoff(1)),
+                        arrival=self.clock, seq=self._seq, tries=1,
+                        ready_at=self.clock + self._backoff(1),
+                    )
+                )
+                self._seq += 1
+            else:
+                self.evict_lost += 1
+                self._drained_expired.append(wid)
+        return wids
+
+    def recover_gpu(self, gpu_id: int) -> None:
+        """Bring a failed GPU back up and re-drive queue admission."""
+        self.cluster.recover_gpu(gpu_id)
         self._readmit()
 
     # -- drain buffers -------------------------------------------------------
@@ -299,7 +423,12 @@ class AdmissionController:
         """Finally reject every waiting entry (e.g. at shutdown, or when no
         running workload remains to ever free capacity)."""
         wids = [e.workload_id for e in self.queue]
-        self.rejected += len(wids)
+        for wid in wids:
+            if wid in self._evicted_at:  # flushed eviction: a final loss
+                del self._evicted_at[wid]
+                self.evict_lost += 1
+            else:
+                self.rejected += 1
         self._drained_expired.extend(wids)
         self.queue = []
         return wids
@@ -338,4 +467,22 @@ class AdmissionController:
             "wait_p50": float(np.percentile(waits, 50)) if waits.size else 0.0,
             "wait_p99": float(np.percentile(waits, 99)) if waits.size else 0.0,
             "fairness": jain_fairness(rates),
+            # fault/recovery metrics (all benign defaults when no GPU failed)
+            "goodput": (
+                self.completed / (self.completed + self.evict_lost)
+                if (self.completed + self.evict_lost) else 1.0
+            ),
+            "evictions": float(self.evictions),
+            "evict_lost": float(self.evict_lost),
+            "recovered_fraction": (
+                self._recovered / self.evictions if self.evictions else 1.0
+            ),
+            "ttr_p50": (
+                float(np.percentile(np.asarray(self._ttrs), 50))
+                if self._ttrs else 0.0
+            ),
+            "ttr_p99": (
+                float(np.percentile(np.asarray(self._ttrs), 99))
+                if self._ttrs else 0.0
+            ),
         }

@@ -64,6 +64,23 @@ class ServingEngine:
         )
         self._prefill = jax.jit(lambda p, b: model.prefill(p, b, cfg))
 
+    def fail_gpu(self, gpu_id: int) -> List[int]:
+        """Inject a GPU failure: evicted workloads re-queue in the admission
+        controller with backoff and re-admit (onto surviving GPUs, or the
+        failed one after :meth:`recover_gpu`) as capacity allows.  Returns
+        the evicted workload ids."""
+        return self.admission.fail_gpu(gpu_id)
+
+    def recover_gpu(self, gpu_id: int) -> None:
+        """Bring a previously failed GPU back into placement."""
+        self.admission.recover_gpu(gpu_id)
+
+    def _release(self, req: Request) -> None:
+        # an evicted request's slices are already gone — finishing its
+        # service then is not an error, just nothing left to release
+        if req.request_id in self.admission.placements:
+            self.admission.release(req.request_id)
+
     def _serve_wave(self, wave: List[Request]) -> None:
         """Prefill + decode one wave of admitted requests together."""
         n = len(wave)
@@ -81,7 +98,7 @@ class ServingEngine:
         for i in list(alive):  # zero-token requests finish at prefill
             if wave[i].max_new_tokens <= 0:
                 wave[i].finished = True
-                self.admission.release(wave[i].request_id)
+                self._release(wave[i])
                 alive.remove(i)
         if not alive:
             return
@@ -91,7 +108,7 @@ class ServingEngine:
                 wave[i].output.append(int(tokens[i]))
                 if len(wave[i].output) >= wave[i].max_new_tokens:
                     wave[i].finished = True
-                    self.admission.release(wave[i].request_id)
+                    self._release(wave[i])
                     alive.remove(i)
             if not alive:
                 break
@@ -101,7 +118,7 @@ class ServingEngine:
             tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         for i in alive:  # hit max_len
             wave[i].finished = True
-            self.admission.release(wave[i].request_id)
+            self._release(wave[i])
 
     def run(self, requests: List[Request]) -> Dict:
         """Serve the request list in admission-controlled waves.
@@ -151,11 +168,15 @@ class ServingEngine:
             else:
                 self.admission.tick()
             for placement in self.admission.drain_dispatched():
-                req = by_id[placement.workload_id]
+                req = by_id.get(placement.workload_id)
+                if req is None or req.finished:  # e.g. a re-admitted eviction
+                    continue
                 req.admitted = True
                 ready.append(req)
             for wid in self.admission.drain_expired():
-                req = by_id[wid]
+                req = by_id.get(wid)
+                if req is None or req.finished:
+                    continue
                 req.rejected = True
                 req.finished = True
                 req.output = []

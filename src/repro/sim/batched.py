@@ -214,14 +214,23 @@ class Protocol:
     compiles the wait-ring stages into the step (the ``steady-queued``
     protocol: rejected arrivals park in a fixed-capacity wait ring with a
     patience budget and re-enter selection ahead of later arrivals — see
-    :meth:`EngineCore._stage_wait`).  Instances are frozen/hashable so a
-    protocol doubles as a jit static argument.
+    :meth:`EngineCore._stage_wait`).  ``faulted`` (implies ``queued``)
+    additionally compiles the fault stage: presampled GPU fail/recover
+    lanes mask GPUs out of feasibility, evict their live expiry-ring
+    entries into the wait ring, and patience overruns re-arm with
+    exponential backoff instead of dropping — up to ``fault_retries``
+    re-queues of ``fault_backoff * 2**(k-1)`` slots each (see
+    :meth:`EngineCore._stage_fault` and ``docs/FAULTS.md``).  Instances
+    are frozen/hashable so a protocol doubles as a jit static argument.
     """
 
     name: str
     boundary_metrics: bool
     post_metrics: bool
     queued: bool = False
+    faulted: bool = False
+    fault_retries: int = 2
+    fault_backoff: int = 2
 
 
 PROTOCOLS: Dict[str, Protocol] = {
@@ -229,6 +238,10 @@ PROTOCOLS: Dict[str, Protocol] = {
     "cumulative": Protocol("cumulative", boundary_metrics=False, post_metrics=True),
     "steady-queued": Protocol(
         "steady-queued", boundary_metrics=True, post_metrics=False, queued=True
+    ),
+    "steady-faulted": Protocol(
+        "steady-faulted", boundary_metrics=True, post_metrics=False,
+        queued=True, faulted=True,
     ),
 }
 
@@ -758,14 +771,16 @@ def _feasibility(base: jax.Array, rows: jax.Array, valid: jax.Array) -> jax.Arra
 
 
 def _select(spec, base, free, f, metric, tables, midx, vg, pid, cursor,
-            delta_fn=None, select_fn=None):
+            delta_fn=None, select_fn=None, gpu_ok=None):
     """Shared decision path: returns (gpu, aidx, ok) for one request.
 
     ``delta_fn`` (from :func:`make_delta_fn`) routes the ΔF table through
     the fused Pallas kernel; ``select_fn`` (from :func:`make_select_fn`)
     goes further and runs the whole stage — ΔF *and* the masked
     lexicographic argmin — in fused per-model launches; ``None`` uses the
-    pure-jnp lowering.
+    pure-jnp lowering.  ``gpu_ok`` is an optional (M,) bool availability
+    mask (faulted protocols: down GPUs are infeasible regardless of
+    occupancy); ``None`` compiles the mask out entirely.
     """
     if select_fn is not None:
         return select_fn(base, free, f, pid)
@@ -774,6 +789,8 @@ def _select(spec, base, free, f, metric, tables, midx, vg, pid, cursor,
     mem_g = tables.profile_mem[midx, pid]  # (M,)
     anchors_g = tables.profile_anchors[midx, pid]  # (M, A), -1 where padded
     feasible = _feasibility(base, rows, valid)
+    if gpu_ok is not None:
+        feasible = feasible & gpu_ok[:, None]
     if spec.requires_delta_f:  # ΔF table only for specs whose keys use it
         if delta_fn is not None:
             delta = delta_fn(base, free, f, pid)
@@ -1511,6 +1528,17 @@ class ReplicaState(NamedTuple):
     wait_ten: jax.Array = None   # (Q,) int32 — tenant id
     wait_eidx: jax.Array = None  # (Q,) int32 — original event index
     ev: jax.Array = None         # () int32 — running event index (queued only)
+    # faulted protocols only (else None): GPU availability, the extra ring
+    # planes that make every live entry fully re-queueable on eviction, and
+    # the wait ring's retry/backoff bookkeeping.  Appended after ``ev`` so
+    # non-faulted pytrees (checkpoints included) are structurally unchanged.
+    up: jax.Array = None         # (M,) bool — GPU accepting placements
+    ring_end: jax.Array = None   # (K+2, E) int32 — entry's absolute lease deadline
+    ring_eidx: jax.Array = None  # (K+2, E) int32 — entry's original event index
+    ring_prio: jax.Array = None  # (K+2, E) int32 — entry's priority class
+    ring_ten: jax.Array = None   # (K+2, E) int32 — entry's tenant id
+    wait_try: jax.Array = None   # (Q,) int32 — re-queue attempts so far
+    wait_rdy: jax.Array = None   # (Q,) int32 — earliest admission slot (backoff)
 
 
 class EventStream(NamedTuple):
@@ -1529,6 +1557,11 @@ class EventStream(NamedTuple):
     prio: np.ndarray = None    # int32 — priority class of the arrival
     tenant: np.ndarray = None  # int32 — tenant id of the arrival
     wlive: np.ndarray = None   # bool — real event (not padding/sentinel)
+    # faulted protocols only (None otherwise; shipped to device).  Lanes are
+    # (E_max, R, M) and set on the *first* event of each slot only, so the
+    # fault stage applies each slot's fail/recover set exactly once.
+    fail: np.ndarray = None     # bool — GPU m fails at this slot
+    recover: np.ndarray = None  # bool — GPU m recovers at this slot
 
 
 class EventMeta(NamedTuple):
@@ -1572,6 +1605,10 @@ class EventTrace(NamedTuple):
     wadm_eidx: jax.Array = None    # original event index of the wait-admit (-1 none)
     wadm_gpu: jax.Array = None     # wait-admit's chosen GPU (-1 none)
     wadm_aidx: jax.Array = None    # wait-admit's chosen anchor index (-1 none)
+    # faulted protocols only: the fault stage's eviction accounting
+    evicted: jax.Array = None      # int32 — live entries evicted by failures
+    evict_lost: jax.Array = None   # int32 — evictions dropped (ring full / no budget)
+    evict_esum: jax.Array = None   # int32 — Σ original event indexes of evictions
 
 
 def _init_state(
@@ -1582,12 +1619,18 @@ def _init_state(
     track_occ: bool,
     track_alloc: bool,
     wait_slots: int = 0,
+    faulted: bool = False,
 ) -> ReplicaState:
     num_gpus = midx.shape[0]
     s = tables.W.shape[2]
     n = tables.W.shape[1]
     q = wait_slots
     zq = jnp.zeros((q,), jnp.int32) if q else None
+    # faulted protocols track every live entry's full identity on the ring
+    # (demand class via the defrag planes + the deadline/priority/tenant/
+    # event-index planes below) so an eviction can re-queue it losslessly
+    track_alloc = track_alloc or faulted
+    zr = (lambda: jnp.zeros((ring_rows, ring_cols), jnp.int32)) if faulted else (lambda: None)
     return ReplicaState(
         occ=jnp.zeros((num_gpus, s), jnp.int32) if track_occ else None,
         base=jnp.zeros((num_gpus, n), jnp.float32),
@@ -1607,6 +1650,13 @@ def _init_state(
         wait_ten=zq,
         wait_eidx=zq,
         ev=jnp.int32(0) if q else None,
+        up=jnp.ones((num_gpus,), bool) if faulted else None,
+        ring_end=zr(),
+        ring_eidx=zr(),
+        ring_prio=zr(),
+        ring_ten=zr(),
+        wait_try=zq if faulted else None,
+        wait_rdy=zq if faulted else None,
     )
 
 
@@ -1669,12 +1719,91 @@ class EngineCore:
             occ=occ, base=base, free=free, f=f, ring_mask=ring_mask
         )
 
+    def _btable(self):
+        """Static backoff lookup: ``btable[k]`` is the wait before becoming
+        eligible again after re-queue attempt ``k`` (1-based; exponential
+        ``fault_backoff * 2**(k-1)``, clamped at the retry budget)."""
+        b, r = self.protocol.fault_backoff, self.protocol.fault_retries
+        return jnp.asarray(
+            [b * 2 ** max(0, k - 1) for k in range(r + 2)], jnp.int32
+        )
+
+    def _stage_fault(self, st: ReplicaState, fail_v, rec_v, t):
+        """Faulted protocols: apply this slot's GPU fail/recover lanes.
+
+        Runs after the expire drain (a lease ending the very slot its GPU
+        dies still completes) and before the wait stage (evictions are
+        eligible for re-admission only after their backoff).  A failing GPU
+        is cleared wholesale — every live allocation is a ring entry, so
+        zeroing its occupancy/base/free/f equals subtracting each eviction
+        one by one (a down GPU reads empty and inactive in every metric,
+        ``F = 0`` exactly like the initial state) — and masked out of
+        feasibility via ``up`` until its recover lane.  Evicted entries are
+        re-queued into the wait ring in flat ``(row, col)`` ring order,
+        filling free slots in ascending index order; whatever exceeds the
+        free capacity (or everything, when the retry budget is zero) is a
+        final loss, counted in the trace.  Returns
+        ``(st, evicted, evict_lost, evict_esum)``.
+        """
+        up = (st.up | rec_v) & ~fail_v  # presampling alternates fail/recover
+        rows, cols = st.ring_gpu.shape
+        live = st.ring_mask.sum(axis=-1) > 0          # (K+2, E)
+        evict = fail_v[st.ring_gpu] & live            # stale slots: live=False
+        fi = fail_v.astype(jnp.int32)
+        occ = None if st.occ is None else st.occ * (1 - fi)[:, None]
+        base = jnp.where(fail_v[:, None], 0.0, st.base)
+        free = jnp.where(
+            fail_v, self.tables.slices[self.midx].astype(jnp.int32), st.free
+        )
+        f = jnp.where(fail_v, 0.0, st.f)
+        ring_mask = st.ring_mask * (1 - evict.astype(jnp.int32))[:, :, None]
+        st = st._replace(
+            up=up, occ=occ, base=base, free=free, f=f, ring_mask=ring_mask
+        )
+
+        ev_flat = evict.reshape(-1)                   # flat (row, col) order
+        n_ev = ev_flat.sum().astype(jnp.int32)
+        esum = (st.ring_eidx.reshape(-1) * ev_flat.astype(jnp.int32)).sum()
+        if self.protocol.fault_retries < 1:
+            return st, n_ev, n_ev, esum  # no retry budget: immediate losses
+
+        q = st.wait_pid.shape[0]
+        c = ev_flat.shape[0]
+        rank = jnp.cumsum(ev_flat.astype(jnp.int32)) - 1
+        freeslot = st.wait_pid < 0
+        nfree = freeslot.sum()
+        slot_order = jnp.argsort(~freeslot)  # stable: free slots, ascending
+        can = ev_flat & (rank < nfree)
+        # rank-based scatter: eviction #k lands in the k-th free wait slot;
+        # overflow targets index q and is dropped (a final loss)
+        tgt = jnp.where(can, slot_order[jnp.clip(rank, 0, q - 1)], q)
+        idx = jnp.arange(c, dtype=jnp.int32)
+        tcol = jnp.broadcast_to(t, (c,)).astype(jnp.int32)
+
+        def put(arr, v):
+            return arr.at[tgt].set(v, mode="drop")
+
+        st = st._replace(
+            wait_pid=put(st.wait_pid, st.ring_pid.reshape(-1)),
+            wait_arr=put(st.wait_arr, tcol),
+            wait_end=put(st.wait_end, st.ring_end.reshape(-1)),
+            wait_row=put(st.wait_row, idx // cols),
+            wait_col=put(st.wait_col, idx % cols),
+            wait_prio=put(st.wait_prio, st.ring_prio.reshape(-1)),
+            wait_ten=put(st.wait_ten, st.ring_ten.reshape(-1)),
+            wait_eidx=put(st.wait_eidx, st.ring_eidx.reshape(-1)),
+            wait_try=put(st.wait_try, jnp.ones((c,), jnp.int32)),
+            wait_rdy=put(st.wait_rdy, tcol + self._btable()[1]),
+        )
+        lost = n_ev - can.sum().astype(jnp.int32)
+        return st, n_ev, lost, esum
+
     def _stage_select(self, st: ReplicaState, pid_c, valid):
         """Place (or reject) the arrival; ``pid == -1`` lanes are no-ops."""
         gpu, aidx, ok = _select(
             self.spec, st.base, st.free, st.f, self.metric, self.tables,
             self.midx, self.vg, pid_c, st.rr, delta_fn=self.delta_fn,
-            select_fn=self.select_fn,
+            select_fn=self.select_fn, gpu_ok=st.up,
         )
         return gpu, aidx, ok & valid
 
@@ -1716,10 +1845,14 @@ class EngineCore:
 
     def _stage_commit(
         self, st: ReplicaState, pid_c, gpu, aidx, ok, exp_row, exp_col,
-        mig_res: Optional[MigrationResult],
+        mig_res: Optional[MigrationResult], meta=None,
     ):
         """Commit the accepted placement: occupancy/window/free updates, the
-        expiry-ring insert, the rescore of touched rows, the cursor."""
+        expiry-ring insert, the rescore of touched rows, the cursor.
+
+        ``meta`` (faulted protocols: ``(end, prio, ten, eidx)``) writes the
+        entry's identity into the extra ring planes so a later eviction can
+        re-queue it losslessly; ``None`` compiles those writes out."""
         tables, midx, vg = self.tables, self.midx, self.vg
         oki = ok.astype(jnp.int32)
         gpu_c = jnp.where(ok, gpu, 0).astype(jnp.int32)
@@ -1761,10 +1894,26 @@ class EngineCore:
             ring_aidx = ring_aidx.at[exp_row, exp_col].set(
                 jnp.where(ok, aidx.astype(jnp.int32), ring_aidx[exp_row, exp_col])
             )
+        ring_end, ring_eidx = st.ring_end, st.ring_eidx
+        ring_prio, ring_ten = st.ring_prio, st.ring_ten
+        if meta is not None and ring_end is not None:
+            end_m, prio_m, ten_m, eidx_m = meta
+
+            def put_meta(plane, v):
+                return plane.at[exp_row, exp_col].set(
+                    jnp.where(ok, v.astype(jnp.int32), plane[exp_row, exp_col])
+                )
+
+            ring_end = put_meta(ring_end, end_m)
+            ring_prio = put_meta(ring_prio, prio_m)
+            ring_ten = put_meta(ring_ten, ten_m)
+            ring_eidx = put_meta(ring_eidx, eidx_m)
         return st._replace(
             occ=occ, base=base, free=free, f=f, rr=rr,
             ring_gpu=ring_gpu, ring_mask=ring_mask,
             ring_pid=ring_pid, ring_aidx=ring_aidx,
+            ring_end=ring_end, ring_eidx=ring_eidx,
+            ring_prio=ring_prio, ring_ten=ring_ten,
         )
 
     def _stage_wait(self, st: ReplicaState, t, wlive):
@@ -1787,10 +1936,35 @@ class EngineCore:
         """
         present = st.wait_pid >= 0
         age = t - st.wait_arr
-        drop = wlive & ((st.wait_end <= t) | (age > self.wait_patience))
-        keep = present & ~drop
-
-        mask = keep & wlive
+        if self.protocol.faulted:
+            # SLA-aware retry: a patience overrun re-arms with exponential
+            # backoff while the retry budget and the lease allow it, and
+            # becomes a final drop only past the budget.  Entries inside
+            # their backoff window (``wait_rdy > t``) are skipped as head.
+            overdue = wlive & present & (age > self.wait_patience)
+            rearm = (
+                overdue
+                & (st.wait_try < self.protocol.fault_retries)
+                & (st.wait_end > t)
+            )
+            drop = wlive & present & ((st.wait_end <= t) | (overdue & ~rearm))
+            keep = present & ~drop
+            try_new = jnp.where(rearm, st.wait_try + 1, st.wait_try)
+            btable = self._btable()
+            st = st._replace(
+                wait_arr=jnp.where(rearm, t, st.wait_arr),
+                wait_try=try_new,
+                wait_rdy=jnp.where(
+                    rearm,
+                    t + btable[jnp.clip(try_new, 0, btable.shape[0] - 1)],
+                    st.wait_rdy,
+                ),
+            )
+            mask = keep & wlive & (st.wait_rdy <= t)
+        else:
+            drop = wlive & ((st.wait_end <= t) | (age > self.wait_patience))
+            keep = present & ~drop
+            mask = keep & wlive
         for key in queue_order(self.spec):
             base_k = key_base(key)
             if base_k == "priority":
@@ -1811,11 +1985,16 @@ class EngineCore:
         gpu, aidx, sel_ok = _select(
             self.spec, st.base, st.free, st.f, self.metric, self.tables,
             self.midx, self.vg, pid_w, st.rr, delta_fn=self.delta_fn,
-            select_fn=self.select_fn,
+            select_fn=self.select_fn, gpu_ok=st.up,
         )
         ok_w = sel_ok & head
+        meta_w = (
+            (st.wait_end[j], st.wait_prio[j], st.wait_ten[j], st.wait_eidx[j])
+            if self.protocol.faulted else None
+        )
         st = self._stage_commit(
-            st, pid_w, gpu, aidx, ok_w, st.wait_row[j], st.wait_col[j], None
+            st, pid_w, gpu, aidx, ok_w, st.wait_row[j], st.wait_col[j], None,
+            meta=meta_w,
         )
         wait_pid = jnp.where(keep, st.wait_pid, jnp.int32(-1))
         wait_pid = wait_pid.at[j].set(jnp.where(ok_w, jnp.int32(-1), wait_pid[j]))
@@ -1834,7 +2013,7 @@ class EngineCore:
         def put(arr, v):
             return arr.at[j].set(jnp.where(can, v, arr[j]))
 
-        return st._replace(
+        st = st._replace(
             wait_pid=put(st.wait_pid, pid_c),
             wait_arr=put(st.wait_arr, t),
             wait_end=put(st.wait_end, end),
@@ -1844,6 +2023,12 @@ class EngineCore:
             wait_ten=put(st.wait_ten, ten),
             wait_eidx=put(st.wait_eidx, st.ev),
         )
+        if self.protocol.faulted:  # fresh parks: no retries used, no backoff
+            st = st._replace(
+                wait_try=put(st.wait_try, jnp.int32(0)),
+                wait_rdy=put(st.wait_rdy, t),
+            )
+        return st
 
     def _stage_post_measure(self, st: ReplicaState):
         """Post-commit metrics (the cumulative protocol samples every event)."""
@@ -1851,7 +2036,10 @@ class EngineCore:
 
     # -- the composed step ---------------------------------------------------
     def step(self, st: ReplicaState, x):
-        if self.protocol.queued:
+        if self.protocol.faulted:
+            (pid, exp_row, exp_col, drain_row, new_slot,
+             t, end, prio, ten, wlive, fail_v, rec_v) = x
+        elif self.protocol.queued:
             (pid, exp_row, exp_col, drain_row, new_slot,
              t, end, prio, ten, wlive) = x
         else:
@@ -1862,6 +2050,12 @@ class EngineCore:
             frag, free_sum, active = self._stage_boundary_measure(st)
 
         st = self._stage_expire(st, drain_row, new_slot)
+
+        evicted = evict_lost = evict_esum = None
+        if self.protocol.faulted:  # after expire: same-slot completions win
+            st, evicted, evict_lost, evict_esum = self._stage_fault(
+                st, fail_v, rec_v, t
+            )
 
         wadm_eidx = wadm_gpu = wadm_aidx = parked = None
         if self.protocol.queued:  # waiting requests admit ahead of the arrival
@@ -1879,7 +2073,10 @@ class EngineCore:
                 st, pid_c, valid, gpu, aidx, ok
             )
 
-        st = self._stage_commit(st, pid_c, gpu, aidx, ok, exp_row, exp_col, mig_res)
+        meta = (end, prio, ten, st.ev) if self.protocol.faulted else None
+        st = self._stage_commit(
+            st, pid_c, gpu, aidx, ok, exp_row, exp_col, mig_res, meta=meta
+        )
 
         if self.protocol.queued:
             parked = valid & ~ok & wlive & (st.wait_pid < 0).any()
@@ -1920,6 +2117,9 @@ class EngineCore:
             wadm_eidx=wadm_eidx,
             wadm_gpu=wadm_gpu,
             wadm_aidx=wadm_aidx,
+            evicted=evicted,
+            evict_lost=evict_lost,
+            evict_esum=evict_esum,
         )
         return st, trace
 
@@ -1981,7 +2181,9 @@ def _build_core(
             frag_fn = make_frag_fn(metric, True, kspec.models[0])
         if pspec.requires_delta_f:
             delta_fn = make_delta_fn(kspec, metric)
-        if pspec.fused_argmin:  # ΔF-free fusable specs (bf-bi/wf-bi) included
+        # the fused select kernel cannot see the faulted protocol's up-mask,
+        # so faulted runs keep the jnp lowering (frag/ΔF kernels still apply)
+        if pspec.fused_argmin and not proto.faulted:
             select_fn = make_select_fn(kspec, pspec, metric)
             if pspec.defrag:
                 migrate_fn = make_migrate_fn(kspec, pspec, metric)
@@ -2005,6 +2207,7 @@ def _broadcast_init(
             core.tables, core.midx, ring_rows, ring_cols,
             track_occ=core.frag_fn is not None, track_alloc=core.spec.defrag,
             wait_slots=wait_slots if core.protocol.queued else 0,
+            faulted=core.protocol.faulted,
         ),
     )
 
@@ -2018,6 +2221,8 @@ def _scan_xs(events: EventStream, proto: Protocol):
     xs = (events.pid, events.exp_row, events.exp_col, events.drain_row, events.new_slot)
     if proto.queued:  # the wait stage's clock + per-arrival queue attributes
         xs = xs + (events.slot, events.end, events.prio, events.tenant, events.wlive)
+    if proto.faulted:  # per-slot GPU fail/recover lanes, (E, R, M)
+        xs = xs + (events.fail, events.recover)
     return xs
 
 
@@ -2094,8 +2299,46 @@ def _ring_columns(
     return exp_col, ring_cols
 
 
+def presample_fault_slots(
+    spec: mig.ClusterSpec,
+    fault_model: "mig.FaultModel",
+    runs: int,
+    total_slots: int,
+    rng: np.random.Generator,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Draw per-GPU alternating fail/recover slot tables.
+
+    Returns ``(fail, recover)`` as ``(runs, total_slots, M)`` bools.  Each
+    GPU alternates ``Exp(mtbf)`` up-phases and ``Exp(mttr)`` down-phases
+    (per-model rates via :meth:`FaultModel.rates_for`); phase lengths are
+    ceiled to at least one slot, so fail and recover marks strictly
+    alternate and never share a slot.  Draw order is fixed (replica-major,
+    then GPU, then alternating phases) so a seeded rng reproduces the
+    tables exactly.
+    """
+    m = spec.num_gpus
+    rates = [fault_model.rates_for(spec.model_of(g).name) for g in range(m)]
+    fail = np.zeros((runs, total_slots, m), dtype=bool)
+    recover = np.zeros((runs, total_slots, m), dtype=bool)
+    for r in range(runs):
+        for g in range(m):
+            mtbf, mttr = rates[g]
+            t = 0.0
+            while True:
+                t += max(1.0, np.ceil(rng.exponential(mtbf)))
+                if t >= total_slots:
+                    break
+                fail[r, int(t), g] = True
+                t += max(1.0, np.ceil(rng.exponential(mttr)))
+                if t >= total_slots:
+                    break
+                recover[r, int(t), g] = True
+    return fail, recover
+
+
 def presample_arrivals(
-    cfg: SimConfig, runs: int, seed=None, queued: bool = False
+    cfg: SimConfig, runs: int, seed=None, queued: bool = False,
+    fault_model: "mig.FaultModel" = None,
 ) -> Tuple[EventStream, EventMeta, int, int]:
     """Build per-replica steady-protocol event streams on host.
 
@@ -2110,7 +2353,11 @@ def presample_arrivals(
     the live-event mask).  The tenant/priority draws happen strictly
     *after* the shared arrival sampling, so the arrival process — and
     every non-queued field — is byte-identical with ``queued=False``
-    (golden steady traces are unaffected).
+    (golden steady traces are unaffected).  ``fault_model`` (faulted
+    protocols; implies ``queued``) additionally draws per-GPU fail/recover
+    lanes — strictly after every other draw, preserving the same
+    byte-identity guarantee — and attaches each slot's lane set to the
+    first event of that slot.
     """
     rng = np.random.default_rng(cfg.seed if seed is None else seed)
     probs = request_probs(cfg)
@@ -2165,6 +2412,22 @@ def presample_arrivals(
         wlive = slot < total_slots  # padding/sentinel lanes have no clock
         tenant, prio, wlive = tenant.T, prio.T, wlive.T
 
+    fail = recover = None
+    if fault_model is not None:  # drawn strictly after every other draw
+        spec = cfg.spec()
+        fail_s, rec_s = presample_fault_slots(
+            spec, fault_model, runs, total_slots, rng
+        )
+        m = spec.num_gpus
+        fail = np.zeros((runs, e_max, m), dtype=bool)
+        recover = np.zeros((runs, e_max, m), dtype=bool)
+        first = new_slot & (slot < total_slots)  # sentinel/padding carry none
+        rr_idx, ee_idx = np.nonzero(first)
+        fail[rr_idx, ee_idx] = fail_s[rr_idx, slot[rr_idx, ee_idx]]
+        recover[rr_idx, ee_idx] = rec_s[rr_idx, slot[rr_idx, ee_idx]]
+        fail = np.ascontiguousarray(fail.transpose(1, 0, 2))
+        recover = np.ascontiguousarray(recover.transpose(1, 0, 2))
+
     events = EventStream(
         pid=pid.T,
         exp_row=exp_row.T,
@@ -2178,6 +2441,8 @@ def presample_arrivals(
         prio=prio,
         tenant=tenant,
         wlive=wlive,
+        fail=fail,
+        recover=recover,
     )
     meta = EventMeta(slot=slot.T, end=end.T)
     return events, meta, ring_k + 2, ring_cols
@@ -2624,16 +2889,31 @@ def run_batched(
             f"policy {policy.name!r} opts out of Pallas kernel lowering "
             "(PolicySpec.kernel_lowering=False); run with use_kernel=False"
         )
+    if chunk_size is not None and chunk_size <= 0:
+        raise ValueError(f"chunk_size must be positive, got {chunk_size}")
     if chunk_size is None and (stream is not None or stats is not None):
         raise ValueError(
             "stream/stats are chunked-driver knobs; pass chunk_size as well"
+        )
+    if proto.faulted:
+        if cfg.fault_model is None:
+            raise ValueError(
+                f"protocol {proto.name!r} needs SimConfig.fault_model "
+                "(a repro.core.mig.FaultModel describing MTBF/MTTR)"
+            )
+        # retry/backoff ride in the (static, hashable) protocol descriptor
+        proto = dataclasses.replace(
+            proto,
+            fault_retries=cfg.fault_model.max_retries,
+            fault_backoff=cfg.fault_model.backoff_base,
         )
 
     if proto.name == "cumulative":
         events, _, ring_rows, ring_cols = presample_cumulative(cfg, runs)
     else:
         events, _, ring_rows, ring_cols = presample_arrivals(
-            cfg, runs, queued=proto.queued
+            cfg, runs, queued=proto.queued,
+            fault_model=cfg.fault_model if proto.faulted else None,
         )
     common = dict(
         policy=policy,
@@ -2664,6 +2944,8 @@ def run_batched(
         _, trace = jax.device_get(_simulate(events_dev, **common))
     if proto.name == "cumulative":
         return _aggregate_cumulative(events, trace, spec, runs, cfg)
+    if proto.faulted:
+        return _aggregate_faulted(events, trace, spec, runs)
     if proto.queued:
         return _aggregate_queued(events, trace, spec, runs)
     return aggregate(events, trace, spec, runs)
@@ -2782,6 +3064,94 @@ def _aggregate_queued(
         "fairness": float(fair.mean()),
         "queue_admits": float((late_ok & meas).sum(axis=0).mean()),
     }
+
+
+def _aggregate_faulted(
+    events: EventStream, trace: EventTrace, spec, runs: int
+) -> Dict[str, float]:
+    """Reduce faulted-protocol traces: the queued keys plus failure stats.
+
+    The extra keys come from a host-side walk of the decision trace against
+    the stream's fail lanes, reconstructing each workload's lifecycle
+    (admit → maybe evict → maybe re-admit → complete):
+
+    * ``goodput`` — fraction of measured arrivals whose lease *completed*
+      (reached its end slot, or was still running at the horizon); an
+      admitted-then-evicted-never-re-admitted workload counts against it;
+    * ``evictions`` / ``evictions_lost`` — mean per-replica eviction count
+      and the subset dropped outright (wait ring full or zero retry budget);
+    * ``recovered_fraction`` — evictions later re-admitted / evictions
+      (1.0 when nothing was evicted);
+    * ``ttr_p50`` / ``ttr_p99`` — per-replica percentiles of the
+      time-to-recovery (slots between eviction and re-admission), averaged.
+    """
+    if isinstance(spec, int):
+        spec = _default_spec(spec)
+    out = _aggregate_queued(events, trace, spec, runs)
+
+    slot = np.asarray(events.slot)
+    end = np.asarray(events.end)
+    fail = np.asarray(events.fail)      # (E, R, M)
+    wlive = np.asarray(events.wlive)
+    new_slot = np.asarray(events.new_slot)
+    meas = np.asarray(events.measuring)
+    ok = np.asarray(trace.ok)
+    gpu_tr = np.asarray(trace.gpu)
+    wadm = np.asarray(trace.wadm_eidx)
+    wgpu = np.asarray(trace.wadm_gpu)
+    e_max = ok.shape[0]
+
+    goodput = np.zeros(runs)
+    recovered = np.zeros(runs)
+    ttr_p50 = np.zeros(runs)
+    ttr_p99 = np.zeros(runs)
+    for r in range(runs):
+        alive = {}    # original event index -> (gpu, end slot)
+        done = set()  # leases that ran to completion
+        pending = {}  # eviction awaiting re-admission -> eviction slot
+        n_evict = 0
+        n_recovered = 0
+        ttrs = []
+        for e in range(e_max):
+            if not wlive[e, r]:
+                continue
+            t = slot[e, r]
+            if new_slot[e, r]:
+                # expire before faults — the device order: a lease ending
+                # the very slot its GPU dies still completes
+                for k in [k for k, (_, kend) in alive.items() if kend <= t]:
+                    del alive[k]
+                    done.add(k)
+                downs = set(np.flatnonzero(fail[e, r]).tolist())
+                if downs:
+                    for k in [k for k, (g, _) in alive.items() if g in downs]:
+                        del alive[k]
+                        pending[k] = t
+                        n_evict += 1
+            a = int(wadm[e, r])
+            if a >= 0:
+                alive[a] = (int(wgpu[e, r]), int(end[a, r]))
+                if a in pending:
+                    n_recovered += 1
+                    ttrs.append(t - pending.pop(a))
+            if ok[e, r]:
+                alive[e] = (int(gpu_tr[e, r]), int(end[e, r]))
+        done.update(alive)  # still running at the horizon: never disrupted
+        m = meas[:, r]
+        goodput[r] = sum(1 for k in done if m[k]) / max(1, int(m.sum()))
+        recovered[r] = (n_recovered / n_evict) if n_evict else 1.0
+        ttr_p50[r] = np.percentile(ttrs, 50) if ttrs else 0.0
+        ttr_p99[r] = np.percentile(ttrs, 99) if ttrs else 0.0
+
+    out.update(
+        goodput=float(goodput.mean()),
+        evictions=float(np.asarray(trace.evicted).sum(axis=0).mean()),
+        evictions_lost=float(np.asarray(trace.evict_lost).sum(axis=0).mean()),
+        recovered_fraction=float(recovered.mean()),
+        ttr_p50=float(ttr_p50.mean()),
+        ttr_p99=float(ttr_p99.mean()),
+    )
+    return out
 
 
 def _aggregate_cumulative(

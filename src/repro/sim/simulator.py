@@ -30,9 +30,18 @@ calibration analysis):
   engine's wait-ring stage uses (:mod:`repro.sim.batched`).  Adds p50/p99
   wait and Jain per-tenant fairness to the reported metrics.
 
+* ``"steady-faulted"`` (beyond-paper): the queued protocol under GPU
+  failures.  Each GPU alternates exponential up/down phases
+  (:class:`repro.core.mig.FaultModel` — per-model MTBF/MTTR); a failure
+  evicts the GPU's running workloads into the wait queue with a retry
+  budget and exponential backoff, and masks the GPU out of placement
+  until it recovers.  Adds goodput, eviction counts, recovered fraction
+  and time-to-recovery percentiles — see docs/FAULTS.md.
+
 Metrics (paper §VI): acceptance rate, allocated workloads, active GPUs,
 resource utilization (allocated slices), fragmentation severity (mean F);
-the queued protocol adds wait percentiles and per-tenant fairness.
+the queued protocol adds wait percentiles and per-tenant fairness, the
+faulted protocol the failure metrics above.
 """
 
 from __future__ import annotations
@@ -53,7 +62,7 @@ from repro.sim import distributions
 class SimConfig:
     num_gpus: int = 100
     distribution: str = "uniform"
-    protocol: str = "steady"  # "steady" | "cumulative" | "steady-queued"
+    protocol: str = "steady"  # "steady" | "cumulative" | "steady-queued" | "steady-faulted"
     metric: str = "blocked"   # fragmentation variant (MFI driver + severity metric)
     seed: int = 0
     # heterogeneous fleets: a ClusterSpec overrides num_gpus (the paper's
@@ -76,10 +85,31 @@ class SimConfig:
     num_priorities: int = 2    # priority classes (0 = most urgent)
     wait_capacity: int = 8     # waiting-queue slots per cluster
     wait_patience: int = 16    # max slots a request may wait before final reject
+    # steady-faulted protocol: GPU failure/recovery process (required there,
+    # ignored elsewhere)
+    fault_model: Optional[mig.FaultModel] = None
 
     def __post_init__(self):
         if self.cluster_spec is not None:
             self.num_gpus = self.cluster_spec.num_gpus
+        if self.wait_patience < 0:
+            raise ValueError(
+                f"wait_patience must be >= 0 (slots a request may wait), "
+                f"got {self.wait_patience}"
+            )
+        if self.wait_capacity < 0:
+            raise ValueError(
+                f"wait_capacity must be >= 0 (queue slots), got {self.wait_capacity}"
+            )
+        if self.num_priorities < 1:
+            raise ValueError(
+                f"num_priorities must be >= 1 (priority classes are sampled "
+                f"from [0, num_priorities)), got {self.num_priorities}"
+            )
+        if self.num_tenants < 1:
+            raise ValueError(
+                f"num_tenants must be >= 1, got {self.num_tenants}"
+            )
 
     def spec(self) -> mig.ClusterSpec:
         """The cluster spec (defaulting to the paper's homogeneous fleet)."""
@@ -105,6 +135,12 @@ class SimResult:
     wait_p99: Optional[float] = None   # p99 wait of accepted requests (slots)
     fairness: Optional[float] = None   # Jain index over per-tenant acceptance
     queue_admits: Optional[float] = None  # accepted after waiting (count)
+    # steady-faulted protocol only (None otherwise):
+    goodput: Optional[float] = None    # measured arrivals whose lease completed
+    evictions: Optional[float] = None  # workloads torn off failing GPUs (count)
+    recovered_fraction: Optional[float] = None  # evictions later re-admitted
+    ttr_p50: Optional[float] = None    # median slots from eviction to re-admit
+    ttr_p99: Optional[float] = None    # p99 slots from eviction to re-admit
 
 
 def request_probs(cfg: SimConfig) -> np.ndarray:
@@ -194,6 +230,8 @@ def run_simulation(scheduler: Scheduler, cfg: SimConfig, seed: Optional[int] = N
         return _run_cumulative(scheduler, cfg, cfg.seed if seed is None else seed)
     elif cfg.protocol == "steady-queued":
         return _run_steady_queued(scheduler, cfg, cfg.seed if seed is None else seed)
+    elif cfg.protocol == "steady-faulted":
+        return _run_steady_faulted(scheduler, cfg, cfg.seed if seed is None else seed)
     raise ValueError(f"unknown protocol {cfg.protocol!r}")
 
 
@@ -370,6 +408,218 @@ def _run_steady_queued(scheduler: Scheduler, cfg: SimConfig, seed: int) -> SimRe
     )
 
 
+def _fault_schedule(
+    spec: mig.ClusterSpec,
+    fault_model: mig.FaultModel,
+    horizon: int,
+    rng: np.random.Generator,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-GPU alternating fail/recover marks, ``(horizon, M)`` bools each.
+
+    Mirrors :func:`repro.sim.batched.presample_fault_slots` for one run:
+    exponential up/down phases (per-model rates), phase lengths ceiled to
+    at least one slot so marks strictly alternate; first failure at slot
+    >= 1.
+    """
+    m = spec.num_gpus
+    fail = np.zeros((horizon, m), dtype=bool)
+    recover = np.zeros((horizon, m), dtype=bool)
+    for g in range(m):
+        mtbf, mttr = fault_model.rates_for(spec.model_of(g).name)
+        t = 0.0
+        down = False
+        while True:
+            t += max(1.0, float(np.ceil(rng.exponential(mttr if down else mtbf))))
+            if t >= horizon:
+                break
+            (recover if down else fail)[int(t), g] = True
+            down = not down
+    return fail, recover
+
+
+def _run_steady_faulted(scheduler: Scheduler, cfg: SimConfig, seed: int) -> SimResult:
+    """Steady-queued loop under GPU failures (protocol ``steady-faulted``).
+
+    Every slot, after releases: recover lanes come back up, then failing
+    GPUs evict their running workloads (each re-queued with ``tries=1``
+    and an exponential-backoff ready slot while the retry budget and the
+    queue's capacity allow — otherwise a final loss) and stay masked out
+    of placement until recovery.  Queue entries past the patience budget
+    re-arm with doubled backoff while ``tries < max_retries`` and the
+    lease allows, else drop.  The fault schedule is drawn from its own
+    seeded stream so the arrival process is identical to the queued
+    protocol's at the same seed.
+    """
+    if cfg.fault_model is None:
+        raise ValueError(
+            "protocol 'steady-faulted' needs SimConfig.fault_model "
+            "(a repro.core.mig.FaultModel describing MTBF/MTTR)"
+        )
+    fm = cfg.fault_model
+    rng = np.random.default_rng(seed)
+    scheduler.reset()
+    spec = cfg.spec()
+    cap = spec.total_mem_slices
+    probs = request_probs(cfg)
+    T, warm, meas, rate = steady_params(cfg)
+    order = queue_order(scheduler.spec) if hasattr(scheduler, "spec") else DEFAULT_QUEUE_ORDER
+    horizon = warm + meas
+    fail_marks, rec_marks = _fault_schedule(
+        spec, fm, horizon, np.random.default_rng(seed + 77003)
+    )
+
+    cluster = mig.ClusterState(spec=spec)
+    expiry: List = []
+    queue: List[Dict] = []
+    running: Dict[int, Dict] = {}  # wid -> entry, for eviction bookkeeping
+    wid = 0
+    arr = acc = 0
+    rejects = np.zeros(mig.NUM_PROFILES)
+    arrivals = np.zeros(mig.NUM_PROFILES)
+    util_s = gpus_s = frag_s = 0.0
+    nsamp = 0
+    waits: List[float] = []
+    queue_admits = 0
+    tenant_arr = np.zeros(cfg.num_tenants)
+    tenant_acc = np.zeros(cfg.num_tenants)
+    n_evict = recovered = lost_meas = 0
+    ttrs: List[float] = []
+
+    def reject(entry):
+        # evicted entries were already counted as accepted arrivals — their
+        # failure to re-admit is a goodput loss, not a (second) reject
+        if entry["measuring"] and not entry.get("counted"):
+            rejects[entry["pid"]] += 1
+
+    def final_loss(entry):
+        # an eviction that will never re-admit: the workload was counted
+        # as accepted but its lease did not complete — goodput loss
+        nonlocal lost_meas
+        if entry["measuring"] and entry.get("counted"):
+            lost_meas += 1
+
+    def dispatch(entry, sel, t):
+        nonlocal acc, queue_admits, recovered
+        cluster.allocate(entry["wid"], entry["pid"], *sel)
+        heapq.heappush(expiry, (entry["end"], entry["wid"]))
+        running[entry["wid"]] = entry
+        evicted_at = entry.pop("evicted_at", None)
+        if evicted_at is not None:
+            recovered += 1
+            ttrs.append(float(t - evicted_at))
+        if entry["measuring"] and not entry.get("counted"):
+            acc += 1
+            tenant_acc[entry["tenant"]] += 1
+            waits.append(float(t - entry["arr0"]))
+            if t > entry["arr0"]:
+                queue_admits += 1
+        entry["counted"] = True
+
+    for t in range(horizon):
+        while expiry and expiry[0][0] <= t:
+            _, w = heapq.heappop(expiry)
+            if w in running:  # evicted leases stay in the heap; skip them
+                cluster.release(w)
+                del running[w]
+        for g in np.flatnonzero(rec_marks[t]):
+            cluster.recover_gpu(int(g))
+        for g in np.flatnonzero(fail_marks[t]):
+            for w in cluster.fail_gpu(int(g)):
+                entry = running.pop(w)
+                n_evict += 1
+                if fm.max_retries >= 1 and len(queue) < cfg.wait_capacity:
+                    entry["arr"] = t
+                    entry["tries"] = 1
+                    entry["rdy"] = t + fm.backoff(1)
+                    entry["evicted_at"] = t
+                    queue.append(entry)
+                else:
+                    final_loss(entry)
+        # prune / re-arm, then drain ready entries in queue order until
+        # the head no longer fits
+        kept: List[Dict] = []
+        for entry in queue:
+            if t - entry["arr"] > cfg.wait_patience:
+                if entry.get("tries", 0) < fm.max_retries and entry["end"] > t:
+                    entry["arr"] = t
+                    entry["tries"] = entry.get("tries", 0) + 1
+                    entry["rdy"] = t + fm.backoff(entry["tries"])
+                    kept.append(entry)
+                else:
+                    reject(entry)
+                    final_loss(entry)
+            elif entry["end"] <= t:
+                reject(entry)
+                final_loss(entry)
+            else:
+                kept.append(entry)
+        queue = kept
+        queue.sort(key=_queue_sort_key(order, t))
+        while True:
+            ready = [e for e in queue if e.get("rdy", 0) <= t]
+            if not ready:
+                break
+            sel = scheduler.select(cluster, ready[0]["pid"])
+            if sel is None:
+                break
+            queue.remove(ready[0])
+            dispatch(ready[0], sel, t)
+        for _ in range(rng.poisson(rate)):
+            pid = int(distributions.sample_profile_probs(probs, 1, rng)[0])
+            tenant = int(rng.integers(0, max(1, cfg.num_tenants)))
+            prio = int(rng.integers(0, max(1, cfg.num_priorities)))
+            measuring = t >= warm
+            if measuring:
+                arr += 1
+                arrivals[pid] += 1
+                tenant_arr[tenant] += 1
+            entry = {
+                "wid": wid, "pid": pid, "tenant": tenant, "prio": prio,
+                "arr": t, "arr0": t, "end": t + int(rng.integers(1, T + 1)),
+                "measuring": measuring, "seq": wid, "tries": 0, "rdy": t,
+            }
+            sel = scheduler.select(cluster, pid)
+            if sel is not None:
+                dispatch(entry, sel, t)
+            elif cfg.wait_patience > 0 and len(queue) < cfg.wait_capacity:
+                queue.append(entry)
+            else:
+                reject(entry)
+            wid += 1
+        if t >= warm and (t - warm) % SAMPLE_EVERY == 0:
+            util_s += cluster.used_mem_slices / cap
+            gpus_s += cluster.active_gpus
+            frag_s += fragmentation.cluster_fragmentation(
+                cluster.occupancy_matrix(), cfg.metric, spec=spec
+            )
+            nsamp += 1
+
+    for entry in queue:  # still waiting at horizon end
+        reject(entry)
+        if entry.get("evicted_at") is not None:
+            final_loss(entry)
+
+    rates = [tenant_acc[k] / tenant_arr[k] for k in range(cfg.num_tenants) if tenant_arr[k] > 0]
+    return SimResult(
+        acceptance_rate=acc / max(arr, 1),
+        allocated_workloads=float(acc),
+        active_gpus=gpus_s / max(nsamp, 1),
+        utilization=util_s / max(nsamp, 1),
+        frag_severity=frag_s / max(nsamp, 1),
+        rejects_by_profile=rejects,
+        arrivals_by_profile=arrivals,
+        wait_p50=float(np.percentile(waits, 50)) if waits else 0.0,
+        wait_p99=float(np.percentile(waits, 99)) if waits else 0.0,
+        fairness=jain_fairness(rates),
+        queue_admits=float(queue_admits),
+        goodput=(acc - lost_meas) / max(arr, 1),
+        evictions=float(n_evict),
+        recovered_fraction=(recovered / n_evict) if n_evict else 1.0,
+        ttr_p50=float(np.percentile(ttrs, 50)) if ttrs else 0.0,
+        ttr_p99=float(np.percentile(ttrs, 99)) if ttrs else 0.0,
+    )
+
+
 def _run_cumulative(scheduler: Scheduler, cfg: SimConfig, seed: int) -> SimResult:
     rng = np.random.default_rng(seed)
     scheduler.reset()
@@ -458,6 +708,11 @@ def run_many(scheduler_name: PolicyLike, cfg: SimConfig, runs: int = 100) -> Dic
     keys = ("acceptance_rate", "allocated_workloads", "active_gpus", "utilization", "frag_severity")
     if cfg.protocol == "steady-queued":
         keys = keys + ("wait_p50", "wait_p99", "fairness", "queue_admits")
+    elif cfg.protocol == "steady-faulted":
+        keys = keys + (
+            "wait_p50", "wait_p99", "fairness", "queue_admits",
+            "goodput", "evictions", "recovered_fraction", "ttr_p50", "ttr_p99",
+        )
     acc = {k: 0.0 for k in keys}
     rej = np.zeros(mig.NUM_PROFILES)
     arrp = np.zeros(mig.NUM_PROFILES)

@@ -1,0 +1,606 @@
+"""Fault-injection and recovery subsystem.
+
+The ``steady-faulted`` protocol overlays an exponential per-GPU
+fail/recover process (:class:`repro.core.mig.FaultModel`) on the queued
+engine: a failing GPU is masked from feasibility, its running leases are
+evicted in one pass and re-queued with a retry budget and exponential
+backoff, and recovery restores the GPU to placement.  These tests pin
+
+  * construction-time validation everywhere a bad knob can enter
+    (FaultModel, SimConfig, api.simulate, AdmissionController.submit);
+  * byte-identity of every pre-existing event stream when faults are off
+    (fault draws happen strictly after all other rng draws);
+  * per-event parity of the batched device traces against an independent
+    host reference (:func:`repro.sim.replay.faulted_host_decisions`) on
+    homogeneous and mixed fleets, plus pinned golden SHA-256 hashes;
+  * the serving-layer fail/recover/backoff loop and its fault stats;
+  * crash-safe checkpoints: payload digests verified on load, and a
+    SIGKILLed chunked run resuming bit-for-bit from its last checkpoint.
+"""
+
+import dataclasses
+import hashlib
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import api
+from repro.core import mig
+from repro.checkpoint import ckpt
+from repro.serving.admission import AdmissionController
+from repro.sim import SimConfig, batched, replay
+from repro.sim.simulator import run_many
+
+from test_engine_core import MIXED
+
+#: the fault process every golden/parity test below runs under — hot enough
+#: (MTBF 60 slots on a ~200-slot horizon) that evictions, re-queues and
+#: recoveries are all actually exercised
+FM = mig.FaultModel(mtbf=60.0, mttr=10.0)
+
+
+def _sim_faulted(policy, cfg, spec=None, runs=3, fault_model=FM):
+    events, meta, rr, rc = batched.presample_arrivals(
+        cfg, runs=runs, queued=True, fault_model=fault_model
+    )
+    kw = {}
+    if spec is not None:
+        kw = dict(
+            midx=jnp.asarray(spec.model_index), tables=batched.spec_tables(spec)
+        )
+    proto = dataclasses.replace(
+        batched.resolve_protocol("steady-faulted"),
+        fault_retries=fault_model.max_retries,
+        fault_backoff=fault_model.backoff_base,
+    )
+    final, trace = jax.device_get(
+        batched._simulate(
+            jax.tree.map(
+                lambda x: jnp.asarray(x) if x is not None else None, events
+            ),
+            policy=policy,
+            metric=cfg.metric,
+            num_gpus=cfg.num_gpus,
+            ring_rows=rr,
+            ring_cols=rc,
+            use_kernel=False,
+            protocol=proto,
+            wait_slots=cfg.wait_capacity,
+            wait_patience=cfg.wait_patience,
+            **kw,
+        )
+    )
+    return events, meta, trace, final
+
+
+#: (tag -> configuration) for the faulted golden hashes and parity tests
+FAULTED_GOLDEN = {
+    "homog": (lambda: SimConfig(num_gpus=5, offered_load=1.2, seed=7), None, "mfi"),
+    "mixed": (
+        lambda: SimConfig(cluster_spec=MIXED, offered_load=1.1, seed=9),
+        MIXED,
+        "mfi-queued",
+    ),
+}
+
+#: decision-trace hashes of the faulted protocol at introduction — eviction,
+#: backoff re-queue and recovery must stay bit-for-bit reproducible
+GOLDEN_FAULTED_TRACE_HASHES = {
+    "homog": "abb15f38d863b0c6ce819b7bb452235f163bf35e876e944c1df4c51e4deaad97",
+    "mixed": "1bf958443af4abdbe75e50c4ac1e026875e84b3bbddd2658800f8b7f9079f7fe",
+}
+
+
+def _faulted_hash(trace):
+    h = hashlib.sha256()
+    for a in (
+        trace.ok, trace.gpu, trace.aidx, trace.parked, trace.wadm_eidx,
+        trace.wadm_gpu, trace.wadm_aidx, trace.evicted, trace.evict_lost,
+        trace.evict_esum, trace.free_sum, trace.active, trace.frag,
+    ):
+        h.update(np.ascontiguousarray(np.asarray(a)).tobytes())
+    return h.hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# Construction-time validation
+# ---------------------------------------------------------------------------
+
+
+class TestFaultModelValidation:
+    def test_defaults_and_backoff_schedule(self):
+        fm = mig.FaultModel()
+        assert fm.rates_for("A100-80GB") == (fm.mtbf, fm.mttr)
+        assert [fm.backoff(k) for k in (1, 2, 3)] == [2, 4, 8]
+
+    def test_per_model_override(self):
+        fm = mig.FaultModel(per_model=(("H100-96GB", (50.0, 5.0)),))
+        assert fm.rates_for("H100-96GB") == (50.0, 5.0)
+        assert fm.rates_for("A100-80GB") == (fm.mtbf, fm.mttr)
+
+    @pytest.mark.parametrize(
+        "kw,match",
+        [
+            (dict(mtbf=0.0), "MTBF"),
+            (dict(mtbf=float("inf")), "MTBF"),
+            (dict(mttr=-1.0), "MTTR"),
+            (dict(mttr=float("nan")), "MTTR"),
+            (dict(per_model=(("A100-80GB", (0.0, 5.0)),)), "A100-80GB"),
+            (dict(per_model=(("A100-80GB", (5.0, -2.0)),)), "A100-80GB"),
+            (dict(max_retries=-1), "max_retries"),
+            (dict(backoff_base=0), "backoff_base"),
+        ],
+    )
+    def test_rejects_bad_knobs(self, kw, match):
+        with pytest.raises(ValueError, match=match):
+            mig.FaultModel(**kw)
+
+    @pytest.mark.parametrize(
+        "kw,match",
+        [
+            (dict(wait_patience=-1), "wait_patience"),
+            (dict(wait_capacity=-2), "wait_capacity"),
+            (dict(num_priorities=0), "num_priorities"),
+            (dict(num_tenants=0), "num_tenants"),
+        ],
+    )
+    def test_simconfig_rejects_bad_knobs(self, kw, match):
+        with pytest.raises(ValueError, match=match):
+            SimConfig(num_gpus=3, **kw)
+
+    @pytest.mark.parametrize("chunk_size", [0, -5])
+    def test_api_rejects_nonpositive_chunk_size(self, chunk_size):
+        with pytest.raises(ValueError, match="chunk_size"):
+            api.simulate(
+                "mfi", engine="batched", runs=1, num_gpus=3,
+                offered_load=1.0, seed=1, chunk_size=chunk_size,
+            )
+
+    def test_faultmodel_reexported_from_api(self):
+        assert api.FaultModel is mig.FaultModel
+
+    def test_faulted_protocol_requires_fault_model(self):
+        cfg = SimConfig(num_gpus=3, offered_load=1.0, seed=1,
+                        protocol="steady-faulted")
+        with pytest.raises(ValueError, match="fault_model"):
+            batched.run_batched("mfi", cfg, runs=2)
+        with pytest.raises(ValueError, match="fault_model"):
+            run_many("mfi", cfg, runs=1)
+
+
+# ---------------------------------------------------------------------------
+# Stream byte-identity: fault draws ride strictly after every other draw
+# ---------------------------------------------------------------------------
+
+
+class TestFaultStreams:
+    def test_queued_stream_unchanged_by_fault_draws(self):
+        """With a fault model the shared lanes must stay byte-identical to
+        the plain queued stream — every pre-existing golden stays valid."""
+        cfg = SimConfig(num_gpus=5, offered_load=1.2, seed=7)
+        ev_q, meta_q, rr_q, rc_q = batched.presample_arrivals(
+            cfg, runs=3, queued=True
+        )
+        ev_f, meta_f, rr_f, rc_f = batched.presample_arrivals(
+            cfg, runs=3, queued=True, fault_model=FM
+        )
+        assert (rr_q, rc_q) == (rr_f, rc_f)
+        for name in type(ev_q)._fields:
+            if name in ("fail", "recover"):
+                continue
+            a, b = getattr(ev_q, name), getattr(ev_f, name)
+            assert (a is None) == (b is None), name
+            if a is not None:
+                np.testing.assert_array_equal(a, b, err_msg=name)
+        assert ev_q.fail is None and ev_q.recover is None
+        assert ev_f.fail.any() and ev_f.recover.any()
+
+    def test_fault_lanes_alternate_per_gpu(self):
+        """Per GPU the fail/recover marks strictly alternate starting with
+        a failure, and never share a slot."""
+        spec = mig.ClusterSpec(((mig.A100_80GB, 4),))
+        rng = np.random.default_rng(0)
+        fail, recover = batched.presample_fault_slots(spec, FM, 2, 400, rng)
+        assert not (fail & recover).any()
+        for r in range(2):
+            for g in range(4):
+                marks = [
+                    (t, "f" if fail[r, t, g] else "r")
+                    for t in range(400)
+                    if fail[r, t, g] or recover[r, t, g]
+                ]
+                assert marks, "fault process drew no events in 400 slots"
+                kinds = [k for _, k in marks]
+                assert kinds[0] == "f"
+                assert all(a != b for a, b in zip(kinds, kinds[1:]))
+
+    def test_fault_lanes_live_on_first_event_of_slot(self):
+        cfg = SimConfig(num_gpus=5, offered_load=1.2, seed=7)
+        ev, *_ = batched.presample_arrivals(
+            cfg, runs=3, queued=True, fault_model=FM
+        )
+        marked = ev.fail.any(axis=-1) | ev.recover.any(axis=-1)
+        e, r = np.nonzero(marked)
+        # a marked event is the first of its slot: its predecessor (if any)
+        # sits in an earlier slot
+        inner = e > 0
+        assert (ev.slot[e[inner] - 1, r[inner]] < ev.slot[e[inner], r[inner]]).all()
+
+
+# ---------------------------------------------------------------------------
+# Batched engine: protocol, goldens, and device<->host parity
+# ---------------------------------------------------------------------------
+
+
+class TestFaultedEngine:
+    def test_protocol_registered(self):
+        proto = batched.resolve_protocol("steady-faulted")
+        assert proto.faulted and proto.queued
+        assert not batched.resolve_protocol("steady-queued").faulted
+
+    @pytest.mark.parametrize("tag", sorted(GOLDEN_FAULTED_TRACE_HASHES))
+    def test_faulted_decision_traces_hash_identically(self, tag):
+        cfg_fn, spec, policy = FAULTED_GOLDEN[tag]
+        _, _, trace, _ = _sim_faulted(policy, cfg_fn(), spec)
+        assert np.asarray(trace.evicted).sum() > 0, "no evictions exercised"
+        assert _faulted_hash(trace) == GOLDEN_FAULTED_TRACE_HASHES[tag]
+
+    @pytest.mark.parametrize("tag", sorted(FAULTED_GOLDEN))
+    def test_device_trace_matches_host_reference(self, tag):
+        """Every per-event decision — admissions, parks, wait-ring
+        admissions, evictions, capacity losses and the evicted-id checksum
+        — must match an independent host replay of the same stream."""
+        cfg_fn, spec, policy = FAULTED_GOLDEN[tag]
+        cfg = cfg_fn()
+        events, meta, trace, _ = _sim_faulted(policy, cfg, spec)
+        ref = replay.faulted_host_decisions(
+            events, meta, policy, cfg.num_gpus, metric=cfg.metric, spec=spec,
+            capacity=cfg.wait_capacity, patience=cfg.wait_patience,
+            max_retries=FM.max_retries, backoff_base=FM.backoff_base,
+        )
+        assert ref.evicted.sum() > 0, "no evictions exercised"
+        for name in (
+            "ok", "parked", "wadm_eidx", "evicted", "evict_lost", "evict_esum"
+        ):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(trace, name)), getattr(ref, name),
+                err_msg=name,
+            )
+        ok = ref.ok
+        np.testing.assert_array_equal(np.asarray(trace.gpu)[ok], ref.gpu[ok])
+        adm = ref.wadm_eidx >= 0
+        assert adm.sum() > 0, "no wait-ring admissions exercised"
+        np.testing.assert_array_equal(
+            np.asarray(trace.wadm_gpu)[adm], ref.wadm_gpu[adm]
+        )
+        # device records anchor *indices*; the host reference records anchor
+        # values — compare through the spec's placement tables
+        cs = spec if spec is not None else mig.ClusterSpec(
+            ((mig.A100_80GB, cfg.num_gpus),)
+        )
+        gpu = np.asarray(trace.gpu)
+        aidx = np.asarray(trace.aidx)
+        for e, r in np.argwhere(ok):
+            m = cs.model_of(int(gpu[e, r]))
+            anchor = m.profiles[int(events.pid[e, r])].anchors[int(aidx[e, r])]
+            assert anchor == ref.anchor[e, r], (e, r)
+
+    def test_run_batched_reports_fault_stats(self):
+        cfg = SimConfig(
+            num_gpus=5, offered_load=1.2, seed=7,
+            protocol="steady-faulted", fault_model=FM,
+        )
+        out = batched.run_batched("mfi", cfg, runs=2)
+        for key in (
+            "goodput", "evictions", "evictions_lost", "recovered_fraction",
+            "ttr_p50", "ttr_p99",
+        ):
+            assert key in out, key
+        assert out["evictions"] > 0
+        assert 0.0 <= out["goodput"] <= 1.0
+        assert 0.0 <= out["recovered_fraction"] <= 1.0
+        # completing everything that was admitted is impossible under this
+        # fault rate, so goodput sits strictly below the acceptance rate
+        assert out["goodput"] < out["acceptance_rate"]
+
+    def test_fault_free_model_matches_queued_protocol(self):
+        """An (effectively) fault-free model must reproduce the queued
+        protocol's decisions exactly — the fault stages are inert no-ops."""
+        cfg = SimConfig(num_gpus=5, offered_load=1.2, seed=7)
+        calm = mig.FaultModel(mtbf=1e6, mttr=1.0)
+        _, _, faulted, _ = _sim_faulted("mfi", cfg, fault_model=calm)
+        assert np.asarray(faulted.evicted).sum() == 0
+        ev, meta, rr, rc = batched.presample_arrivals(cfg, runs=3, queued=True)
+        _, queued = jax.device_get(
+            batched._simulate(
+                jax.tree.map(
+                    lambda x: jnp.asarray(x) if x is not None else None, ev
+                ),
+                policy="mfi", metric=cfg.metric, num_gpus=cfg.num_gpus,
+                ring_rows=rr, ring_cols=rc, use_kernel=False,
+                protocol="steady-queued", wait_slots=cfg.wait_capacity,
+                wait_patience=cfg.wait_patience,
+            )
+        )
+        for name in ("ok", "gpu", "aidx", "parked", "wadm_eidx", "wadm_gpu"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(faulted, name)),
+                np.asarray(getattr(queued, name)),
+                err_msg=name,
+            )
+
+
+# ---------------------------------------------------------------------------
+# Host cluster + python runner
+# ---------------------------------------------------------------------------
+
+
+class TestHostFaults:
+    def test_cluster_fail_recover_roundtrip(self):
+        p3g = mig.PROFILE_NAMES.index("3g.40gb")
+        p2g = mig.PROFILE_NAMES.index("2g.20gb")
+        cl = mig.ClusterState(2)
+        cl.allocate(1, p3g, 0, 0)
+        cl.allocate(2, p2g, 0, 4)
+        evicted = cl.fail_gpu(0)
+        assert evicted == [1, 2]
+        assert not cl.gpus[0].up
+        assert cl.up_mask().tolist() == [False, True]
+        assert cl.gpu_of(1) is None and cl.gpu_of(2) is None
+        assert cl.gpus[0].feasible_anchors(p2g) == []
+        with pytest.raises(ValueError, match="already down"):
+            cl.fail_gpu(0)
+        cl.recover_gpu(0)
+        assert cl.gpus[0].up
+        # fully free again: the 7g profile fits
+        assert cl.gpus[0].feasible_anchors(0) == [0]
+        with pytest.raises(ValueError, match="already up"):
+            cl.recover_gpu(0)
+
+    def test_run_many_faulted_keys_and_ranges(self):
+        cfg = SimConfig(
+            num_gpus=5, offered_load=1.2, seed=7,
+            protocol="steady-faulted", fault_model=FM,
+        )
+        out = run_many("mfi", cfg, runs=3)
+        for key in (
+            "goodput", "evictions", "recovered_fraction", "ttr_p50", "ttr_p99"
+        ):
+            assert key in out, key
+        assert out["evictions"] > 0
+        assert 0.0 <= out["goodput"] <= 1.0
+        assert 0.0 <= out["recovered_fraction"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Serving layer: AdmissionController fail/recover/backoff
+# ---------------------------------------------------------------------------
+
+
+class TestServingFaults:
+    def test_fail_evicts_and_requeues_with_backoff(self):
+        ac = AdmissionController(2, policy="mfi", queue_capacity=4)
+        p1 = ac.submit(1, "3g.40gb", patience=8)
+        p2 = ac.submit(2, "3g.40gb", patience=8)
+        assert p1.gpu == p2.gpu == 0  # MFI packs both onto GPU 0
+        evicted = ac.fail_gpu(0)
+        assert evicted == [1, 2]
+        assert not ac.placements and ac.queue_depth == 2
+        assert ac.drain_dispatched() == []  # backoff: not eligible yet
+        ac.tick()
+        ac.tick()  # backoff_base=2 ticks -> eligible, GPU 1 takes both
+        redone = {p.workload_id: p.gpu for p in ac.drain_dispatched()}
+        assert redone == {1: 1, 2: 1}
+        st = ac.stats()
+        assert st["evictions"] == 2 and st["evict_lost"] == 0
+        assert st["recovered_fraction"] == 1.0
+        assert st["ttr_p50"] == 2.0  # both re-admitted two ticks after failure
+
+    def test_recovery_readmits_when_only_the_failed_gpu_has_room(self):
+        ac = AdmissionController(2, policy="mfi", queue_capacity=4)
+        ac.submit(1, "7g.80gb", patience=8)
+        ac.submit(2, "7g.80gb", patience=8)
+        g2 = ac.placements[2].gpu
+        assert ac.fail_gpu(g2) == [2]
+        ac.tick()
+        ac.tick()
+        assert ac.drain_dispatched() == []  # ready, but no capacity anywhere
+        ac.recover_gpu(g2)  # restores the only GPU with room
+        redone = {p.workload_id: p.gpu for p in ac.drain_dispatched()}
+        assert redone == {2: g2}
+        assert ac.stats()["recovered_fraction"] == 1.0
+
+    def test_readmission_does_not_double_count_acceptance(self):
+        ac = AdmissionController(2, policy="mfi", queue_capacity=4)
+        ac.submit(1, "1g.10gb", patience=8)
+        accepted_before = ac.accepted
+        ac.fail_gpu(0)
+        ac.tick()
+        ac.tick()
+        assert [p.workload_id for p in ac.drain_dispatched()] == [1]
+        assert ac.accepted == accepted_before
+
+    def test_zero_retry_budget_is_final_loss(self):
+        ac = AdmissionController(1, policy="mfi", max_retries=0)
+        ac.submit(1, "1g.10gb")
+        ac.fail_gpu(0)
+        assert ac.queue_depth == 0
+        assert ac.drain_expired() == [1]
+        st = ac.stats()
+        assert st["evict_lost"] == 1
+        assert st["recovered_fraction"] == 0.0
+
+    def test_full_queue_eviction_is_final_loss(self):
+        ac = AdmissionController(1, policy="mfi", queue_capacity=0)
+        ac.submit(1, "1g.10gb")
+        ac.fail_gpu(0)
+        assert ac.drain_expired() == [1]
+        assert ac.stats()["evict_lost"] == 1
+
+    def test_retry_budget_exhausts_after_max_retries(self):
+        """With nothing freeing capacity, an evicted workload re-arms
+        through its budget and then drops."""
+        ac = AdmissionController(1, policy="mfi", queue_capacity=4,
+                                 max_retries=2)
+        ac.submit(1, "7g.80gb")
+        ac.fail_gpu(0)  # GPU stays down -> no readmission possible
+        for _ in range(64):
+            ac.tick()
+            if not ac.queue_depth:
+                break
+        assert ac.queue_depth == 0
+        assert ac.drain_expired() == [1]
+        assert ac.stats()["evict_lost"] == 1
+
+    def test_goodput_counts_completions_over_terminal_outcomes(self):
+        ac = AdmissionController(2, policy="mfi", max_retries=0)
+        ac.submit(1, "1g.10gb")
+        ac.submit(2, "1g.10gb")
+        ac.release(1)
+        ac.fail_gpu(ac.placements[2].gpu)
+        ac.drain_expired()
+        assert ac.stats()["goodput"] == 0.5  # one completed, one lost
+
+
+# ---------------------------------------------------------------------------
+# Crash-safe checkpoints
+# ---------------------------------------------------------------------------
+
+
+class TestCheckpointIntegrity:
+    def _tree(self):
+        return {"a": np.arange(12, dtype=np.int32).reshape(3, 4),
+                "b": np.linspace(0.0, 1.0, 5, dtype=np.float32)}
+
+    def test_sidecar_records_payload_digest(self, tmp_path):
+        tree = self._tree()
+        ckpt.save_checkpoint(tmp_path / "c", tree, step=3)
+        side = json.loads((tmp_path / "c.json").read_text())
+        digest = hashlib.sha256((tmp_path / "c.npz").read_bytes()).hexdigest()
+        assert side["sha256"] == digest
+        restored, step = ckpt.load_checkpoint(tmp_path / "c", tree)
+        assert step == 3
+        np.testing.assert_array_equal(restored["a"], tree["a"])
+
+    def test_corrupted_payload_is_rejected(self, tmp_path):
+        tree = self._tree()
+        ckpt.save_checkpoint(tmp_path / "c", tree, step=1)
+        payload = tmp_path / "c.npz"
+        raw = bytearray(payload.read_bytes())
+        raw[len(raw) // 2] ^= 0xFF
+        payload.write_bytes(bytes(raw))
+        with pytest.raises(ValueError, match="mismatch"):
+            ckpt.load_checkpoint(tmp_path / "c", tree)
+
+    def test_missing_sidecar_means_interrupted_save(self, tmp_path):
+        tree = self._tree()
+        ckpt.save_checkpoint(tmp_path / "c", tree, step=1)
+        (tmp_path / "c.json").unlink()
+        with pytest.raises(FileNotFoundError, match="sidecar"):
+            ckpt.load_checkpoint(tmp_path / "c", tree)
+
+    def test_no_partial_payload_left_behind(self, tmp_path):
+        """The payload is staged to a temp name and renamed into place, so
+        the directory only ever holds complete payloads."""
+        ckpt.save_checkpoint(tmp_path / "c", self._tree(), step=1)
+        names = sorted(p.name for p in tmp_path.iterdir())
+        assert names == ["c.json", "c.npz"]
+
+
+class TestCrashResume:
+    @pytest.mark.slow
+    def test_sigkilled_run_resumes_from_last_checkpoint(self, tmp_path):
+        """SIGKILL the chunked scan mid-stream (right after its second
+        checkpoint lands); resuming from the surviving checkpoint must
+        reproduce the pinned queued golden bit-for-bit."""
+        from test_engine_core import GOLDEN_QUEUED_TRACE_HASHES, _sim_queued
+        from test_chunked_stream import _queued_hash
+
+        path = tmp_path / "carry"
+        code = textwrap.dedent(
+            f"""
+            import os, signal, sys
+            sys.path.insert(0, "src")
+            from repro.sim import SimConfig, batched
+
+            cfg = SimConfig(num_gpus=5, offered_load=1.2, seed=7)
+            events, meta, rr, rc = batched.presample_arrivals(
+                cfg, runs=3, queued=True
+            )
+            orig = batched.save_stream_checkpoint
+            calls = [0]
+            def killing_save(path, state, events_done, metadata=None):
+                orig(path, state, events_done, metadata=metadata)
+                calls[0] += 1
+                if calls[0] == 2:
+                    os.kill(os.getpid(), signal.SIGKILL)
+            batched.save_stream_checkpoint = killing_save
+            batched.simulate_chunked(
+                events, chunk_size=13, ring_rows=rr, ring_cols=rc,
+                policy="mfi", metric=cfg.metric, num_gpus=cfg.num_gpus,
+                use_kernel=False, protocol="steady-queued",
+                wait_slots=cfg.wait_capacity,
+                wait_patience=cfg.wait_patience,
+                checkpoint_path={str(path)!r}, checkpoint_every=1,
+            )
+            print("UNREACHABLE")
+            """
+        )
+        repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        r = subprocess.run(
+            [sys.executable, "-c", code], capture_output=True, text=True,
+            timeout=600, cwd=repo,
+        )
+        assert r.returncode == -9, (r.returncode, r.stderr[-2000:])
+        assert "UNREACHABLE" not in r.stdout
+
+        cfg = SimConfig(num_gpus=5, offered_load=1.2, seed=7)
+        events, meta, rr, rc = batched.presample_arrivals(
+            cfg, runs=3, queued=True
+        )
+        statics = dict(
+            policy="mfi", metric=cfg.metric, num_gpus=cfg.num_gpus,
+            use_kernel=False, protocol="steady-queued",
+            wait_slots=cfg.wait_capacity, wait_patience=cfg.wait_patience,
+        )
+        template = batched.init_carry(3, ring_rows=rr, ring_cols=rc, **statics)
+        state, done = batched.load_stream_checkpoint(path, template)
+        assert done == 26  # second checkpoint: two chunks of 13 events
+        _, tail = batched.simulate_chunked(
+            events, chunk_size=13, ring_rows=rr, ring_cols=rc,
+            carry=state, start=done, **statics,
+        )
+        _, _, mono, _ = _sim_queued("mfi", cfg)
+        head = jax.tree.map(
+            lambda x: None if x is None else np.asarray(x)[:done], mono,
+            is_leaf=lambda x: x is None,
+        )
+        spliced = batched._concat_traces(
+            [head, jax.device_get(tail)], np.concatenate
+        )
+        assert _queued_hash(spliced) == GOLDEN_QUEUED_TRACE_HASHES["homog"]
+
+    def test_resume_rejects_corrupted_checkpoint(self, tmp_path):
+        cfg = SimConfig(num_gpus=3, offered_load=1.0, seed=1)
+        events, meta, rr, rc = batched.presample_arrivals(cfg, runs=2)
+        statics = dict(
+            policy="mfi", metric=cfg.metric, num_gpus=cfg.num_gpus,
+            use_kernel=False, protocol="steady",
+        )
+        state = batched.init_carry(2, ring_rows=rr, ring_cols=rc, **statics)
+        batched.save_stream_checkpoint(tmp_path / "c", state, 0)
+        payload = tmp_path / "c.npz"
+        raw = bytearray(payload.read_bytes())
+        raw[len(raw) // 2] ^= 0xFF
+        payload.write_bytes(bytes(raw))
+        template = batched.init_carry(2, ring_rows=rr, ring_cols=rc, **statics)
+        with pytest.raises(ValueError, match="mismatch"):
+            batched.load_stream_checkpoint(tmp_path / "c", template)
